@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT a TPU number —
+the derived column is the kernel's ideal v5e time from its byte/flop
+counts; the CPU µs column only tracks relative regressions)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.embedding_bag import embedding_bag_kernel, embedding_bag_ref
+from repro.kernels.jacobi import jacobi_step, jacobi_step_ref
+from repro.kernels.spmv_ell import spmv_ell, spmv_ell_ref
+from repro.launch.mesh import HBM_BW
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6  # µs
+
+
+def bench_kernels(n=8192, width=8, d=32, hot=4):
+    rng = np.random.default_rng(0)
+    col = jnp.asarray(rng.integers(0, n, (n, width)).astype(np.int32))
+    val = jnp.asarray(np.abs(rng.normal(size=(n, width))).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    deg = jnp.sum(val, axis=1) + 0.1
+
+    table = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n, (n, hot)).astype(np.int32))
+
+    rows = []
+    spmv_bytes = n * width * 8 + n * 8
+    rows.append(dict(name="spmv_ell_pallas", us=_time(spmv_ell, col, val, x),
+                     ideal_v5e_us=spmv_bytes / HBM_BW * 1e6))
+    rows.append(dict(name="spmv_ell_ref_jnp", us=_time(spmv_ell_ref, col, val, x),
+                     ideal_v5e_us=spmv_bytes / HBM_BW * 1e6))
+    jac_bytes = spmv_bytes + 3 * n * 4
+    rows.append(dict(name="jacobi_fused_pallas",
+                     us=_time(jacobi_step, col, val, x, b, deg),
+                     ideal_v5e_us=jac_bytes / HBM_BW * 1e6))
+    rows.append(dict(name="jacobi_unfused_ref",
+                     us=_time(jacobi_step_ref, col, val, x, b, deg),
+                     ideal_v5e_us=(spmv_bytes + 5 * n * 4) / HBM_BW * 1e6))
+    bag_bytes = n * hot * (4 + d * 4) + n * d * 4
+    rows.append(dict(name="embedding_bag_pallas",
+                     us=_time(embedding_bag_kernel, table, idx),
+                     ideal_v5e_us=bag_bytes / HBM_BW * 1e6))
+    rows.append(dict(name="embedding_bag_ref",
+                     us=_time(embedding_bag_ref, table, idx),
+                     ideal_v5e_us=bag_bytes / HBM_BW * 1e6))
+    return rows

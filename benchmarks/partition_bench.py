@@ -1,0 +1,26 @@
+"""Paper §2.2 experiment: random vertex ordering vs natural ordering —
+block balance of the 2D edge partition (on TPU, balance == padded-capacity
+efficiency == memory/FLOP overhead)."""
+
+from __future__ import annotations
+
+from repro.dist.partition import balance_report, partition_edges_2d
+from repro.graphs.datasets import paper_graph
+
+
+def bench_partition(graphs=("as-22july06", "hollywood-2009"),
+                    scale: float = 0.25, grid: int = 8):
+    rows = []
+    for name in graphs:
+        n, r, c, v = paper_graph(name, scale=scale, seed=0)
+        for ordering in (False, True):
+            part = partition_edges_2d(n, r, c, v, grid, grid,
+                                      random_ordering=ordering)
+            rep = balance_report(part)
+            rows.append(dict(graph=name, n=n, nnz=len(r),
+                             random_ordering=ordering,
+                             imbalance=round(rep["imbalance"], 3),
+                             fill_fraction=round(rep["fill_fraction"], 3),
+                             max_block_nnz=rep["max_nnz"],
+                             min_block_nnz=rep["min_nnz"]))
+    return rows

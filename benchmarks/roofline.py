@@ -1,0 +1,59 @@
+"""Render the §Roofline table from experiments/dryrun/*.json (deliverable g).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh 16x16|2x16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(mesh=None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        cells.append(rec)
+    return cells
+
+
+def fmt_row(rec):
+    if rec["status"] == "skip":
+        return (f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                f"SKIP: {rec['reason'][:58]} ||||||||")
+    r = rec["roofline"]
+    m = rec["memory"]
+    return ("| {arch} | {shape} | {mesh} | {c:.2e} | {me:.2e} | {co:.2e} | "
+            "{bn} | {mf:.2e} | {ur:.3f} | {rf:.4f} | {tpd:.1f} |").format(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        c=r["compute_s"], me=r["memory_s"], co=r["collective_s"],
+        bn=r["bottleneck"], mf=r["model_flops"],
+        ur=r["useful_flops_ratio"], rf=r["roofline_fraction"],
+        tpd=(m["argument_bytes"] + m["temp_bytes"]) / 2**30)
+
+
+HEADER = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "bottleneck | model_flops | useful_ratio | roofline_frac | "
+          "GiB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    print(HEADER)
+    for rec in load_cells(args.mesh):
+        print(fmt_row(rec))
+
+
+if __name__ == "__main__":
+    main()

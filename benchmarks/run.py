@@ -1,0 +1,117 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only wda,scaling,...]
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human-readable tables)
+and writes JSON to experiments/bench/. --full uses larger graph scales.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def _emit_csv(name, us, derived):
+    print(f"{name},{us},{derived}")
+
+
+def _save(name, obj):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+    scale = 0.5 if args.full else 0.12
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("wda"):
+        from benchmarks.wda_table import bench_wda
+
+        t0 = time.time()
+        rows = bench_wda(scale=scale)
+        _save("fig3_wda", rows)
+        print("\n== Fig 3: Work per Digit of Accuracy "
+              "(serial-ref | OURS | jacobi-PCG, paper's values in []) ==")
+        for r in rows:
+            print(f"  {r['graph']:>18s} n={r['n']:>7d}: "
+                  f"{r['wda_serial_ref']:7.2f} | {r['wda_ours']:7.2f} | "
+                  f"{r['wda_jacobi_pcg']:8.2f}   "
+                  f"[{r['paper_lamg']:.2f} | {r['paper_ours']:.2f} | "
+                  f"{r['paper_pcg']:.2f}]")
+            _emit_csv(f"wda_{r['graph']}", r["solve_s"] * 1e6, r["wda_ours"])
+        print(f"(wda bench: {time.time()-t0:.0f}s)")
+
+    if want("scaling"):
+        from benchmarks.scaling import bench_scaling
+
+        out = bench_scaling(scale=scale)
+        _save("fig4_6_scaling", out)
+        print("\n== Fig 4-6: strong scaling (modeled v5e, measured hierarchy) ==")
+        print(f"  measured CPU: setup={out['measured_cpu_setup_s']:.1f}s "
+              f"solve={out['measured_cpu_solve_s']:.1f}s "
+              f"(setup/solve={out['setup_over_solve']:.1f}x, "
+              f"paper reports 0.8x-8x)")
+        for r in out["rows"]:
+            print(f"  P={r['chips']:>5d}: solve={r['modeled_solve_s']*1e3:8.3f}ms "
+                  f"speedup={r['speedup']:7.1f}x bottleneck={r['bottleneck']}")
+            _emit_csv(f"scaling_P{r['chips']}", r["modeled_solve_s"] * 1e6,
+                      r["speedup"])
+
+    if want("partition"):
+        from benchmarks.partition_bench import bench_partition
+
+        rows = bench_partition(scale=scale)
+        _save("sec2_2_partition", rows)
+        print("\n== §2.2: random ordering vs natural (2D block balance) ==")
+        for r in rows:
+            print(f"  {r['graph']:>18s} random={str(r['random_ordering']):>5s}: "
+                  f"imbalance={r['imbalance']:6.3f} "
+                  f"fill={r['fill_fraction']:6.3f}")
+            _emit_csv(f"partition_{r['graph']}_{r['random_ordering']}",
+                      0, r["imbalance"])
+
+    if want("strength"):
+        from benchmarks.strength_bench import bench_strength
+
+        out = bench_strength(scale=scale)
+        _save("sec2_4_strength", out)
+        print("\n== §2.4: algebraic distance vs affinity SoC (WDA) ==")
+        for r in out["rows"]:
+            print(f"  {r['graph']:>18s}: algebraic={r['wda_algebraic']:7.2f} "
+                  f"affinity={r['wda_affinity']:7.2f} "
+                  f"{'<- algebraic' if r['algebraic_wins'] else '<- affinity'}")
+            _emit_csv(f"strength_{r['graph']}", 0, r["wda_algebraic"])
+        print(f"  algebraic wins {out['algebraic_win_fraction']:.0%} "
+              f"(paper: 'a majority of the time')")
+
+    if want("kernels"):
+        from benchmarks.kernels_bench import bench_kernels
+
+        rows = bench_kernels()
+        _save("kernels", rows)
+        print("\n== kernels (CPU interpret µs | ideal v5e µs from bytes) ==")
+        for r in rows:
+            print(f"  {r['name']:>22s}: {r['us']:10.0f}µs "
+                  f"(v5e ideal {r['ideal_v5e_us']:8.2f}µs)")
+            _emit_csv(r["name"], round(r["us"]), round(r["ideal_v5e_us"], 2))
+
+    print("\nbenchmarks complete.")
+
+
+if __name__ == "__main__":
+    main()

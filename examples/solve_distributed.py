@@ -1,0 +1,34 @@
+"""Distributed solve on a simulated multi-device mesh (2×2 + 2 pods here;
+swap in make_production_mesh() on a real pod slice).
+
+    PYTHONPATH=src python examples/solve_distributed.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.hierarchy import SetupConfig  # noqa: E402
+from repro.dist.solver import DistLaplacianSolver  # noqa: E402
+from repro.graphs.generators import (barabasi_albert,  # noqa: E402
+                                     ensure_connected)
+
+n, rows, cols, vals = ensure_connected(
+    *barabasi_albert(5000, m=4, seed=1, weighted=True))
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+solver = DistLaplacianSolver.setup(n, rows, cols, vals, mesh,
+                                   SetupConfig(coarsest_size=64),
+                                   dist_nnz_threshold=1000)
+print(f"distributed levels: {[m.kind for m in solver.level_meta]}, "
+      f"replicated tail: {solver.coarse_h.n_levels} levels")
+
+rng = np.random.default_rng(0)
+b = rng.normal(size=n).astype(np.float32)
+b -= b.mean()
+x, norms = solver.solve(b, n_iters=25)
+print(f"residual {norms[0]:.3e} -> {norms[-1]:.3e} in 25 iterations "
+      f"on {mesh.devices.size} devices (pods×rows×cols = {mesh.shape})")

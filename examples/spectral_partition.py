@@ -1,0 +1,52 @@
+"""Spectral graph partitioning via the Laplacian solver (paper §1: 'graph
+drawing, spectral clustering, network flow and graph partitioning all can
+be expressed as Laplacian matrices').
+
+Computes the Fiedler vector (second-smallest eigenvector of L) by inverse
+iteration — each iteration is one multigrid-preconditioned solve — and
+bisects a two-cluster graph with it.
+
+    PYTHONPATH=src python examples/spectral_partition.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import LaplacianSolver, SetupConfig
+from repro.graphs.generators import ensure_connected
+
+# two dense clusters + a few bridge edges
+rng = np.random.default_rng(0)
+k = 400
+rows, cols = [], []
+for off in (0, k):
+    u = rng.integers(0, k, 6 * k) + off
+    v = rng.integers(0, k, 6 * k) + off
+    rows.extend(u)
+    cols.extend(v)
+for _ in range(5):
+    rows.append(rng.integers(0, k))
+    cols.append(k + rng.integers(0, k))
+rows, cols = np.asarray(rows), np.asarray(cols)
+keep = rows != cols
+rows, cols = rows[keep], cols[keep]
+r2 = np.concatenate([rows, cols]).astype(np.int32)
+c2 = np.concatenate([cols, rows]).astype(np.int32)
+n, r2, c2, v2 = ensure_connected(2 * k, r2, c2, np.ones(len(r2), np.float32))
+
+solver = LaplacianSolver.setup(n, r2, c2, v2, SetupConfig(coarsest_size=64))
+
+# inverse iteration on the mean-free subspace -> Fiedler vector
+x = rng.normal(size=n).astype(np.float32)
+x -= x.mean()
+for it in range(8):
+    x, info = solver.solve(x, tol=1e-6, maxiter=100)
+    x = np.array(x)          # copy: jax outputs are read-only views
+    x -= x.mean()
+    x /= np.linalg.norm(x)
+
+side = x > 0
+acc = max((side[:k].mean() + (~side[k:]).mean()) / 2,
+          ((~side[:k]).mean() + side[k:].mean()) / 2)
+print(f"Fiedler bisection recovers planted clusters with accuracy {acc:.3f}")
+assert acc > 0.95, "spectral partition failed"

@@ -1,0 +1,99 @@
+"""Fault-tolerant checkpointing (DESIGN.md §7).
+
+Layout: ``<dir>/step_<n>/`` holding one ``.npy`` per pytree leaf (keyed by
+its flattened key path) plus ``manifest.json`` (tree structure, shapes,
+dtypes, step, wall time). Writes go to ``step_<n>.tmp`` and are atomically
+renamed, so a job killed mid-save can never leave a half-readable step —
+``latest_step`` only sees completed renames.
+
+Restore is *elastic*: leaves are saved as logical (global) arrays, so a
+checkpoint written on one mesh restores onto any other mesh/sharding (or a
+different device count entirely) — the launcher passes the target shardings
+and leaves are ``device_put`` directly to them.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: dict | None = None):
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = dict(step=step, time=time.time(), extra=extra or {},
+                    leaves={})
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace("/", "__") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = dict(file=fname, shape=list(arr.shape),
+                                       dtype=str(arr.dtype))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)   # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, tree_like,
+                       shardings=None):
+    """Restore into the structure of ``tree_like``; optional shardings pytree
+    places each leaf directly onto the (possibly different) target mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_like = _flatten(tree_like)
+    flat_sh = _flatten(shardings) if shardings is not None else {}
+    restored = {}
+    for key in flat_like:
+        info = manifest["leaves"][key]
+        arr = np.load(os.path.join(path, info["file"]))
+        if key in flat_sh:
+            restored[key] = jax.device_put(arr, flat_sh[key])
+        else:
+            restored[key] = jax.numpy.asarray(arr)
+
+    # rebuild the pytree in tree_like's structure
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(tree_like)
+    keys_in_order = ["/".join(_path_str(p) for p in path)
+                     for path, _ in paths_and_leaves[0]]
+    leaves = [restored[k] for k in keys_in_order]
+    return jax.tree_util.tree_unflatten(paths_and_leaves[1], leaves), manifest

@@ -1,0 +1,4 @@
+from repro.configs.registry import (ArchSpec, DryrunCase, SkipCell, get_arch,
+                                    list_archs)
+
+__all__ = ["ArchSpec", "DryrunCase", "SkipCell", "get_arch", "list_archs"]

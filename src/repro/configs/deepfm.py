@@ -1,0 +1,146 @@
+"""deepfm [recsys]: n_sparse=39 embed_dim=10 mlp=400-400-400 interaction=fm
+[arXiv:1703.04247; assigned pool].
+
+Shapes: train_batch (B=65536, train step), serve_p99 (B=512, online
+inference), serve_bulk (B=262144, offline scoring), retrieval_cand (B=1
+against 10⁶ candidates — FM-decomposed batched dot, no loop).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, DryrunCase, register
+from repro.models.recsys.deepfm import (DeepFMConfig, deepfm_forward,
+                                        deepfm_loss, default_vocabs,
+                                        fm_retrieval_scores, init_deepfm)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+FULL = DeepFMConfig(n_fields=39, embed_dim=10, mlp_sizes=(400, 400, 400),
+                    vocab_per_field=default_vocabs(39), multi_hot=2)
+SMOKE = DeepFMConfig(n_fields=6, embed_dim=4, mlp_sizes=(16, 16),
+                     vocab_per_field=(50, 20, 20, 10, 10, 8), multi_hot=2)
+
+SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+SHAPE_DIMS = dict(
+    train_batch=dict(batch=65536, kind="train"),
+    serve_p99=dict(batch=512, kind="serve"),
+    serve_bulk=dict(batch=262144, kind="serve"),
+    retrieval_cand=dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dp(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_dryrun_case(shape_name, mesh, cfg: DeepFMConfig = FULL):
+    dims = SHAPE_DIMS[shape_name]
+    params_sds = jax.eval_shape(partial(init_deepfm, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    rep = NamedSharding(mesh, P())
+    table_sh = NamedSharding(mesh, P("model", None))   # row-sharded tables
+    params_sh = dict(table=table_sh, first_order=table_sh,
+                     mlp=jax.tree.map(lambda _: rep, params_sds["mlp"]),
+                     bias=rep)
+    dp = _dp(mesh)
+    B = dims["batch"]
+
+    if dims["kind"] == "train":
+        batch = (_sds((B, cfg.n_fields, cfg.multi_hot), jnp.int32),
+                 _sds((B,), jnp.float32))
+        batch_sh = (NamedSharding(mesh, P(dp, None, None)),
+                    NamedSharding(mesh, P(dp)))
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        opt_sh = dict(mu=params_sh, nu=params_sh, step=rep)
+        opt_cfg = AdamWConfig()
+
+        def step(params, opt_state, indices, labels):
+            loss, grads = jax.value_and_grad(
+                lambda p: deepfm_loss(cfg, p, indices, labels))(params)
+            params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                      opt_state)
+            return params, opt_state, dict(loss=loss, **metrics)
+
+        return DryrunCase(
+            name=f"deepfm/{shape_name}", fn=step,
+            args=(params_sds, opt_sds) + batch,
+            in_shardings=(params_sh, opt_sh) + batch_sh,
+            out_shardings=(params_sh, opt_sh,
+                           jax.tree.map(lambda _: rep,
+                                        dict(loss=0, grad_norm=0, lr=0))),
+            model_flops=_train_flops(cfg, B),
+            comment="train_step: embedding-bag + FM + deep MLP + AdamW")
+
+    if dims["kind"] == "serve":
+        batch = (_sds((B, cfg.n_fields, cfg.multi_hot), jnp.int32),)
+        batch_sh = (NamedSharding(mesh, P(dp, None, None)),)
+        fn = lambda params, idx: deepfm_forward(cfg, params, idx)
+        return DryrunCase(
+            name=f"deepfm/{shape_name}", fn=fn,
+            args=(params_sds,) + batch,
+            in_shardings=(params_sh,) + batch_sh,
+            out_shardings=NamedSharding(mesh, P(dp)),
+            model_flops=_train_flops(cfg, B) / 3.0,
+            comment="serve_step: forward scoring")
+
+    n_cand = dims["n_candidates"]
+    # 10⁶ candidates shard over 'model' (16 | 10⁶); the full axis product
+    # (512) does not divide it
+    batch = (_sds((1, cfg.n_fields, cfg.multi_hot), jnp.int32),
+             _sds((n_cand,), jnp.int32))
+    batch_sh = (rep, NamedSharding(mesh, P("model")))
+    fn = lambda params, u, cand: fm_retrieval_scores(cfg, params, u, cand)
+    return DryrunCase(
+        name=f"deepfm/{shape_name}", fn=fn,
+        args=(params_sds,) + batch,
+        in_shardings=(params_sh,) + batch_sh,
+        out_shardings=NamedSharding(mesh, P("model")),
+        model_flops=2.0 * n_cand * cfg.embed_dim,
+        comment="retrieval: FM-decomposed candidate scoring (1M batched dot)")
+
+
+def _train_flops(cfg: DeepFMConfig, B):
+    d, F = cfg.embed_dim, cfg.n_fields
+    mlp = 0
+    sizes = [F * d, *cfg.mlp_sizes, 1]
+    for a, b in zip(sizes[:-1], sizes[1:]):
+        mlp += 2 * a * b
+    fm = 4 * F * d
+    gather = 2 * F * cfg.multi_hot * d
+    return 3.0 * B * (mlp + fm + gather)
+
+
+def make_smoke_case():
+    def run():
+        import numpy as np
+        rng = np.random.default_rng(0)
+        cfg = SMOKE
+        params = init_deepfm(jax.random.PRNGKey(0), cfg)
+        B = 8
+        sizes = np.asarray(cfg.vocab_per_field)
+        idx = (rng.integers(0, 1 << 30, (B, cfg.n_fields, cfg.multi_hot))
+               % sizes[None, :, None]).astype(np.int32)
+        labels = rng.integers(0, 2, B).astype(np.float32)
+        loss, grads = jax.value_and_grad(
+            lambda p: deepfm_loss(cfg, p, jnp.asarray(idx),
+                                  jnp.asarray(labels)))(params)
+        cand = jnp.asarray(rng.integers(0, sizes[0], 100), jnp.int32)
+        scores = fm_retrieval_scores(cfg, params, jnp.asarray(idx[:1]), cand)
+        return dict(loss=loss, scores=scores, grads=grads)
+    return run
+
+
+register(ArchSpec(
+    arch_id="deepfm", family="recsys", shapes=SHAPES,
+    make_dryrun_case=make_dryrun_case,
+    make_smoke_case=make_smoke_case,
+    describe=__doc__))

@@ -1,0 +1,195 @@
+"""Shared GNN-family machinery: the four assigned shapes, train-step
+builders, and per-shape sharding.
+
+Distribution note (DESIGN.md §6): message passing is the paper's semiring
+SpMV. Edge arrays (the O(E) objects) shard over every mesh axis; node state
+(O(n)) is replicated for scalar-payload models (MGN/PNA/EGNN) — the same
+split the solver uses for its transfer operators. EquiformerV2's irreps
+tensors are O(n·(L+1)²·C), too big to replicate, so N shards over the DP
+axes and channels over 'model', with edge-chunked streaming (FlashAttention-
+style) bounding the per-edge working set.
+
+Shapes (assigned): full_graph_sm (2708/10556/1433 — Cora-scale),
+minibatch_lg (232965 nodes/114.6M edges, batch 1024 fanout 15-10 — the
+dry-run lowers the *sampled padded subgraph*, the sampler itself is
+``repro.data.synthetic.neighbor_sampled_batch``), ogb_products
+(2449029/61859140/100, full-batch-large), molecule (30/64 × batch 128).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, DryrunCase, SkipCell, register
+from repro.models.gnn.common import GraphBatch
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+
+# minibatch_lg: padded sampled-subgraph sizes for batch=1024, fanout (15,10)
+_MB_NODES = 1024 * (1 + 15 + 150)
+_MB_EDGES = 1024 * (15 + 150)
+
+SHAPE_DIMS = dict(
+    full_graph_sm=dict(n_nodes=2708, n_edges=10556, d_feat=1433,
+                       task="node_class", n_classes=7),
+    minibatch_lg=dict(n_nodes=_MB_NODES, n_edges=_MB_EDGES, d_feat=602,
+                      task="node_class", n_classes=41,
+                      note="padded 2-hop sample of the 232965-node graph"),
+    ogb_products=dict(n_nodes=2449029, n_edges=61859140, d_feat=100,
+                      task="node_class", n_classes=47),
+    molecule=dict(n_nodes=30 * 128, n_edges=64 * 2 * 128, d_feat=16,
+                  task="graph_reg", n_graphs=128),
+)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dp(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def gnn_train_step(forward_loss, opt_cfg: AdamWConfig):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: forward_loss(p, batch))(params)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        return params, opt_state, dict(loss=loss, **metrics)
+    return step
+
+
+def node_class_loss(logits, labels, n_real):
+    """Cross entropy over real (non-padding) nodes."""
+    n = logits.shape[0]
+    mask = jnp.arange(n) < n_real
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum(jnp.where(mask, logz - gold, 0)) / n_real
+
+
+def graph_reg_loss(node_out, graph_id, targets, n_graphs):
+    pooled = jax.ops.segment_sum(node_out[:, 0], graph_id,
+                                 num_segments=n_graphs)
+    return jnp.mean(jnp.square(pooled - targets))
+
+
+def make_gnn_dryrun_case(arch_id, shape_name, mesh, make_model, flops_fn,
+                         needs_pos=False, needs_edge_feat=False,
+                         d_edge_in=8, big_shape_overrides=None):
+    dims = SHAPE_DIMS[shape_name]
+    N, E, DF = dims["n_nodes"], dims["n_edges"], dims["d_feat"]
+    # edge arrays shard over every mesh axis: pad E to the device count
+    # (sentinel edges senders==N are inert; the data pipeline pads the same
+    # way). 512 covers both production meshes.
+    E = -(-E // 512) * 512
+    cfg, init_fn, fwd = make_model(shape_name, DF)
+
+    params_sds = jax.eval_shape(partial(init_fn, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    rep = NamedSharding(mesh, P())
+    edge_sh = NamedSharding(mesh, P(_all_axes(mesh)))
+    params_sh = jax.tree.map(lambda _: rep, params_sds)
+
+    batch = dict(senders=_sds((E,), jnp.int32),
+                 receivers=_sds((E,), jnp.int32),
+                 node_feat=_sds((N, DF), jnp.float32))
+    batch_sh = dict(senders=edge_sh, receivers=edge_sh,
+                    node_feat=rep)
+    if needs_edge_feat:
+        batch["edge_feat"] = _sds((E, d_edge_in), jnp.float32)
+        batch_sh["edge_feat"] = NamedSharding(mesh, P(_all_axes(mesh), None))
+    if needs_pos:
+        batch["pos"] = _sds((N, 3), jnp.float32)
+        batch_sh["pos"] = rep
+
+    if dims["task"] == "node_class":
+        batch["labels"] = _sds((N,), jnp.int32)
+        batch_sh["labels"] = rep
+
+        def fwd_loss(params, b):
+            g = GraphBatch(senders=b["senders"], receivers=b["receivers"],
+                           node_feat=b["node_feat"],
+                           edge_feat=b.get("edge_feat"), pos=b.get("pos"))
+            out = fwd(cfg, params, g)
+            out = out[0] if isinstance(out, tuple) else out
+            return node_class_loss(out, b["labels"], N)
+    else:
+        batch["graph_id"] = _sds((N,), jnp.int32)
+        batch["targets"] = _sds((dims["n_graphs"],), jnp.float32)
+        batch_sh["graph_id"] = rep
+        batch_sh["targets"] = rep
+
+        def fwd_loss(params, b):
+            g = GraphBatch(senders=b["senders"], receivers=b["receivers"],
+                           node_feat=b["node_feat"],
+                           edge_feat=b.get("edge_feat"), pos=b.get("pos"))
+            out = fwd(cfg, params, g)
+            out = out[0] if isinstance(out, tuple) else out
+            return graph_reg_loss(out, b["graph_id"], b["targets"],
+                                  dims["n_graphs"])
+
+    opt_sds = jax.eval_shape(adamw_init, params_sds)
+    opt_sh = jax.tree.map(lambda _: rep, opt_sds)
+    step = gnn_train_step(fwd_loss, AdamWConfig())
+    return DryrunCase(
+        name=f"{arch_id}/{shape_name}", fn=step,
+        args=(params_sds, opt_sds, batch),
+        in_shardings=(params_sh, opt_sh, batch_sh),
+        out_shardings=(params_sh, opt_sh,
+                       jax.tree.map(lambda _: rep,
+                                    dict(loss=0, grad_norm=0, lr=0))),
+        model_flops=flops_fn(cfg, N, E),
+        comment=dims.get("note", ""))
+
+
+def make_gnn_smoke_case(make_model, needs_pos=False, needs_edge_feat=False,
+                        d_edge_in=8):
+    def run():
+        import numpy as np
+        rng = np.random.default_rng(0)
+        N, E, DF = 24, 60, 12
+        cfg, init_fn, fwd = make_model("smoke", DF)
+        params = init_fn(jax.random.PRNGKey(0), cfg=cfg)
+        g = GraphBatch(
+            senders=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+            receivers=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+            node_feat=jnp.asarray(rng.normal(size=(N, DF)), jnp.float32),
+            edge_feat=jnp.asarray(rng.normal(size=(E, d_edge_in)),
+                                  jnp.float32) if needs_edge_feat else None,
+            pos=jnp.asarray(rng.normal(size=(N, 3)), jnp.float32)
+            if needs_pos else None)
+        out = fwd(cfg, params, g)
+        out = out[0] if isinstance(out, tuple) else out
+
+        def loss_fn(p):
+            o = fwd(cfg, p, g)
+            o = o[0] if isinstance(o, tuple) else o
+            return jnp.mean(jnp.square(o))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return dict(loss=loss, out=out, grads=grads)
+    return run
+
+
+def register_gnn(arch_id, make_model, flops_fn, needs_pos=False,
+                 needs_edge_feat=False, describe=""):
+    return register(ArchSpec(
+        arch_id=arch_id, family="gnn", shapes=GNN_SHAPES,
+        make_dryrun_case=lambda shape, mesh: make_gnn_dryrun_case(
+            arch_id, shape, mesh, make_model, flops_fn, needs_pos,
+            needs_edge_feat),
+        make_smoke_case=lambda: make_gnn_smoke_case(
+            make_model, needs_pos, needs_edge_feat),
+        describe=describe))

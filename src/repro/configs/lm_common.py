@@ -1,0 +1,255 @@
+"""Shared LM-family machinery: shapes, train/prefill/decode dry-run cases.
+
+LM shapes (assigned): train_4k, prefill_32k, decode_32k, long_500k.
+All five assigned LM archs use full (quadratic) GQA attention, so
+``long_500k`` (524288-token decode) is a noted skip per the assignment
+("skip for pure full-attention archs"), recorded in DESIGN.md
+§Arch-applicability and surfaced by the dry-run as an explicit SkipCell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec, DryrunCase, SkipCell, register
+from repro.models.sharding import make_lm_plan, null_plan
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      forward, init_kv_cache, init_params,
+                                      lm_loss, param_specs)
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+SHAPE_DIMS = dict(
+    train_4k=dict(seq_len=4096, global_batch=256, kind="train"),
+    prefill_32k=dict(seq_len=32768, global_batch=32, kind="prefill"),
+    decode_32k=dict(seq_len=32768, global_batch=128, kind="decode"),
+    long_500k=dict(seq_len=524288, global_batch=1, kind="decode"),
+)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def lm_train_step(cfg: TransformerConfig, plan, opt_cfg: AdamWConfig,
+                  n_microbatches: int = 1, accum_dtype=jnp.float32,
+                  grad_shardings=None):
+    """Train step with gradient-accumulation microbatching: the activation
+    working set scales 1/n_mb while the gradient/optimizer math is identical
+    (sum of per-microbatch grads). The scan keeps the HLO O(1) in n_mb."""
+
+    def grad_fn(params, tokens):
+        return jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, tokens, plan))(params)
+
+    def step(params, opt_state, tokens):
+        if n_microbatches == 1:
+            loss, grads = grad_fn(params, tokens)
+        else:
+            # Python-unrolled accumulation: a lax.scan here puts the embed
+            # gather inside a while body, which trips XLA's SPMD gather
+            # partitioner (verifier failure post-partitioning). n_mb ≤ 8 so
+            # the unrolled HLO stays small (layer scans are shared bodies).
+            B = tokens.shape[0]
+            mb = tokens.reshape(n_microbatches, B // n_microbatches,
+                                tokens.shape[1])
+            loss = jnp.zeros(())
+            grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            if grad_shardings is not None:
+                grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                     grads, grad_shardings)
+            for i in range(n_microbatches):
+                # re-pin the DP sharding: a reshape+slice of tokens otherwise
+                # reaches the embed gather with unresolved sharding and the
+                # SPMD partitioner picks an invalid dynamic-slice strategy
+                li, gi = grad_fn(params, plan.shard(mb[i], "tokens"))
+                loss = loss + li
+                grads = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), grads, gi)
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        return params, opt_state, dict(loss=loss, **metrics)
+    return step
+
+
+def _zero_shard_spec(spec, shape, dp_axes, dp_size):
+    """ZeRO-style: optimizer state also shards its first free (None) dim over
+    the DP axes when divisible — moments of a 480B model cannot afford pure
+    TP sharding."""
+    from jax.sharding import PartitionSpec as P
+
+    if len(shape) < 3:
+        # embedding-style tables stay TP-sharded: putting the DP axes on a
+        # gather operand's row dim trips XLA's SPMD partitioner (verifier
+        # failure seen on gather+remat), and 2-D tables are small per-device
+        # anyway. ZeRO targets the stacked [L, ...] layer weights.
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for ax in (e if isinstance(e, tuple) else (e,)):
+            if ax:
+                used.add(ax)
+    if used & set(dp_axes):
+        return spec  # already DP-sharded (e.g. FSDP applied upstream)
+    # prefer the LAST divisible free dim: for [L, E, d, ff] weights this
+    # shards ff, keeping the d-contraction local per device so XLA emits
+    # (reduce-scattered) partial matmuls instead of hoisting a full weight
+    # all-gather out of the layer scan.
+    for i in range(len(entries) - 1, -1, -1):
+        e, dim = entries[i], shape[i]
+        if e is None and dim % dp_size == 0 and dim > 0:
+            entries[i] = dp_axes
+            return P(*entries)
+    return spec
+
+
+def _auto_microbatches(cfg, B, S, dp_size, budget_bytes=4e9):
+    tokens_dev = B * S / dp_size
+    resident = tokens_dev * cfg.d_model * 2 * cfg.n_layers
+    n = 1
+    while resident / n > budget_bytes and n < B:
+        n *= 2
+    while B % n != 0:
+        n //= 2
+    return max(n, 1)
+
+
+def make_lm_dryrun_case(cfg: TransformerConfig, shape_name: str, mesh,
+                        opt_cfg: AdamWConfig = AdamWConfig()):
+    dims = SHAPE_DIMS[shape_name]
+    if shape_name == "long_500k":
+        return SkipCell(
+            name=f"{cfg.name}/{shape_name}",
+            reason="full (quadratic) GQA attention: 524k-token decode needs "
+                   "sub-quadratic attention; assigned LM archs are all "
+                   "full-attention -> noted skip (DESIGN.md §6)")
+    plan = make_lm_plan(mesh)
+    psp = param_specs(cfg, plan)
+    params_sds = jax.eval_shape(partial(init_params, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    B, S = dims["global_batch"], dims["seq_len"]
+    dp_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp_size = 1
+    for ax in dp_axes:
+        dp_size *= mesh.shape[ax]
+
+    # FSDP: 480B-class weights cannot live TP-sharded only (954 GB / 16 =
+    # 60 GB per chip); stacked layer weights additionally shard their first
+    # free dim over the DP axes and XLA all-gathers them per layer.
+    tp = mesh.shape["model"]
+    fsdp = cfg.param_count() * 2 / tp > 4e9
+    if fsdp:
+        psp = jax.tree.map(
+            lambda s, sds: _zero_shard_spec(s, sds.shape, dp_axes, dp_size),
+            psp, params_sds)
+    params_sh = jax.tree.map(lambda s: _named(mesh, s), psp)
+
+    if dims["kind"] == "train":
+        tokens = _sds((B, S + 1), jnp.int32)
+        opt_sds = jax.eval_shape(partial(adamw_init, cfg=opt_cfg), params_sds)
+        # moments shard TP like params PLUS ZeRO over DP (first free dim)
+        mom_sh = jax.tree.map(
+            lambda s, sds: _named(mesh, _zero_shard_spec(
+                s, sds.shape, dp_axes, dp_size)),
+            psp, params_sds)
+
+        if opt_cfg.moments_dtype == "int8":
+            # int8 moments are dicts {q, scale}: q shards, scale replicates
+            mu_sh = jax.tree.map(
+                lambda sh: dict(q=sh, scale=_named(mesh, P())), mom_sh,
+                is_leaf=lambda x: not isinstance(x, dict))
+        else:
+            mu_sh = mom_sh
+        opt_sh = dict(mu=mu_sh, nu=mu_sh, step=_named(mesh, P()))
+        n_mb = _auto_microbatches(cfg, B, S, dp_size)
+        accum = jnp.bfloat16 if cfg.param_count() > 1e11 else jnp.float32
+        fn = lm_train_step(cfg, plan, opt_cfg, n_microbatches=n_mb,
+                           accum_dtype=accum,
+                           grad_shardings=params_sh if (fsdp or n_mb > 1)
+                           else None)
+        return DryrunCase(
+            name=f"{cfg.name}/{shape_name}", fn=fn,
+            args=(params_sds, opt_sds, tokens),
+            in_shardings=(params_sh, opt_sh, _named(mesh, plan.spec("tokens"))),
+            out_shardings=(params_sh, opt_sh,
+                           jax.tree.map(lambda _: _named(mesh, P()),
+                                        dict(loss=0, grad_norm=0, lr=0))),
+            model_flops=6.0 * cfg.active_param_count() * B * S,
+            comment=f"train_step: fwd+bwd+AdamW, {n_mb} microbatch(es), "
+                    f"moments={opt_cfg.moments_dtype}")
+
+    if dims["kind"] == "prefill":
+        tokens = _sds((B, S), jnp.int32)
+        fn = lambda params, toks: forward(cfg, params, toks, plan)
+        return DryrunCase(
+            name=f"{cfg.name}/{shape_name}", fn=fn,
+            args=(params_sds, tokens),
+            in_shardings=(params_sh, _named(mesh, plan.spec("tokens"))),
+            out_shardings=_named(mesh, plan.spec("logits")),
+            model_flops=2.0 * cfg.active_param_count() * B * S,
+            comment="serve_step: full prefill")
+
+    # decode: one new token against a seq_len KV cache. KV heads shard over
+    # 'model' when divisible (moonshot kv=16); otherwise the head_dim does
+    # (arctic kv=8 < tp=16, dh=128 divides).
+    tokens = _sds((B, 1), jnp.int32)
+    cache_sds = jax.eval_shape(
+        partial(init_kv_cache, cfg, B, dims["seq_len"]))
+    tp = mesh.shape["model"]
+    if cfg.n_kv_heads % tp == 0:
+        kv_spec = P(None, dp_axes, None, "model", None)
+    elif cfg.d_head % tp == 0:
+        kv_spec = P(None, dp_axes, None, None, "model")
+    else:
+        kv_spec = P(None, dp_axes, None, None, None)
+    kv_sh = _named(mesh, kv_spec)
+    fn = lambda params, toks, cache: decode_step(
+        cfg, params, toks, cache, dims["seq_len"] - 1, plan)
+    return DryrunCase(
+        name=f"{cfg.name}/{shape_name}", fn=fn,
+        args=(params_sds, tokens, cache_sds),
+        in_shardings=(params_sh, _named(mesh, plan.spec("tokens")),
+                      (kv_sh, kv_sh)),
+        out_shardings=(_named(mesh, plan.spec("logits")), (kv_sh, kv_sh)),
+        model_flops=2.0 * cfg.active_param_count() * B
+        + 2.0 * B * cfg.n_layers * dims["seq_len"]
+        * cfg.n_kv_heads * cfg.d_head * 2,
+        comment="serve_step: single-token decode w/ 32k KV cache")
+
+
+def make_lm_smoke_case(smoke_cfg: TransformerConfig):
+    def run():
+        params = init_params(jax.random.PRNGKey(0), smoke_cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  smoke_cfg.vocab)
+        step = lm_train_step(smoke_cfg, null_plan(), AdamWConfig())
+        params2, opt2, metrics = step(params, adamw_init(params), toks)
+        # also exercise serve path
+        cache = init_kv_cache(smoke_cfg, 2, 24)
+        logits, _ = decode_step(smoke_cfg, params, toks[:, :1], cache, 0)
+        return dict(loss=metrics["loss"], logits=logits)
+    return run
+
+
+def register_lm(arch_id: str, cfg: TransformerConfig,
+                smoke_cfg: TransformerConfig, describe: str = "",
+                opt_cfg: AdamWConfig = AdamWConfig()):
+    return register(ArchSpec(
+        arch_id=arch_id, family="lm", shapes=LM_SHAPES,
+        make_dryrun_case=lambda shape, mesh: make_lm_dryrun_case(
+            cfg, shape, mesh, opt_cfg),
+        make_smoke_case=lambda: make_lm_smoke_case(smoke_cfg),
+        describe=describe))

@@ -1,0 +1,77 @@
+"""Architecture registry: every assigned arch is a selectable config
+(``--arch <id>``) exposing the same interface to the launcher/dry-run:
+
+  spec.shapes                          the arch's own input-shape set
+  spec.dryrun_case(shape, mesh, ...)   -> DryrunCase (fn + arg specs +
+                                          shardings) for lower()/compile()
+  spec.smoke_case()                    reduced config + tiny inputs for the
+                                          per-arch CPU smoke test
+
+Skipped cells (e.g. long_500k on full-attention LMs) return a SkipCell with
+the reason — the dry-run reports them explicitly rather than silently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+_REGISTRY: dict = {}
+
+
+@dataclasses.dataclass
+class DryrunCase:
+    name: str
+    fn: Callable                 # jit-able
+    args: tuple                  # ShapeDtypeStructs (or concrete for smoke)
+    in_shardings: object
+    out_shardings: object
+    model_flops: float           # 6·N·D-style useful-FLOPs estimate
+    comment: str = ""
+
+
+@dataclasses.dataclass
+class SkipCell:
+    name: str
+    reason: str
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    arch_id: str
+    family: str                  # lm | gnn | recsys | solver
+    shapes: tuple
+    make_dryrun_case: Callable   # (shape_name, mesh) -> DryrunCase | SkipCell
+    make_smoke_case: Callable    # () -> (loss_value_fn,) runs tiny fwd/step
+    describe: str = ""
+
+
+def register(spec: ArchSpec):
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> list:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (arctic_480b, deepfm, egnn, equiformer_v2,
+                               laplacian_solver, meshgraphnet,
+                               moonshot_v1_16b_a3b, pna, qwen2_0p5b,
+                               qwen2p5_3b, starcoder2_3b)  # noqa: F401
+    _LOADED = True

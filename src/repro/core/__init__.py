@@ -1,0 +1,33 @@
+"""The paper's contribution: parallel unsmoothed-aggregation multigrid for
+graph Laplacians (Konolige & Brown 2017), as composable JAX modules."""
+
+from repro.core.graph import GraphLevel, graph_from_adjacency, hash32
+from repro.core.elimination import (EliminationLevel, select_eliminated,
+                                    build_elimination_level,
+                                    eliminate_low_degree)
+from repro.core.aggregation import (AggregationConfig, aggregate,
+                                    renumber_aggregates)
+from repro.core.coarsen import AggregationLevel, contract
+from repro.core.strength import (algebraic_distance_strength,
+                                 affinity_strength, STRENGTH_METRICS)
+from repro.core.smoothers import SmootherConfig, jacobi, chebyshev
+from repro.core.cycles import CycleConfig
+from repro.core.hierarchy import Hierarchy, SetupConfig, build_hierarchy, apply_cycle
+from repro.core.krylov import pcg, pcg_scanned, cg, jacobi_pcg
+from repro.core.solver import LaplacianSolver, LaplacianSolveInfo
+from repro.core.wda import wda, pcg_iteration_work, cycle_work_units
+
+__all__ = [
+    "GraphLevel", "graph_from_adjacency", "hash32",
+    "EliminationLevel", "select_eliminated", "build_elimination_level",
+    "eliminate_low_degree",
+    "AggregationConfig", "aggregate", "renumber_aggregates",
+    "AggregationLevel", "contract",
+    "algebraic_distance_strength", "affinity_strength", "STRENGTH_METRICS",
+    "SmootherConfig", "jacobi", "chebyshev",
+    "CycleConfig",
+    "Hierarchy", "SetupConfig", "build_hierarchy", "apply_cycle",
+    "pcg", "pcg_scanned", "cg", "jacobi_pcg",
+    "LaplacianSolver", "LaplacianSolveInfo",
+    "wda", "pcg_iteration_work", "cycle_work_units",
+]

@@ -1,0 +1,142 @@
+"""Parallel aggregation by voting (paper §2.4, Algorithm 2).
+
+Each round is one semiring SpMV over the adjacency:
+  ⊗ : edge (i→j) emits (state_j, strength_ij, j), dropping Decided neighbours
+  ⊕ : lexicographic max on (state, strength), tie-break min id
+followed by the paper's MPI_Allreduce — here a ``psum`` when run under
+``shard_map`` (the vote tally is a segment_sum, which *is* the local part of
+the allreduce).
+
+Deviation from the paper's pseudocode (noted in DESIGN.md): lines 20–27 of
+Alg 2 are applied only to Undecided vertices — taken literally a Seed
+adjacent to a stronger Seed would dissolve into it, which contradicts the
+state ordering Seed > Undecided > Decided and LAMG's semantics. Constants
+(10 rounds, seed threshold 8 votes) follow the paper; both are config knobs
+("in practice we didn't see any meaningful change").
+
+After the rounds, still-Undecided vertices become singleton aggregates, and
+aggregate ids are renumbered contiguously (the paper's "global reordering").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GraphLevel
+from repro.sparse.segment import segment_argmax_lex
+
+DECIDED = 0
+UNDECIDED = 1
+SEED = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class AggregationConfig:
+    n_rounds: int = 10
+    seed_votes: int = 8
+    # strength quantisation: strengths in (0,1] are packed into the
+    # lexicographic key as int32 levels to keep ⊕ a pure integer reduction.
+    strength_levels: int = 1 << 20
+
+
+def _pack_state_strength(state: jax.Array, strength_q: jax.Array,
+                         levels: int) -> jax.Array:
+    """(state, strength) -> one int32 key; state dominates."""
+    return state.astype(jnp.int32) * (levels + 2) + strength_q.astype(jnp.int32)
+
+
+def aggregation_round(level: GraphLevel, strength_q: jax.Array,
+                      state: jax.Array, votes: jax.Array,
+                      aggregates: jax.Array, cfg: AggregationConfig,
+                      vote_allreduce=None):
+    """One voting round (Alg 2 Aggregation-Step). All fixed-shape jnp.
+
+    ``vote_allreduce``: optional callable summing vote tallies across devices
+    (identity in single-device mode; ``psum`` under shard_map).
+    """
+    adj = level.adj
+    n = level.n
+
+    nbr_state = jnp.take(state, adj.col, mode="fill", fill_value=DECIDED)
+    # ⊗: Decided neighbours are filtered (they emit the ⊕ identity).
+    emit_ok = adj.valid & (nbr_state != DECIDED)
+    key = _pack_state_strength(nbr_state, strength_q, cfg.strength_levels)
+    best_key, _, best_id = segment_argmax_lex(
+        key, jnp.zeros_like(key), adj.col, adj.row, num_segments=n,
+        valid=emit_ok)
+
+    best_state = jnp.where(best_key >= 0, best_key // (cfg.strength_levels + 2),
+                           DECIDED)
+    has_best = best_id < jnp.iinfo(jnp.int32).max
+
+    undecided = state == UNDECIDED
+    join = undecided & has_best & (best_state == SEED)
+    vote = undecided & has_best & (best_state == UNDECIDED)
+
+    # Joining vertices adopt the seed's aggregate id (= the seed's own id).
+    aggregates = jnp.where(join, jnp.where(has_best, best_id, aggregates), aggregates)
+    state = jnp.where(join, DECIDED, state)
+
+    # Tally votes for Undecided best-neighbours; psum = paper's MPI_Allreduce.
+    tgt = jnp.where(vote, best_id, n)
+    local_votes = jax.ops.segment_sum(jnp.ones_like(tgt, jnp.int32), tgt,
+                                      num_segments=n)
+    if vote_allreduce is not None:
+        local_votes = vote_allreduce(local_votes)
+    votes = votes + local_votes
+
+    promote = (state == UNDECIDED) & (votes > cfg.seed_votes)
+    state = jnp.where(promote, SEED, state)
+    # A promoted seed anchors its own aggregate.
+    aggregates = jnp.where(promote, jnp.arange(n), aggregates)
+    return state, votes, aggregates
+
+
+def aggregate(level: GraphLevel, strength: jax.Array,
+              cfg: AggregationConfig = AggregationConfig(),
+              vote_allreduce=None):
+    """Run Alg 2. Returns (aggregates [n] int32 root-vertex ids, state)."""
+    n = level.n
+    state = jnp.full((n,), UNDECIDED, jnp.int32)
+    votes = jnp.zeros((n,), jnp.int32)
+    aggregates = jnp.arange(n, dtype=jnp.int32)
+    strength_q = jnp.clip((strength * cfg.strength_levels).astype(jnp.int32),
+                          0, cfg.strength_levels)
+
+    def body(carry, _):
+        state, votes, aggregates = carry
+        state, votes, aggregates = aggregation_round(
+            level, strength_q, state, votes, aggregates, cfg, vote_allreduce)
+        return (state, votes, aggregates), None
+
+    (state, votes, aggregates), _ = jax.lax.scan(
+        body, (state, votes, aggregates), None, length=cfg.n_rounds)
+
+    # Leftover Undecided vertices become their own (singleton) aggregates.
+    aggregates = jnp.where(state == UNDECIDED, jnp.arange(n), aggregates)
+    # Seeds always anchor themselves (a seed's id is its aggregate root).
+    aggregates = jnp.where(state == SEED, jnp.arange(n), aggregates)
+    return aggregates, state
+
+
+def renumber_aggregates(aggregates: jax.Array, n: int):
+    """Contiguous coarse ids (paper's global reordering). Eager helper.
+
+    Returns (coarse_id [n] int32, n_coarse int). Roots are vertices that are
+    their own aggregate; every non-root points at a root (single-level
+    indirection by construction of Alg 2).
+    """
+    aggregates = jax.device_get(aggregates)
+    import numpy as np
+
+    roots = aggregates == np.arange(n)
+    root_rank = np.cumsum(roots) - 1
+    coarse_id = root_rank[aggregates]
+    n_coarse = int(roots.sum())
+    # Non-root aggregate pointers must reference roots.
+    assert bool(roots[aggregates].all()), "aggregate pointers must hit roots"
+    return jnp.asarray(coarse_id, jnp.int32), n_coarse

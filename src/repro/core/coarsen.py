@@ -1,0 +1,62 @@
+"""Unsmoothed-aggregation Galerkin coarsening (paper §2, §2.4).
+
+With piecewise-constant P (P[i, agg(i)] = 1), the Galerkin operator PᵀLP is
+*edge contraction*: relabel both endpoints of every edge by aggregate id, sum
+duplicate edges, and drop the edges that became self-loops (they cancel out
+of the Laplacian: contracting (u,v) removes w from both the off-diagonal and
+the degrees). The result is again a graph Laplacian — no dense algebra, one
+``coalesce`` (sort + segment-sum), which distributes the same way SpMV does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GraphLevel, graph_from_adjacency
+from repro.sparse.coo import COO, coalesce
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AggregationLevel:
+    """UA level: restriction = segment-sum over aggregates, prolongation =
+    gather (both zero-FLOP data movements — the "unsmoothed" in UA-AMG)."""
+
+    fine: GraphLevel
+    coarse: GraphLevel
+    coarse_id: jax.Array   # int32 [n_fine] -> [0, n_coarse)
+
+    @property
+    def n_fine(self) -> int:
+        return self.fine.n
+
+    @property
+    def n_coarse(self) -> int:
+        return self.coarse.n
+
+    def restrict(self, r: jax.Array) -> jax.Array:
+        return jax.ops.segment_sum(r, self.coarse_id, num_segments=self.n_coarse)
+
+    def prolong(self, x_c: jax.Array) -> jax.Array:
+        return jnp.take(x_c, self.coarse_id, mode="fill", fill_value=0)
+
+
+def contract(level: GraphLevel, coarse_id: jax.Array, n_coarse: int,
+             coarse_capacity: int | None = None) -> AggregationLevel:
+    """Build PᵀLP by edge contraction."""
+    adj = level.adj
+    n = level.n
+    cr = jnp.take(coarse_id, jnp.minimum(adj.row, n - 1), mode="fill", fill_value=0)
+    cc = jnp.take(coarse_id, jnp.minimum(adj.col, n - 1), mode="fill", fill_value=0)
+    keep = adj.valid & (cr != cc)  # self-loops drop out of the Laplacian
+    row = jnp.where(keep, cr, n_coarse)
+    col = jnp.where(keep, cc, n_coarse)
+    val = jnp.where(keep, adj.val, 0)
+    cap = coarse_capacity or adj.capacity
+    coarse_adj = coalesce(row, col, val, n_coarse, n_coarse, cap)
+    coarse = graph_from_adjacency(coarse_adj)
+    return AggregationLevel(fine=level, coarse=coarse,
+                            coarse_id=coarse_id.astype(jnp.int32))

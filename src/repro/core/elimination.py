@@ -1,0 +1,222 @@
+"""Parallel low-degree elimination (paper §2.3, Algorithm 1).
+
+Two phases:
+
+1. *Selection* — mark every vertex of (unweighted) degree ≤ 4 as a candidate;
+   a candidate is eliminated iff it attains the minimum hash among all
+   candidate vertices in its closed neighbourhood. This is Alg 1's semiring
+   SpMV: ⊗ filters non-candidates, ⊕ keeps the min-hash neighbour. Here the
+   SpMV is a lexicographic segment reduction over the edge list
+   (``segment_argmin_lex``), which is exactly the CombBLAS computation in
+   data-parallel JAX form — it runs unchanged under ``shard_map`` on the 2D
+   edge partition (repro.dist).
+
+   The eliminated set is an *independent set* (two adjacent candidates can't
+   both attain the strict minimum), so L_FF is diagonal and elimination is an
+   exact Schur complement.
+
+2. *Level construction* — build the elimination level:
+     P_F = D_F⁻¹ W              (x_F = D_F⁻¹ b_F + P_F x_C)
+     S   = L_CC − Wᵀ D_F⁻¹ W    (coarse operator, again a graph Laplacian)
+   where W ≥ 0 are the F→C edge weights. Each eliminated vertex has ≤ 4
+   neighbours, so its Schur fill is a clique of ≤ 12 directed edges built
+   from a fixed [n, 4] neighbour table — no dynamic shapes anywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GraphLevel, graph_from_adjacency, hash32
+from repro.sparse.coo import COO, coalesce
+from repro.sparse.segment import segment_argmin_lex
+
+MAX_ELIM_DEGREE = 4  # paper: "like LAMG, we eliminate vertices of degree 4 or less"
+
+
+# ----------------------------------------------------------------------------
+# Phase 1: selection (Alg 1)
+# ----------------------------------------------------------------------------
+
+def select_eliminated(level: GraphLevel, max_degree: int = MAX_ELIM_DEGREE
+                      ) -> jax.Array:
+    """Boolean [n] mask of vertices to eliminate. Pure jnp; shard_map-safe."""
+    adj = level.adj
+    n = level.n
+    udeg = level.unweighted_degrees()
+    cand = udeg <= max_degree
+
+    h = hash32(jnp.arange(n, dtype=jnp.uint32))
+    # ⊗: keep only candidate neighbours; carry their hash. Using the
+    # *Laplacian* in Alg 1 means the diagonal puts each vertex in its own
+    # neighbourhood — we fold the self term in after the edge reduction.
+    col_ok = jnp.take(cand, adj.col, mode="fill", fill_value=False) & adj.valid
+    nbr_hash = jnp.take(h, adj.col, mode="fill", fill_value=0xFFFFFFFF)
+    # hash as sortable int32 view is unsafe (sign); compare as uint32 via
+    # int64-free trick: xor with 0x80000000 maps uint32 order to int32 order.
+    nbr_key = (nbr_hash ^ jnp.uint32(0x80000000)).astype(jnp.int32)
+    best_key, best_id = segment_argmin_lex(
+        nbr_key, adj.col, adj.row, num_segments=n, valid=col_ok)
+
+    self_key = (h ^ jnp.uint32(0x80000000)).astype(jnp.int32)
+    # i is eliminated iff it is a candidate and (self_key, i) < (best_key, id)
+    lt = (self_key < best_key) | ((self_key == best_key) & (jnp.arange(n) <= best_id))
+    return cand & lt
+
+
+# ----------------------------------------------------------------------------
+# Phase 2: elimination level construction
+# ----------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EliminationLevel:
+    """Exact two-level elimination (LAMG-style "ELIM" level).
+
+    Fine vector x splits into (F = eliminated, C = kept):
+      restrict:  b_c = b_C + P_Fᵀ b_F
+      prolong:   x_F = inv_deg_F ⊙ b_F + P_F x_C   (exact back-substitution)
+    """
+
+    fine: GraphLevel
+    coarse: GraphLevel
+    elim_mask: jax.Array      # bool [n_fine]
+    c_index: jax.Array        # int32 [n_fine]: fine -> coarse id (junk on F)
+    f_index: jax.Array        # int32 [n_fine]: fine -> F-slot id (junk on C)
+    f_vertices: jax.Array     # int32 [n_f]: F-slot -> fine id
+    p_f: COO                  # [n_f, n_coarse] = D_F⁻¹ W
+    inv_deg_f: jax.Array      # [n_f]
+
+    @property
+    def n_fine(self) -> int:
+        return self.fine.n
+
+    @property
+    def n_coarse(self) -> int:
+        return self.coarse.n
+
+    def restrict(self, b: jax.Array) -> jax.Array:
+        from repro.sparse.coo import spmv_t
+
+        b_f = jnp.take(b, self.f_vertices, mode="fill", fill_value=0)
+        b_c = jax.ops.segment_sum(
+            jnp.where(self.elim_mask, 0, b),
+            jnp.where(self.elim_mask, self.n_coarse, self.c_index),
+            num_segments=self.n_coarse)
+        return b_c + spmv_t(self.p_f, b_f)
+
+    def prolong(self, x_c: jax.Array, b: jax.Array) -> jax.Array:
+        from repro.sparse.coo import spmv
+
+        b_f = jnp.take(b, self.f_vertices, mode="fill", fill_value=0)
+        x_f = self.inv_deg_f * b_f + spmv(self.p_f, x_c)
+        x = jnp.take(x_c, jnp.clip(self.c_index, 0, self.n_coarse - 1),
+                     mode="fill", fill_value=0)
+        x_from_f = jnp.take(
+            x_f, jnp.clip(self.f_index, 0, max(self.f_vertices.shape[0] - 1, 0)),
+            mode="fill", fill_value=0)
+        return jnp.where(self.elim_mask, x_from_f, x)
+
+
+def _neighbour_table(adj: COO, max_width: int):
+    """[n, w] neighbour col/val tables (rows with degree > w are truncated —
+    callers only read rows of eliminated vertices, whose degree ≤ w)."""
+    n = adj.n_rows
+    order = jnp.lexsort((adj.col, adj.row))
+    r = adj.row[order]
+    c = adj.col[order]
+    v = adj.val[order]
+    pos = jnp.arange(adj.capacity)
+    row_start = jax.ops.segment_min(pos, r, num_segments=n)
+    rank = pos - jnp.take(row_start, jnp.minimum(r, n - 1), mode="fill", fill_value=0)
+    ok = (r < n) & (rank < max_width)
+    rr = jnp.where(ok, r, n)
+    kk = jnp.where(ok, rank, 0)
+    nb_col = jnp.full((n + 1, max_width), n, jnp.int32).at[rr, kk].set(
+        jnp.where(ok, c, n), mode="drop")[:n]
+    nb_val = jnp.zeros((n + 1, max_width), adj.val.dtype).at[rr, kk].set(
+        jnp.where(ok, v, 0), mode="drop")[:n]
+    return nb_col, nb_val
+
+
+def build_elimination_level(level: GraphLevel, elim: jax.Array,
+                            coarse_capacity: int | None = None
+                            ) -> EliminationLevel:
+    """Eager/host-driven constructor (concrete sizes -> static shapes)."""
+    n = level.n
+    elim = jax.device_get(elim)
+    n_f = int(elim.sum())
+    n_c = n - n_f
+
+    keep = ~jnp.asarray(elim)
+    c_index = (jnp.cumsum(keep.astype(jnp.int32)) - 1).astype(jnp.int32)
+    f_index = (jnp.cumsum(jnp.asarray(elim).astype(jnp.int32)) - 1).astype(jnp.int32)
+    f_vertices = jnp.nonzero(jnp.asarray(elim), size=max(n_f, 1), fill_value=n)[0].astype(jnp.int32)
+
+    adj = level.adj
+    elim_j = jnp.asarray(elim)
+    row_f = jnp.take(elim_j, adj.row, mode="fill", fill_value=False) & adj.valid
+    # F -> C edges become P_F (scaled); C -> C edges survive into A_CC.
+    inv_deg_f = 1.0 / jnp.take(level.deg, f_vertices, mode="fill", fill_value=1.0)
+
+    p_row = jnp.where(row_f, jnp.take(f_index, jnp.minimum(adj.row, n - 1),
+                                      mode="fill", fill_value=0), n_f if n_f else 1)
+    p_col = jnp.where(row_f, jnp.take(c_index, jnp.minimum(adj.col, n - 1),
+                                      mode="fill", fill_value=0), n_f if n_f else 1)
+    p_scale = jnp.take(inv_deg_f, jnp.minimum(p_row, max(n_f - 1, 0)),
+                       mode="fill", fill_value=0)
+    p_val = jnp.where(row_f, adj.val * p_scale, 0)
+    p_f = COO(p_row.astype(jnp.int32), p_col.astype(jnp.int32), p_val,
+              max(n_f, 1), max(n_c, 1))
+
+    # --- coarse adjacency: A_CC + Schur fill cliques --------------------
+    cc = (~jnp.take(elim_j, adj.row, mode="fill", fill_value=True)) & \
+         (~jnp.take(elim_j, adj.col, mode="fill", fill_value=True)) & adj.valid
+    cc_row = jnp.where(cc, jnp.take(c_index, jnp.minimum(adj.row, n - 1),
+                                    mode="fill", fill_value=0), n_c)
+    cc_col = jnp.where(cc, jnp.take(c_index, jnp.minimum(adj.col, n - 1),
+                                    mode="fill", fill_value=0), n_c)
+    cc_val = jnp.where(cc, adj.val, 0)
+
+    # Fill edges: for every eliminated f with neighbours u≠v (all in C):
+    #   w_uv += w_uf * w_fv / deg_f
+    w = MAX_ELIM_DEGREE
+    nb_col, nb_val = _neighbour_table(adj, w)
+    f_nb_col = jnp.take(nb_col, f_vertices, axis=0, mode="fill", fill_value=n)    # [n_f, w]
+    f_nb_val = jnp.take(nb_val, f_vertices, axis=0, mode="fill", fill_value=0)
+    scale = inv_deg_f[:, None, None]                                              # [n_f,1,1]
+    pair_val = f_nb_val[:, :, None] * f_nb_val[:, None, :] * scale                # [n_f,w,w]
+    u = jnp.broadcast_to(f_nb_col[:, :, None], pair_val.shape)
+    v = jnp.broadcast_to(f_nb_col[:, None, :], pair_val.shape)
+    off_diag = (u != v) & (u < n) & (v < n)
+    fill_row = jnp.where(off_diag, jnp.take(c_index, jnp.minimum(u, n - 1),
+                                            mode="fill", fill_value=0), n_c).reshape(-1)
+    fill_col = jnp.where(off_diag, jnp.take(c_index, jnp.minimum(v, n - 1),
+                                            mode="fill", fill_value=0), n_c).reshape(-1)
+    fill_val = jnp.where(off_diag, pair_val, 0).reshape(-1)
+
+    all_row = jnp.concatenate([cc_row, fill_row]).astype(jnp.int32)
+    all_col = jnp.concatenate([cc_col, fill_col]).astype(jnp.int32)
+    all_val = jnp.concatenate([cc_val, fill_val])
+    cap = coarse_capacity or int(all_row.shape[0])
+    coarse_adj = coalesce(all_row, all_col, all_val, max(n_c, 1), max(n_c, 1), cap)
+    coarse = graph_from_adjacency(coarse_adj)
+
+    return EliminationLevel(
+        fine=level, coarse=coarse, elim_mask=elim_j,
+        c_index=c_index, f_index=f_index, f_vertices=f_vertices,
+        p_f=p_f, inv_deg_f=inv_deg_f)
+
+
+def eliminate_low_degree(level: GraphLevel, max_degree: int = MAX_ELIM_DEGREE,
+                         coarse_capacity: int | None = None):
+    """One full elimination pass: select + build. Returns None if nothing to do."""
+    elim = select_eliminated(level, max_degree)
+    n_elim = int(jax.device_get(elim.sum()))
+    if n_elim == 0 or n_elim == level.n:
+        return None
+    return build_elimination_level(level, elim, coarse_capacity)

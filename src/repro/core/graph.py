@@ -1,0 +1,62 @@
+"""Graph-Laplacian level container.
+
+Every multigrid level is represented by the *adjacency* of its graph (padded
+COO, both edge directions, positive weights) plus the weighted degree vector.
+The Laplacian is never materialised: L = diag(deg) − A, and every level
+produced by the paper's two coarsening mechanisms (Schur-complement
+elimination on an independent set; unsmoothed-aggregation contraction) is
+again exactly of this form — Laplacians are closed under both operations
+(row sums stay zero, off-diagonals stay ≤ 0). Tests assert this invariant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.coo import COO, row_sums, spmv, degrees
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphLevel:
+    """One multigrid level: adjacency + degrees of a weighted graph."""
+
+    adj: COO          # symmetric adjacency, off-diagonal, w > 0
+    deg: jax.Array    # weighted degrees = Laplacian diagonal, [n]
+
+    @property
+    def n(self) -> int:
+        return self.adj.n_rows
+
+    def laplacian_matvec(self, x: jax.Array) -> jax.Array:
+        """L @ x = deg ⊙ x − A @ x."""
+        return self.deg * x - spmv(self.adj, x)
+
+    def unweighted_degrees(self) -> jax.Array:
+        return degrees(self.adj)
+
+
+def graph_from_adjacency(adj: COO) -> GraphLevel:
+    return GraphLevel(adj=adj, deg=row_sums(adj))
+
+
+def laplacian_dense(level: GraphLevel) -> jax.Array:
+    """Dense L (tests / coarsest solve only)."""
+    return jnp.diag(level.deg) - level.adj.to_dense()
+
+
+def hash32(x: jax.Array) -> jax.Array:
+    """splitmix-style avalanche hash of vertex ids (uint32).
+
+    Alg 1 eliminates the min-*hash* candidate in each neighbourhood instead
+    of the min-id, so that sequential vertex orderings don't serialise chain
+    elimination (paper Fig 2). Deterministic across devices by construction.
+    """
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x

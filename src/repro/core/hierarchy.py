@@ -1,0 +1,155 @@
+"""Multigrid setup: build the level hierarchy (paper §2).
+
+The level schedule follows the paper: run one low-degree-elimination pass
+(paper: "in practice one iteration is sufficient"), then aggregate; repeat
+until the coarsest graph is dense-solvable. Each constructed level's padded
+capacity is shrunk to a power-of-two bucket so the per-level SpMV cost decays
+geometrically (a fixed-capacity hierarchy would make every level cost as much
+as the finest — the static-shape analogue of the paper's "work per cycle").
+
+Setup is eager (hierarchy sizes are data-dependent); every numeric kernel in
+it is jnp and reruns identically under ``shard_map`` for the distributed
+demonstration in ``repro/dist``. The resulting ``Hierarchy`` is a pytree with
+static structure, so the *solve* jits end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import AggregationConfig, aggregate, renumber_aggregates
+from repro.core.coarsen import AggregationLevel, contract
+from repro.core.cycles import CycleConfig, Transfer, cycle
+from repro.core.elimination import (EliminationLevel, build_elimination_level,
+                                    select_eliminated)
+from repro.core.graph import GraphLevel, graph_from_adjacency, laplacian_dense
+from repro.core.smoothers import SmootherConfig, estimate_lambda_max
+from repro.core.strength import STRENGTH_METRICS
+from repro.sparse.coo import COO
+
+
+@dataclasses.dataclass(frozen=True)
+class SetupConfig:
+    max_levels: int = 20
+    coarsest_size: int = 128
+    elim_max_degree: int = 4          # paper: degree ≤ 4
+    elim_min_fraction: float = 0.02   # skip ELIM levels that remove < 2%
+    elim_rounds_per_level: int = 1    # paper: one pass suffices
+    strength_metric: str = "algebraic_distance"   # paper's choice
+    strength_vectors: int = 8
+    strength_sweeps: int = 20
+    aggregation: AggregationConfig = AggregationConfig()
+    min_coarsen_ratio: float = 0.95   # stop if a level shrinks less than 5%
+    seed: int = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    transfers: tuple            # tuple[Transfer, ...] (pytree children)
+    lam_maxes: tuple            # per-transfer λmax estimates (0.0 for ELIM)
+    coarse_inv: jax.Array       # dense (L_c + α J)⁻¹ at the bottom
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.transfers) + 1
+
+    def level_sizes(self) -> list:
+        sizes = [t.fine.n for t in self.transfers]
+        sizes.append(self.transfers[-1].coarse.n if self.transfers else 0)
+        return sizes
+
+
+def _bucket(n: int) -> int:
+    """Round capacity up to the next power of two (jit cache friendliness)."""
+    return 1 << max(int(math.ceil(math.log2(max(n, 1)))), 0)
+
+
+def _shrink(level: GraphLevel) -> GraphLevel:
+    """Move padding to the tail and shrink capacity to a bucket."""
+    adj = level.adj
+    nnz = int(jax.device_get(adj.nnz))
+    cap = _bucket(max(nnz, 1))
+    if cap >= adj.capacity:
+        return level
+    # coalesce output is sorted with padding last, so slicing is sound.
+    return graph_from_adjacency(adj.with_capacity(cap))
+
+
+def build_hierarchy(adj: COO, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
+    level = graph_from_adjacency(adj)
+    transfers: List[Transfer] = []
+    lam_maxes: List[float] = []
+    strength_fn = STRENGTH_METRICS[cfg.strength_metric]
+
+    while level.n > cfg.coarsest_size and len(transfers) < cfg.max_levels:
+        progressed = False
+
+        # --- low-degree elimination pass(es) ---------------------------
+        for _ in range(cfg.elim_rounds_per_level):
+            if level.n <= cfg.coarsest_size:
+                break
+            elim = select_eliminated(level, cfg.elim_max_degree)
+            n_elim = int(jax.device_get(elim.sum()))
+            if n_elim < max(cfg.elim_min_fraction * level.n, 1) or n_elim == level.n:
+                break
+            t = build_elimination_level(level, elim)
+            t = dataclasses.replace(t, coarse=_shrink(t.coarse))
+            transfers.append(t)
+            lam_maxes.append(jnp.asarray(0.0))
+            level = t.coarse
+            progressed = True
+
+        if level.n <= cfg.coarsest_size:
+            break
+
+        # --- aggregation level -----------------------------------------
+        strength = strength_fn(level, n_vectors=cfg.strength_vectors,
+                               n_sweeps=cfg.strength_sweeps, seed=cfg.seed)
+        aggs, _state = aggregate(level, strength, cfg.aggregation)
+        coarse_id, n_c = renumber_aggregates(aggs, level.n)
+        if n_c >= level.n * cfg.min_coarsen_ratio:
+            if not progressed:
+                break  # stuck: neither mechanism coarsens this graph
+            continue
+        t = contract(level, coarse_id, n_c)
+        t = dataclasses.replace(t, coarse=_shrink(t.coarse))
+        lam_maxes.append(estimate_lambda_max(t.fine))
+        transfers.append(t)
+        level = t.coarse
+
+    # --- dense bottom solve: (L_c + α J)⁻¹ with J = 11ᵀ/n ----------------
+    L = laplacian_dense(level)
+    n_c = level.n
+    alpha = float(jax.device_get(jnp.mean(level.deg))) or 1.0
+    coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
+
+    return Hierarchy(transfers=tuple(transfers), lam_maxes=tuple(lam_maxes),
+                     coarse_inv=coarse_inv)
+
+
+def apply_cycle(h: Hierarchy, b: jax.Array,
+                cfg: CycleConfig = CycleConfig()) -> jax.Array:
+    """One multigrid cycle as preconditioner application: z ≈ L⁻¹ b."""
+    return cycle(h.transfers, h.lam_maxes, h.coarse_inv, b, cfg)
+
+
+def hierarchy_stats(h: Hierarchy) -> dict:
+    rows = []
+    for t in h.transfers:
+        kind = "elim" if isinstance(t, EliminationLevel) else "agg"
+        nnz = int(jax.device_get(t.fine.adj.nnz))
+        rows.append(dict(kind=kind, n=t.fine.n, nnz=nnz,
+                         capacity=t.fine.adj.capacity))
+    if h.transfers:
+        t = h.transfers[-1]
+        rows.append(dict(kind="coarse", n=t.coarse.n,
+                         nnz=int(jax.device_get(t.coarse.adj.nnz)),
+                         capacity=t.coarse.adj.capacity))
+    return dict(levels=rows, n_levels=h.n_levels)

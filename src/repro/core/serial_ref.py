@@ -1,0 +1,149 @@
+"""Serial LAMG-style reference solver (the paper's Fig 3 comparison column).
+
+The paper compares against Livne & Brandt's MATLAB LAMG. That code isn't
+available offline, so this module reimplements a *serial-flavoured* LAMG-lite
+with the two serial mechanisms the paper explicitly sacrifices for
+parallelism, built on the same level constructors as the parallel solver:
+
+* **greedy sequential elimination** — sweep vertices in degree order,
+  eliminate any degree ≤ 4 vertex with no previously-eliminated neighbour.
+  On a chain this removes every other vertex (the paper's Fig 2 best case,
+  guaranteed), strictly stronger than the parallel hash rule.
+* **greedy strength-ordered aggregation** — process edges by descending
+  affinity, pair/absorb vertices up to a max aggregate size. This is an
+  "energy-lite" stand-in for LAMG's energy-based aggregation (clearly weaker
+  than real LAMG, clearly stronger than the voting scheme).
+
+Everything downstream (V-cycle, smoother, PCG, WDA accounting) is shared with
+the parallel solver, so Fig 3's comparison isolates exactly what the paper's
+§3.1 discusses: the quality loss from parallel-friendly setup decisions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+
+import jax.numpy as jnp
+
+from repro.core.aggregation import renumber_aggregates
+from repro.core.coarsen import contract
+from repro.core.cycles import CycleConfig
+from repro.core.elimination import build_elimination_level
+from repro.core.graph import GraphLevel, graph_from_adjacency
+from repro.core.hierarchy import Hierarchy, SetupConfig, _shrink
+from repro.core.smoothers import estimate_lambda_max
+from repro.core.solver import LaplacianSolver
+from repro.core.strength import STRENGTH_METRICS
+from repro.graphs.generators import to_laplacian_coo
+from repro.core.graph import laplacian_dense
+import dataclasses
+import jax
+
+
+def _to_csr(level: GraphLevel) -> sp.csr_matrix:
+    row = np.asarray(jax.device_get(level.adj.row))
+    col = np.asarray(jax.device_get(level.adj.col))
+    val = np.asarray(jax.device_get(level.adj.val))
+    ok = row < level.n
+    return sp.csr_matrix((val[ok], (row[ok], col[ok])), shape=(level.n, level.n))
+
+
+def greedy_eliminate_mask(level: GraphLevel, max_degree: int = 4) -> np.ndarray:
+    a = _to_csr(level)
+    deg = np.diff(a.indptr)
+    order = np.argsort(deg, kind="stable")
+    state = np.zeros(level.n, np.int8)  # 0 untouched, 1 eliminated, 2 blocked
+    for v in order:
+        if deg[v] > max_degree or state[v] != 0:
+            continue
+        nbrs = a.indices[a.indptr[v]:a.indptr[v + 1]]
+        if (state[nbrs] == 1).any():
+            continue
+        state[v] = 1
+        state[nbrs[state[nbrs] == 0]] = 2
+    return state == 1
+
+
+def greedy_aggregate(level: GraphLevel, strength, max_size: int = 8) -> np.ndarray:
+    a = _to_csr(level)
+    s = np.asarray(jax.device_get(strength))
+    row = np.asarray(jax.device_get(level.adj.row))
+    col = np.asarray(jax.device_get(level.adj.col))
+    ok = row < level.n
+    row, col, s = row[ok], col[ok], s[ok]
+    order = np.argsort(-s, kind="stable")
+    agg = np.arange(level.n)
+    size = np.ones(level.n, np.int64)
+    assigned = np.zeros(level.n, bool)
+    for e in order:
+        u, v = int(row[e]), int(col[e])
+        if not assigned[u] and not assigned[v]:
+            agg[v] = u
+            assigned[u] = assigned[v] = True
+            size[u] = 2
+        elif assigned[u] and not assigned[v]:
+            root = int(agg[u])
+            if size[root] < max_size:
+                agg[v] = root
+                assigned[v] = True
+                size[root] += 1
+        elif assigned[v] and not assigned[u]:
+            root = int(agg[v])
+            if size[root] < max_size:
+                agg[u] = root
+                assigned[u] = True
+                size[root] += 1
+    # Roots point at themselves; leftovers are singleton roots.
+    for v in range(level.n):
+        if agg[v] != v and agg[agg[v]] != agg[v]:
+            agg[v] = agg[agg[v]]  # path-compress one step (depth ≤ 2 here)
+    return agg
+
+
+def build_serial_hierarchy(adj, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
+    level = graph_from_adjacency(adj)
+    transfers, lam_maxes = [], []
+    strength_fn = STRENGTH_METRICS["affinity"]  # LAMG's metric
+
+    while level.n > cfg.coarsest_size and len(transfers) < cfg.max_levels:
+        progressed = False
+        elim = greedy_eliminate_mask(level, cfg.elim_max_degree)
+        if elim.sum() >= max(cfg.elim_min_fraction * level.n, 1):
+            t = build_elimination_level(level, jnp.asarray(elim))
+            t = dataclasses.replace(t, coarse=_shrink(t.coarse))
+            transfers.append(t)
+            lam_maxes.append(jnp.asarray(0.0))
+            level = t.coarse
+            progressed = True
+        if level.n <= cfg.coarsest_size:
+            break
+        strength = strength_fn(level, n_vectors=cfg.strength_vectors,
+                               n_sweeps=cfg.strength_sweeps, seed=cfg.seed)
+        aggs = greedy_aggregate(level, strength)
+        coarse_id, n_c = renumber_aggregates(jnp.asarray(aggs), level.n)
+        if n_c >= level.n * cfg.min_coarsen_ratio:
+            if not progressed:
+                break
+            continue
+        t = contract(level, coarse_id, n_c)
+        t = dataclasses.replace(t, coarse=_shrink(t.coarse))
+        lam_maxes.append(estimate_lambda_max(t.fine))
+        transfers.append(t)
+        level = t.coarse
+
+    L = laplacian_dense(level)
+    n_c = level.n
+    alpha = float(jax.device_get(jnp.mean(level.deg))) or 1.0
+    coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
+    return Hierarchy(transfers=tuple(transfers), lam_maxes=tuple(lam_maxes),
+                     coarse_inv=coarse_inv)
+
+
+def serial_lamg_solver(n, rows, cols, vals,
+                       setup_config: SetupConfig = SetupConfig(),
+                       cycle_config: CycleConfig = CycleConfig(),
+                       capacity=None) -> LaplacianSolver:
+    adj = to_laplacian_coo(n, rows, cols, vals, capacity=capacity)
+    h = build_serial_hierarchy(adj, setup_config)
+    return LaplacianSolver(hierarchy=h, cycle_config=cycle_config, n=n)

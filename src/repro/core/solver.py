@@ -1,0 +1,115 @@
+"""Public solver API: the paper's contribution as one composable object.
+
+    solver = LaplacianSolver.setup(n, rows, cols, vals)   # multigrid setup
+    x, info = solver.solve(b, tol=1e-8)                   # PCG + V-cycle
+    step = solver.build_solve_step(n_iters=30)            # jit-able, for
+                                                          # pjit / dry-run
+
+``info.wda`` reproduces the paper's Fig 3 metric. ``random_ordering=True``
+applies the paper's §2.2 load-balancing permutation (a pure relabeling:
+solutions are permuted back transparently).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cycles import CycleConfig
+from repro.core.hierarchy import (Hierarchy, SetupConfig, apply_cycle,
+                                  build_hierarchy, hierarchy_stats)
+from repro.core.krylov import SolveInfo, pcg, pcg_scanned
+from repro.core.wda import pcg_iteration_work, wda
+from repro.graphs.generators import to_laplacian_coo
+from repro.sparse.coo import COO
+
+
+@dataclasses.dataclass
+class LaplacianSolveInfo:
+    iters: int
+    residual_norms: list
+    converged: bool
+    wda: float
+    work_per_iteration: float
+
+
+@dataclasses.dataclass
+class LaplacianSolver:
+    hierarchy: Hierarchy
+    cycle_config: CycleConfig
+    n: int
+    perm: np.ndarray | None = None          # random ordering (paper §2.2)
+    inv_perm: np.ndarray | None = None
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def setup(n: int, rows, cols, vals,
+              setup_config: SetupConfig = SetupConfig(),
+              cycle_config: CycleConfig = CycleConfig(),
+              random_ordering: bool = True,
+              capacity: int | None = None) -> "LaplacianSolver":
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals, np.float32)
+        perm = inv_perm = None
+        if random_ordering:
+            rng = np.random.default_rng(setup_config.seed)
+            perm = rng.permutation(n)          # old id -> new id
+            inv_perm = np.argsort(perm)
+            rows = perm[rows]
+            cols = perm[cols]
+        adj = to_laplacian_coo(n, rows, cols, vals, capacity=capacity)
+        h = build_hierarchy(adj, setup_config)
+        return LaplacianSolver(hierarchy=h, cycle_config=cycle_config, n=n,
+                               perm=perm, inv_perm=inv_perm)
+
+    # ------------------------------------------------------------------
+    def _to_internal(self, b):
+        return b[jnp.asarray(self.inv_perm)] if self.perm is not None else b
+        # note: internal[new] = b[old] with new = perm[old]  ⇔  take(b, inv_perm)
+
+    def _from_internal(self, x):
+        return x[jnp.asarray(self.perm)] if self.perm is not None else x
+
+    @property
+    def _fine(self):
+        return self.hierarchy.transfers[0].fine
+
+    def matvec(self, x):
+        return self._fine.laplacian_matvec(x)
+
+    def precondition(self, r):
+        return apply_cycle(self.hierarchy, r, self.cycle_config)
+
+    # ------------------------------------------------------------------
+    def solve(self, b, tol: float = 1e-8, maxiter: int = 200,
+              precondition: bool = True) -> tuple[jax.Array, LaplacianSolveInfo]:
+        b_int = self._to_internal(jnp.asarray(b, jnp.float32))
+        M = self.precondition if precondition else None
+        x, info = pcg(self.matvec, b_int, precond=M, tol=tol, maxiter=maxiter)
+        w = pcg_iteration_work(self.hierarchy, self.cycle_config) if precondition else 1.0
+        out = LaplacianSolveInfo(
+            iters=info.iters, residual_norms=info.residual_norms,
+            converged=info.converged, work_per_iteration=w,
+            wda=wda(info.residual_norms, w))
+        return self._from_internal(x), out
+
+    # ------------------------------------------------------------------
+    def build_solve_step(self, n_iters: int = 30):
+        """A pure fixed-shape function (b -> x, residual_norms): jit target."""
+        h = self.hierarchy
+        cyc = self.cycle_config
+
+        def solve_step(b):
+            return pcg_scanned(
+                lambda v: h.transfers[0].fine.laplacian_matvec(v), b,
+                precond=lambda r: apply_cycle(h, r, cyc), n_iters=n_iters)
+
+        return solve_step
+
+    def stats(self) -> dict:
+        return hierarchy_stats(self.hierarchy)

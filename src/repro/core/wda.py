@@ -1,0 +1,83 @@
+"""Work per Digit of Accuracy (paper §3.1).
+
+WDA is the paper's language-neutral comparison metric: how much work —
+measured in *finest-level matvec equivalents* — the solver spends to shrink
+the residual by 10×:
+
+    WDA = (work_per_iteration × iterations) / log10(‖r₀‖ / ‖r_k‖)
+
+Work accounting (matching LAMG's convention):
+  * one matvec at level ℓ costs nnz(Lℓ)/nnz(L₀) units (nnz includes diagonal),
+  * a Jacobi sweep = 1 matvec (+O(n) vector ops, counted at nnz weight 0),
+  * an ELIM level costs 2·nnz(P_F) (restrict + prolong, exact — no smoothing),
+  * an AGG level costs (pre+post sweeps + 1 residual) matvecs + n transfers,
+  * the dense bottom solve costs n_c² (one precomputed-inverse matmul),
+  * a PCG iteration adds 1 fine matvec; dot products are O(n), ignored
+    (the paper reports them at ~5% of solve time in distributed runs).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.core.coarsen import AggregationLevel
+from repro.core.elimination import EliminationLevel
+from repro.core.cycles import CycleConfig
+from repro.core.hierarchy import Hierarchy
+
+
+def _nnz(coo) -> int:
+    return int(jax.device_get(coo.nnz))
+
+
+def finest_matvec_cost(h: Hierarchy) -> float:
+    """Cost of one finest-level Laplacian matvec in raw units (nnz + n)."""
+    t0 = h.transfers[0]
+    return _nnz(t0.fine.adj) + t0.fine.n
+
+
+def cycle_work_units(h: Hierarchy, cfg: CycleConfig) -> float:
+    """Work of ONE multigrid cycle in finest-matvec equivalents."""
+    base = finest_matvec_cost(h)
+    work = 0.0
+    visits = 1.0
+    for t in h.transfers:
+        if isinstance(t, EliminationLevel):
+            p_nnz = _nnz(t.p_f)
+            work += visits * (2 * p_nnz + t.fine.n) / base
+        else:
+            sm = cfg.smoother
+            sweeps = sm.pre_sweeps + sm.post_sweeps
+            if sm.kind == "chebyshev":
+                sweeps = 2 * sm.cheby_degree  # degree matvecs per pre/post
+            lvl_mv = _nnz(t.fine.adj) + t.fine.n
+            work += visits * ((sweeps + 1) * lvl_mv + 2 * t.fine.n) / base
+            if cfg.kind == "K":
+                # each FCG step below this level adds one matvec at the
+                # *child* level; charge it here at this level's cost (upper
+                # bound: child nnz ≤ this nnz)
+                work += visits * cfg.k_cycle_steps * lvl_mv / base
+            if cfg.kind in ("W", "K"):
+                visits *= 2.0
+    n_c = h.coarse_inv.shape[0]
+    work += visits * (n_c * n_c) / base
+    return work
+
+
+def pcg_iteration_work(h: Hierarchy, cfg: CycleConfig) -> float:
+    """Work of one PCG iteration preconditioned by the cycle."""
+    return 1.0 + cycle_work_units(h, cfg)
+
+
+def wda(residual_norms, work_per_iteration: float) -> float:
+    """Work per digit of accuracy from a residual history."""
+    r0, rk = residual_norms[0], residual_norms[-1]
+    iters = len(residual_norms) - 1
+    if rk <= 0 or r0 <= 0 or iters == 0:
+        return float("inf")
+    digits = math.log10(r0 / rk)
+    if digits <= 0:
+        return float("inf")
+    return work_per_iteration * iters / digits

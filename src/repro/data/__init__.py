@@ -1,0 +1,5 @@
+from repro.data.synthetic import (lm_batch_stream, recsys_batch_stream,
+                                  gnn_graph_batch, neighbor_sampled_batch)
+
+__all__ = ["lm_batch_stream", "recsys_batch_stream", "gnn_graph_batch",
+           "neighbor_sampled_batch"]

@@ -1,0 +1,183 @@
+"""Seeded synthetic graph generators (host-side numpy).
+
+The paper's test set (SuiteSparse / SNAP graphs) isn't redistributable
+offline, so these generate structurally-matched stand-ins:
+
+* ``barabasi_albert`` — power-law degree social/AS-style networks (the
+  paper's main target class: hubs + heavy tail),
+* ``rmat`` — Kronecker power-law graphs (Graph500-style),
+* ``delaunay`` — the `delauney_nXX` family (planar, bounded degree),
+* ``grid_2d`` — census/mesh-like planar graphs (de2010 stand-in),
+* ``watts_strogatz`` — small-world.
+
+All generators return ``(n, rows, cols, vals)`` with BOTH edge directions
+present, no self loops, positive float32 weights, numpy arrays. Use
+``ensure_connected`` to add a random spanning chain (the paper assumes
+connected graphs; the Laplacian nullspace is then exactly the constants).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _dedup_sym(n, u, v, w=None, rng=None):
+    """Symmetrise + dedup an undirected edge list given as (u, v) pairs."""
+    keep = u != v
+    u, v = u[keep], v[keep]
+    if w is not None:
+        w = w[keep]
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    key = lo.astype(np.int64) * n + hi
+    _, idx = np.unique(key, return_index=True)
+    lo, hi = lo[idx], hi[idx]
+    if w is None:
+        w = np.ones(len(lo), np.float32) if rng is None else rng.uniform(
+            0.5, 1.5, len(lo)).astype(np.float32)
+    else:
+        w = w[idx].astype(np.float32)
+    rows = np.concatenate([lo, hi]).astype(np.int32)
+    cols = np.concatenate([hi, lo]).astype(np.int32)
+    vals = np.concatenate([w, w])
+    return n, rows, cols, vals
+
+
+def barabasi_albert(n: int, m: int = 4, seed: int = 0, weighted: bool = False):
+    """Preferential attachment; degree tail ~ k^-3. O(n·m) with a
+    preallocated repeated-endpoint array (sampling an index into it IS
+    degree-proportional sampling; duplicates within a step are dropped, the
+    standard BA approximation)."""
+    rng = np.random.default_rng(seed)
+    repeated = np.empty(2 * n * m + 2 * m, np.int64)
+    repeated[:m] = np.arange(m)
+    size = m
+    src = np.empty(n * m, np.int64)
+    dst = np.empty(n * m, np.int64)
+    e = 0
+    for v in range(m, n):
+        chosen = np.unique(repeated[rng.integers(0, size, m)])
+        k = len(chosen)
+        src[e: e + k] = v
+        dst[e: e + k] = chosen
+        e += k
+        repeated[size: size + k] = chosen
+        repeated[size + k: size + 2 * k] = v
+        size += 2 * k
+    return _dedup_sym(n, src[:e], dst[:e], rng=rng if weighted else None)
+
+
+def erdos_renyi(n: int, avg_degree: float = 8.0, seed: int = 0,
+                weighted: bool = False):
+    rng = np.random.default_rng(seed)
+    n_edges = int(n * avg_degree / 2)
+    u = rng.integers(0, n, n_edges)
+    v = rng.integers(0, n, n_edges)
+    return _dedup_sym(n, u, v, rng=rng if weighted else None)
+
+
+def rmat(scale: int, edge_factor: int = 8, seed: int = 0,
+         a=0.57, b=0.19, c=0.19, weighted: bool = False):
+    """R-MAT/Kronecker generator (Graph500 parameters by default)."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    n_edges = n * edge_factor
+    u = np.zeros(n_edges, np.int64)
+    v = np.zeros(n_edges, np.int64)
+    for _ in range(scale):
+        r = rng.random(n_edges)
+        right = r >= a + b  # falls in c or d quadrant (row bit set)
+        bottom = ((r >= a) & (r < a + b)) | (r >= a + b + c)  # col bit set
+        u = (u << 1) | right.astype(np.int64)
+        v = (v << 1) | bottom.astype(np.int64)
+    return _dedup_sym(n, u, v, rng=rng if weighted else None)
+
+
+def grid_2d(nx: int, ny: int, weighted: bool = False, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    idx = np.arange(nx * ny).reshape(nx, ny)
+    right_u = idx[:, :-1].ravel()
+    right_v = idx[:, 1:].ravel()
+    down_u = idx[:-1, :].ravel()
+    down_v = idx[1:, :].ravel()
+    u = np.concatenate([right_u, down_u])
+    v = np.concatenate([right_v, down_v])
+    return _dedup_sym(nx * ny, u, v, rng=rng if weighted else None)
+
+
+def delaunay(n: int, seed: int = 0, weighted: bool = False):
+    """Delaunay triangulation of n uniform points (scipy.spatial)."""
+    from scipy.spatial import Delaunay as _Del
+
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    tri = _Del(pts)
+    s = tri.simplices
+    u = np.concatenate([s[:, 0], s[:, 1], s[:, 2]]).astype(np.int64)
+    v = np.concatenate([s[:, 1], s[:, 2], s[:, 0]]).astype(np.int64)
+    return _dedup_sym(n, u, v, rng=rng if weighted else None)
+
+
+def watts_strogatz(n: int, k: int = 6, p: float = 0.1, seed: int = 0,
+                   weighted: bool = False):
+    rng = np.random.default_rng(seed)
+    base = np.arange(n, dtype=np.int64)
+    us, vs = [], []
+    for d in range(1, k // 2 + 1):
+        tgt = (base + d) % n
+        rewire = rng.random(n) < p
+        tgt = np.where(rewire, rng.integers(0, n, n), tgt)
+        us.append(base)
+        vs.append(tgt)
+    return _dedup_sym(n, np.concatenate(us), np.concatenate(vs),
+                      rng=rng if weighted else None)
+
+
+def ensure_connected(n, rows, cols, vals, seed: int = 0):
+    """Bridge connected components so the graph is connected.
+
+    The paper assumes connected inputs. If the generator output is already
+    connected this is a no-op (important: adding shortcut edges would turn
+    mesh-like graphs into small-world expanders and collapse their condition
+    number, invalidating the Fig 3 comparisons). Otherwise one random vertex
+    of each component is chained to the next component.
+    """
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import connected_components
+
+    a = sp.coo_matrix((np.ones(len(rows)), (rows, cols)), shape=(n, n))
+    ncomp, labels = connected_components(a, directed=False)
+    if ncomp <= 1:
+        return n, rows.astype(np.int32), cols.astype(np.int32), vals.astype(np.float32)
+    rng = np.random.default_rng(seed + 12345)
+    reps = np.empty(ncomp, np.int64)
+    for comp in range(ncomp):
+        members = np.flatnonzero(labels == comp)
+        reps[comp] = rng.choice(members)
+    u, v = reps[:-1], reps[1:]
+    w = np.full(ncomp - 1, float(np.median(vals)) if len(vals) else 1.0,
+                np.float32)
+    out_r = np.concatenate([rows.astype(np.int64), u, v]).astype(np.int32)
+    out_c = np.concatenate([cols.astype(np.int64), v, u]).astype(np.int32)
+    out_w = np.concatenate([vals.astype(np.float32), w, w])
+    return n, out_r, out_c, out_w
+
+
+def to_laplacian_coo(n, rows, cols, vals, capacity=None):
+    """Adjacency edge list -> padded COO of the adjacency (off-diag part).
+
+    The solver represents every level by its adjacency + derived degrees
+    (DESIGN.md §4); the Laplacian is L = diag(deg) − A.
+    """
+    from repro.sparse.coo import coo_from_arrays
+
+    return coo_from_arrays(rows, cols, vals, n, n, capacity=capacity)
+
+
+def largest_component_sizes(n, rows, cols) -> np.ndarray:
+    """Connected component sizes (scipy) — test/validation helper."""
+    import scipy.sparse as sp
+    from scipy.sparse.csgraph import connected_components
+
+    a = sp.coo_matrix((np.ones(len(rows)), (rows, cols)), shape=(n, n))
+    ncomp, labels = connected_components(a, directed=False)
+    return np.bincount(labels, minlength=ncomp)

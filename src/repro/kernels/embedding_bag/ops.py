@@ -1,0 +1,21 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+
+
+@partial(jax.jit, static_argnames=("block_bags", "interpret"))
+def embedding_bag_kernel(table, indices, block_bags: int = 128,
+                         interpret: bool = True):
+    B = indices.shape[0]
+    pad = (-B) % block_bags
+    if pad:
+        indices = jnp.concatenate(
+            [indices, jnp.full((pad, indices.shape[1]), -1, indices.dtype)])
+    out = embedding_bag_pallas(table, indices, block_bags=block_bags,
+                               interpret=interpret)
+    return out[:B]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the embedding-bag kernel (mirrors
+repro.models.recsys.embedding.embedding_bag with sum mode)."""
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices):
+    V = table.shape[0]
+    vecs = jnp.take(table, indices, axis=0, mode="fill", fill_value=0)
+    valid = (indices >= 0) & (indices < V)
+    return jnp.sum(jnp.where(valid[..., None], vecs, 0), axis=-2
+                   ).astype(table.dtype)

@@ -1,0 +1,27 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jacobi.jacobi import jacobi_step_pallas
+
+
+@partial(jax.jit, static_argnames=("omega", "block_rows", "interpret"))
+def jacobi_step(col, val, x, b, deg, omega: float = 2.0 / 3.0,
+                block_rows: int = 256, interpret: bool = True):
+    n = col.shape[0]
+    pad = (-n) % block_rows
+    if pad:
+        ncols = x.shape[0]
+        col = jnp.concatenate([col, jnp.full((pad, col.shape[1]), ncols, col.dtype)])
+        val = jnp.concatenate([val, jnp.zeros((pad, val.shape[1]), val.dtype)])
+        x_in = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+        b = jnp.concatenate([b, jnp.zeros((pad,), b.dtype)])
+        deg = jnp.concatenate([deg, jnp.zeros((pad,), deg.dtype)])
+    else:
+        x_in = x
+    y = jacobi_step_pallas(col, val, x_in, b, deg, omega=omega,
+                           block_rows=block_rows, interpret=interpret)
+    return y[: n]

@@ -1,0 +1,4 @@
+from repro.kernels.spmv_ell.ops import spmv_ell
+from repro.kernels.spmv_ell.ref import spmv_ell_ref
+
+__all__ = ["spmv_ell", "spmv_ell_ref"]

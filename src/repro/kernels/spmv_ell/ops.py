@@ -1,0 +1,27 @@
+"""jit'd public wrapper: pads rows to the block size and dispatches to the
+Pallas kernel (interpret-mode on CPU, compiled on TPU)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmv_ell.spmv_ell import spmv_ell_pallas
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell(col: jax.Array, val: jax.Array, x: jax.Array,
+             block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    n_rows = col.shape[0]
+    pad = (-n_rows) % block_rows
+    if pad:
+        n_cols = x.shape[0]
+        col = jnp.concatenate(
+            [col, jnp.full((pad, col.shape[1]), n_cols, col.dtype)])
+        val = jnp.concatenate(
+            [val, jnp.zeros((pad, val.shape[1]), val.dtype)])
+    y = spmv_ell_pallas(col, val, x, block_rows=block_rows,
+                        interpret=interpret)
+    return y[:n_rows]

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the ELL SpMV kernel."""
+
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(col, val, x):
+    xg = jnp.take(x, col, mode="fill", fill_value=0)
+    return jnp.sum(val * xg, axis=1).astype(x.dtype)

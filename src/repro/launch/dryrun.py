@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable (e)).
+
+For every (architecture × input shape) cell, lower + compile the step on the
+production mesh — 16×16 single-pod AND 2×16×16 multi-pod — and record
+memory_analysis / cost_analysis / collective traffic for EXPERIMENTS.md.
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count at first init); do not move it.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--both]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepfm --shape train_batch
+Results land in experiments/dryrun/*.json.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SkipCell, get_arch, list_archs
+from repro.launch.hlo_analysis import analyse
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch_id: str, shape: str, multi_pod: bool, save: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch_id}__{shape}__{mesh_name}".replace("/", "_")
+    spec = get_arch(arch_id)
+
+    t0 = time.time()
+    case = spec.make_dryrun_case(shape, mesh)
+    if isinstance(case, SkipCell):
+        rec = dict(arch=arch_id, shape=shape, mesh=mesh_name, status="skip",
+                   reason=case.reason)
+        _emit(tag, rec, save)
+        return rec
+
+    build_s = time.time() - t0
+    jit_kwargs = {}
+    if case.in_shardings is not None:
+        jit_kwargs["in_shardings"] = case.in_shardings
+    if case.out_shardings is not None:
+        jit_kwargs["out_shardings"] = case.out_shardings
+    if "train" in case.comment:
+        # donate params/opt-state: the updated pytrees alias their inputs
+        # (in-place update — halves the apparent working set, and is how the
+        # production trainer runs anyway)
+        jit_kwargs["donate_argnums"] = (0, 1)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(case.fn, **jit_kwargs).lower(*case.args)
+        lower_s = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    roof, coll = analyse(compiled, "", n_chips, case.model_flops)
+    rec = dict(
+        arch=arch_id, shape=shape, mesh=mesh_name, status="ok",
+        comment=case.comment,
+        build_s=round(build_s, 2), lower_s=round(lower_s, 2),
+        compile_s=round(compile_s, 2),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            code_bytes=mem.generated_code_size_in_bytes,
+            total_per_device=mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes),
+        collectives=coll,
+        roofline=roof.to_dict(),
+    )
+    _emit(tag, rec, save)
+    return rec
+
+
+def _emit(tag, rec, save):
+    line = f"[{rec['mesh']}] {rec['arch']}/{rec['shape']}: {rec['status']}"
+    if rec["status"] == "ok":
+        r = rec["roofline"]
+        m = rec["memory"]
+        line += (f" compile={rec['compile_s']}s "
+                 f"args={m['argument_bytes']/2**30:.2f}GiB "
+                 f"temp={m['temp_bytes']/2**30:.2f}GiB "
+                 f"flops={r['hlo_flops']:.3e} coll={r['coll_bytes']:.3e}B "
+                 f"bottleneck={r['bottleneck']} "
+                 f"roofline={r['roofline_fraction']:.3f}")
+    else:
+        line += f" ({rec['reason'][:90]})"
+    print(line, flush=True)
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(os.path.join(OUT_DIR, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run 16x16 and 2x16x16")
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    meshes = [False, True] if args.both else [args.multi_pod]
+    failures = []
+    for arch_id in archs:
+        spec = get_arch(arch_id)
+        shapes = [args.shape] if args.shape else spec.shapes
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch_id, shape, mp, save=not args.no_save)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures.append((arch_id, shape, mp, repr(e)))
+                    print(f"[{'2x16x16' if mp else '16x16'}] {arch_id}/{shape}"
+                          f": FAIL {e!r}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run cells passed.")
+
+
+if __name__ == "__main__":
+    main()

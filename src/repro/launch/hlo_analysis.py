@@ -1,0 +1,133 @@
+"""Compiled-HLO analysis: collective-traffic extraction + roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes accessed but NOT collective
+bytes; those are recovered by parsing the optimised HLO text and summing the
+result-shape sizes of every communication op (assignment §ROOFLINE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s/#*]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+        total += numel * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind (whole-program totals).
+
+    ``-done`` ops repeat the ``-start`` result shape; only starts (and
+    un-suffixed sync forms) are counted.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip("(").endswith("-done("):
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    return dict(bytes_by_kind=out, counts=counts,
+                total_bytes=sum(out.values()))
+
+
+@dataclasses.dataclass
+class Roofline:
+    n_chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.n_chips * PEAK_FLOPS_BF16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / (self.n_chips * ICI_BW_PER_LINK)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = dict(compute=self.compute_s, memory=self.memory_s,
+                     collective=self.collective_s)
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-FLOPs time / achievable time ≈ how close the step is to the
+        hardware roof for its useful work."""
+        t_useful = self.model_flops / (self.n_chips * PEAK_FLOPS_BF16)
+        t_bound = max(self.compute_s, self.memory_s, self.collective_s)
+        return t_useful / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return dict(n_chips=self.n_chips, hlo_flops=self.hlo_flops,
+                    hlo_bytes=self.hlo_bytes, coll_bytes=self.coll_bytes,
+                    model_flops=self.model_flops, compute_s=self.compute_s,
+                    memory_s=self.memory_s, collective_s=self.collective_s,
+                    bottleneck=self.bottleneck,
+                    useful_flops_ratio=self.useful_flops_ratio,
+                    roofline_fraction=self.roofline_fraction)
+
+
+def analyse(compiled, lowered_text: str, n_chips: int, model_flops: float):
+    """Roofline terms from the compiled partitioned module.
+
+    Uses the trip-count-aware HLO cost model (repro.launch.hlo_cost): XLA's
+    own cost_analysis counts while bodies once and reports per-partition
+    numbers — wrong for scanned layers / scanned PCG iterations. Parsed
+    values are per-device; globals scale by n_chips. XLA raw numbers are
+    kept alongside for reference.
+    """
+    from repro.launch.hlo_cost import analyse_hlo
+
+    ca = compiled.cost_analysis() or {}
+    parsed = analyse_hlo(compiled.as_text())
+    coll = dict(bytes_by_kind=parsed["coll_bytes"],
+                counts=parsed["coll_counts"],
+                total_bytes=parsed["total_coll_bytes"] * n_chips,
+                xla_raw_flops_per_device=float(ca.get("flops", 0.0)),
+                xla_raw_bytes_per_device=float(ca.get("bytes accessed", 0.0)))
+    return Roofline(
+        n_chips=n_chips,
+        hlo_flops=parsed["flops"] * n_chips,
+        hlo_bytes=parsed["hbm_bytes"] * n_chips,
+        coll_bytes=parsed["total_coll_bytes"] * n_chips,
+        model_flops=model_flops), coll

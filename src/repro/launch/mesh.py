@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialisation).
+
+Single pod: 16×16 = 256 chips (v5e pod), axes ("data", "model") — the same
+√P×√P grid the paper's CombBLAS layout requires. Multi-pod: 2×16×16 = 512
+chips with a leading "pod" axis; the solver splits edge lists across pods
+(removing the paper's square-processor-count constraint), the LM stack folds
+"pod" into data parallelism.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for subprocess integration tests."""
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+# TPU v5e constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s/link

@@ -1,0 +1,3 @@
+from repro.models.sharding import ShardingPlan, make_lm_plan
+
+__all__ = ["ShardingPlan", "make_lm_plan"]

@@ -1,0 +1,13 @@
+from repro.models.gnn.common import GraphBatch, segment_mean_max
+from repro.models.gnn.meshgraphnet import MeshGraphNetConfig, init_mgn, mgn_forward
+from repro.models.gnn.egnn import EGNNConfig, init_egnn, egnn_forward
+from repro.models.gnn.pna import PNAConfig, init_pna, pna_forward
+from repro.models.gnn.equiformer import EquiformerConfig, init_equiformer, equiformer_forward
+
+__all__ = [
+    "GraphBatch", "segment_mean_max",
+    "MeshGraphNetConfig", "init_mgn", "mgn_forward",
+    "EGNNConfig", "init_egnn", "egnn_forward",
+    "PNAConfig", "init_pna", "pna_forward",
+    "EquiformerConfig", "init_equiformer", "equiformer_forward",
+]

@@ -1,0 +1,113 @@
+"""Shared GNN substrate: graph batches, MLPs, segment aggregations.
+
+Message passing here IS the paper's semiring SpMV specialised to the sum
+semiring with dense payloads (DESIGN.md §6): gather at edge sources,
+transform, ``segment_sum`` at destinations. JAX has no torch-geometric —
+this substrate is built from the same ``repro.sparse.segment`` primitives as
+the solver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.segment import segment_mean, segment_std
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """Padded graph (or batch of graphs flattened into one).
+
+    ``senders``/``receivers``: [E] int32, sentinel = n_nodes for padding.
+    ``node_feat``: [N, d]; optional positions [N, 3] and edge feats [E, de].
+    """
+
+    senders: jax.Array
+    receivers: jax.Array
+    node_feat: jax.Array
+    edge_feat: Optional[jax.Array] = None
+    pos: Optional[jax.Array] = None
+    graph_id: Optional[jax.Array] = None   # [N] for batched small graphs
+
+    @property
+    def n_nodes(self) -> int:
+        return self.node_feat.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.senders.shape[0]
+
+    @property
+    def edge_valid(self) -> jax.Array:
+        return self.senders < self.n_nodes
+
+
+def gather_src(g: GraphBatch, x: jax.Array) -> jax.Array:
+    return jnp.take(x, g.senders, axis=0, mode="fill", fill_value=0)
+
+
+def gather_dst(g: GraphBatch, x: jax.Array) -> jax.Array:
+    return jnp.take(x, g.receivers, axis=0, mode="fill", fill_value=0)
+
+
+def scatter_sum(g: GraphBatch, msgs: jax.Array) -> jax.Array:
+    return jax.ops.segment_sum(
+        jnp.where(g.edge_valid[:, None], msgs, 0), g.receivers,
+        num_segments=g.n_nodes)
+
+
+def segment_mean_max(g: GraphBatch, msgs: jax.Array):
+    m = jnp.where(g.edge_valid[:, None], msgs, 0)
+    s = jax.ops.segment_sum(m, g.receivers, num_segments=g.n_nodes)
+    cnt = jax.ops.segment_sum(g.edge_valid.astype(msgs.dtype), g.receivers,
+                              num_segments=g.n_nodes)[:, None]
+    mean = s / jnp.maximum(cnt, 1)
+    neg = jnp.finfo(msgs.dtype).min
+    mx = jax.ops.segment_max(jnp.where(g.edge_valid[:, None], msgs, neg),
+                             g.receivers, num_segments=g.n_nodes)
+    mx = jnp.where(cnt > 0, mx, 0)
+    return mean, mx, cnt
+
+
+# ----------------------------------------------------------------------------
+# tiny MLP substrate (framework-free)
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, sizes, dtype=jnp.float32, layernorm_out=False):
+    ks = jax.random.split(key, len(sizes))
+    params = {"w": [], "b": []}
+    for i in range(len(sizes) - 1):
+        fan = sizes[i]
+        params["w"].append(jax.random.normal(ks[i], (sizes[i], sizes[i + 1]),
+                                             dtype) / jnp.sqrt(fan))
+        params["b"].append(jnp.zeros((sizes[i + 1],), dtype))
+    if layernorm_out:
+        params["ln_scale"] = jnp.ones((sizes[-1],), dtype)
+        params["ln_bias"] = jnp.zeros((sizes[-1],), dtype)
+    return params
+
+
+def mlp_apply(params, x, act=jax.nn.silu, final_act=False):
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        x = x @ w + b
+        if i < n - 1 or final_act:
+            x = act(x)
+    if "ln_scale" in params:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-6)
+        x = x * params["ln_scale"] + params["ln_bias"]
+    return x
+
+
+def rbf_encode(dist, n_basis=16, r_max=5.0):
+    """Gaussian radial basis (SchNet-style) for edge distances."""
+    centers = jnp.linspace(0.0, r_max, n_basis, dtype=dist.dtype)
+    gamma = n_basis / r_max
+    return jnp.exp(-gamma * jnp.square(dist[..., None] - centers))

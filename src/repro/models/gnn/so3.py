@@ -1,0 +1,166 @@
+"""SO(3) machinery for EquiformerV2's eSCN convolutions.
+
+Real spherical harmonics up to ``l_max`` are evaluated with the pole-free
+polynomial recurrences (sectoral (2m−1)!! terms absorb sinᵐθ into
+Re/Im((x+iy)ᵐ), so everything is a polynomial in the unit direction — no
+divisions, fully vmappable).
+
+Wigner rotation matrices use the *sampled* construction: degree-l harmonics
+are closed under rotation, so with K = (l_max+1)² generic sample directions
+X, the matrix ``Y(R X) · Y(X)⁻¹`` is the exact rotation operator in harmonic
+space. This is the TPU adaptation choice (DESIGN.md §2): it replaces eSCN's
+bespoke recursive Wigner formulas with batched dense matmuls — worse constant
+FLOPs per edge, but entirely MXU-shaped and computed once per edge geometry,
+amortised over all layers.
+
+Orientation convention: ``frame_from_direction`` returns R with R @ ê = ẑ;
+rotating features by D(R) expresses them in the edge-aligned frame where
+z-rotations act block-diagonally on (m, −m) pairs — the structure the SO(2)
+convolution in ``equiformer.py`` exploits.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def n_coeffs(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def real_sph_harm(dirs, l_max: int, xp=jnp):
+    """dirs [..., 3] (unit) -> [..., (l_max+1)²] real SH, index l²+l+m.
+
+    ``xp=np`` runs the identical recurrences in pure numpy — used by the
+    host-side sample-inverse construction, which must never be staged (under
+    ``jax.set_mesh`` even constant jnp ops inside a trace become tracers).
+    """
+    jnp = xp  # noqa: F841 — shadow so the body below works for both backends
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    # c_m + i s_m = (x + i y)^m  (Chebyshev-style recurrence, pole-free)
+    cs = [jnp.ones_like(x)]
+    sn = [jnp.zeros_like(x)]
+    for m in range(1, l_max + 1):
+        c_prev, s_prev = cs[-1], sn[-1]
+        cs.append(c_prev * x - s_prev * y)
+        sn.append(s_prev * x + c_prev * y)
+
+    # T[l][m] = P_l^m(z) / sin^m θ  (polynomial in z), via upward recurrence
+    T = [[None] * (l_max + 1) for _ in range(l_max + 1)]
+    for m in range(l_max + 1):
+        # sectoral: T_m^m = (-1)^m (2m-1)!!
+        dfact = 1.0
+        for k in range(1, m + 1):
+            dfact *= 2 * k - 1
+        T[m][m] = jnp.full_like(z, ((-1.0) ** m) * dfact)
+        if m + 1 <= l_max:
+            T[m + 1][m] = z * (2 * m + 1) * T[m][m]
+        for l in range(m + 1, l_max):
+            T[l + 1][m] = ((2 * l + 1) * z * T[l][m]
+                           - (l + m) * T[l - 1][m]) / (l - m + 1)
+
+    out = []
+    for l in range(l_max + 1):
+        row = [None] * (2 * l + 1)
+        for m in range(0, l + 1):
+            nlm = math.sqrt((2 * l + 1) / (4 * math.pi)
+                            * math.factorial(l - m) / math.factorial(l + m))
+            if m == 0:
+                row[l] = nlm * T[l][0]
+            else:
+                row[l + m] = math.sqrt(2) * nlm * T[l][m] * cs[m]
+                row[l - m] = math.sqrt(2) * nlm * T[l][m] * sn[m]
+        out.extend(row)
+    return xp.stack(out, axis=-1)
+
+
+@lru_cache(maxsize=8)
+def _sample_inverses(l_max: int, seed: int = 7):
+    """Host-side: sample directions X and per-l inverse blocks of Y(X)."""
+    rng = np.random.default_rng(seed)
+    K = n_coeffs(l_max)
+    pts = rng.normal(size=(4 * K, 3))
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    import scipy.linalg
+
+    # pure-numpy evaluation: this must stay host-side even when first called
+    # inside a jit trace (constants under jax.set_mesh would be staged)
+    Y = real_sph_harm(pts.astype(np.float32), l_max, xp=np)
+    # pick K well-conditioned rows greedily (QR pivoting)
+    _, _, piv = scipy.linalg.qr(Y.T, pivoting=True, mode="economic")
+    sel = piv[:K]
+    X = pts[sel]
+    Yx = Y[sel]                                    # [K, K]
+    invs = []
+    for l in range(l_max + 1):
+        lo, hi = l * l, (l + 1) * (l + 1)
+        block = Yx[:, lo:hi]                       # [K, 2l+1]
+        invs.append(np.linalg.pinv(block))         # [2l+1, K]
+    return jnp.asarray(X, jnp.float32), [jnp.asarray(i, jnp.float32) for i in invs]
+
+
+def frame_from_direction(d: jax.Array) -> jax.Array:
+    """[..., 3] unit vectors -> R [..., 3, 3] with R @ d = ẑ (deterministic)."""
+    x, y, z = d[..., 0], d[..., 1], d[..., 2]
+    # pick a reference not parallel to d (smooth deterministic switch)
+    near_pole = jnp.abs(z) > 0.99
+    ref = jnp.where(near_pole[..., None],
+                    jnp.stack([jnp.ones_like(x), jnp.zeros_like(x),
+                               jnp.zeros_like(x)], -1),
+                    jnp.stack([jnp.zeros_like(x), jnp.zeros_like(x),
+                               jnp.ones_like(x)], -1))
+    u = jnp.cross(ref, d)
+    u = u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True), 1e-12)
+    v = jnp.cross(d, u)
+    # rows of R are the new basis: R @ d = ẑ
+    return jnp.stack([u, v, d], axis=-2)
+
+
+def wigner_from_rotation(R: jax.Array, l_max: int) -> list:
+    """R [..., 3, 3] -> list of D_l [..., 2l+1, 2l+1] with
+    Y(R x) = D_l @ Y(x) per degree block (exact for generic samples)."""
+    X, invs = _sample_inverses(l_max)
+    RX = jnp.einsum("...ij,kj->...ki", R, X)        # [..., K, 3]
+    Yr = real_sph_harm(RX, l_max)                    # [..., K, (L+1)²]
+    out = []
+    for l in range(l_max + 1):
+        lo, hi = l * l, (l + 1) ** 2
+        # D_l[a, b]: Y_a(Rx) = Σ_b D[a,b] Y_b(x)  -> D = (pinv @ Yr_block)^T
+        D = jnp.einsum("bk,...ka->...ab", invs[l], Yr[..., lo:hi])
+        out.append(D)
+    return out
+
+
+def pack_wigner(D_blocks: list) -> jax.Array:
+    """[..., 2l+1, 2l+1] blocks -> packed [..., Σ(2l+1)²] (cross-layer reuse)."""
+    return jnp.concatenate(
+        [d.reshape(d.shape[:-2] + (-1,)) for d in D_blocks], axis=-1)
+
+
+def unpack_wigner(packed: jax.Array, l_max: int) -> list:
+    out = []
+    off = 0
+    for l in range(l_max + 1):
+        k = (2 * l + 1) ** 2
+        out.append(packed[..., off: off + k].reshape(
+            packed.shape[:-1] + (2 * l + 1, 2 * l + 1)))
+        off += k
+    return out
+
+
+def rotate_coeffs(coeffs: jax.Array, D_blocks: list, l_max: int,
+                  transpose: bool = False) -> jax.Array:
+    """coeffs [..., (L+1)², C]; apply block-diag D (or Dᵀ = inverse)."""
+    outs = []
+    for l in range(l_max + 1):
+        lo, hi = l * l, (l + 1) ** 2
+        blk = coeffs[..., lo:hi, :]
+        D = D_blocks[l]
+        eq = "...ba,...bc->...ac" if transpose else "...ab,...bc->...ac"
+        outs.append(jnp.einsum(eq, D, blk))
+    return jnp.concatenate(outs, axis=-2)

@@ -1,0 +1,7 @@
+from repro.models.recsys.embedding import embedding_bag, hashed_lookup
+from repro.models.recsys.deepfm import (DeepFMConfig, init_deepfm,
+                                        deepfm_forward, deepfm_loss,
+                                        fm_retrieval_scores)
+
+__all__ = ["embedding_bag", "hashed_lookup", "DeepFMConfig", "init_deepfm",
+           "deepfm_forward", "deepfm_loss", "fm_retrieval_scores"]

@@ -1,0 +1,47 @@
+"""Embedding substrate: JAX has no ``nn.EmbeddingBag`` — built here from
+``jnp.take`` + ``segment_sum`` (the same gather/scatter primitives as the
+solver's semiring SpMV; an embedding-bag IS a sum-semiring SpMV with one-hot
+rows). The Pallas kernel in ``repro/kernels/embedding_bag`` accelerates the
+single-table hot path; this module is the reference/composition layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None,
+                  mode: str = "sum") -> jax.Array:
+    """table [V, d]; indices [..., H] (out-of-range = padding) -> [..., d].
+
+    Multi-hot bags reduce over the trailing H axis. ``mode``: sum|mean.
+    """
+    V = table.shape[0]
+    vecs = jnp.take(table, indices, axis=0, mode="fill", fill_value=0)
+    valid = (indices >= 0) & (indices < V)
+    if weights is not None:
+        vecs = vecs * weights[..., None]
+    vecs = jnp.where(valid[..., None], vecs, 0)
+    out = jnp.sum(vecs, axis=-2)
+    if mode == "mean":
+        out = out / jnp.maximum(valid.sum(axis=-1, keepdims=True), 1)
+    return out
+
+
+def hashed_lookup(table: jax.Array, raw_ids: jax.Array, n_hashes: int = 2
+                  ) -> jax.Array:
+    """Hashing-trick lookup (QR-embedding style collision mitigation):
+    sum of ``n_hashes`` independently-hashed rows. Lets a 10⁸-id space live
+    in a 10⁶-row table — the paper's random-hash load-balancing idea applied
+    to feature ids."""
+    V = table.shape[0]
+    out = 0
+    x = raw_ids.astype(jnp.uint32)
+    for i in range(n_hashes):
+        x = (x ^ (x >> 16)) * jnp.uint32(0x45D9F3B + 2 * i + 1)
+        x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+        h = (x ^ (x >> 16)) % jnp.uint32(V)
+        out = out + jnp.take(table, h.astype(jnp.int32), axis=0)
+    return out

@@ -1,0 +1,116 @@
+"""Sharding plans: where DP / TP / EP / SP axes land for each model family.
+
+A plan is a bag of ``PartitionSpec``s plus the mesh; models call
+``plan.shard(x, "activation_name")`` at the few points where GSPMD needs a
+hint (post-embedding activations, attention outputs, MoE dispatch buffers).
+With ``plan=None`` every call is the identity — single-device smoke tests
+never touch device placement.
+
+Axis conventions (DESIGN.md §5/§6):
+  batch  -> ("pod", "data")   data parallelism (pod axis folds into DP)
+  heads / d_ff / vocab / experts -> "model"   tensor / expert parallelism
+  sequence -> optional "data" sharding for long-context (SP)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    mesh: Optional[jax.sharding.Mesh]
+    specs: dict
+    moe_token_shards: int = 1   # DP-axis size: MoE dispatch partitions per shard
+
+    def spec(self, name: str) -> P:
+        return self.specs.get(name, P())
+
+    def shard(self, x, name: str):
+        if self.mesh is None or name not in self.specs:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.specs[name]))
+
+    def named(self, name: str):
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(name))
+
+
+def _dp_axes(mesh) -> tuple:
+    return ("pod", "data") if (mesh is not None and "pod" in mesh.axis_names) \
+        else ("data",)
+
+
+def null_plan() -> ShardingPlan:
+    return ShardingPlan(mesh=None, specs={})
+
+
+def make_lm_plan(mesh, seq_sharded: bool = False) -> ShardingPlan:
+    """Megatron-style DP×TP (+EP over 'model'); optional sequence sharding."""
+    dp = _dp_axes(mesh)
+    seq = dp if seq_sharded else None
+    specs = {
+        # --- params -----------------------------------------------------
+        "embed": P(None, "model"),          # [V, d]
+        "wq": P(None, None, "model"),       # [L, d, H*dh] heads sharded
+        "wkv": P(None, None, "model"),
+        "wo": P(None, "model", None),
+        "w_in": P(None, None, "model"),     # [L, d, ff]
+        "w_out": P(None, "model", None),    # [L, ff, d]
+        "moe_w_in": P(None, "model", None, None),    # [L, E, d, ff_e]
+        "moe_w_out": P(None, "model", None, None),   # [L, E, ff_e, d]
+        "router": P(),                       # [L, d, E] tiny, replicated
+        "norm": P(),
+        "lm_head": P(None, "model"),         # [d, V]
+        "bias_model": P(None, "model"),      # biases of model-sharded matmuls
+        # --- activations --------------------------------------------------
+        "tokens": P(dp, None),               # [B, S]
+        "act": P(dp, "model" if seq_sharded else None, None) if seq_sharded
+               else P(dp, None, None),       # [B, S, d]
+        "act_heads": P(dp, None, "model", None),   # [B, S, H, dh]
+        "logits": P(dp, None, "model"),      # [B, S, V]
+        "kv_cache": P(dp, None, "model", None),    # [B, S, n_kv, dh]
+        "moe_buf": P(dp, "model", None, None),     # [shards, E, cap, d]
+        "loss": P(),
+    }
+    shards = 1
+    if mesh is not None:
+        for ax in dp:
+            shards *= mesh.shape[ax]
+    return ShardingPlan(mesh=mesh, specs=specs, moe_token_shards=shards)
+
+
+def make_gnn_plan(mesh) -> ShardingPlan:
+    """Edge-parallel message passing: the paper's 1D fallback for O(n)-work
+    objects — edges sharded over all devices, node states replicated over
+    'model' (full 2D partitioning is exercised by the solver itself)."""
+    dp = _dp_axes(mesh)
+    specs = {
+        "edge_index": P(None, (dp + ("model",))),   # [2, E] edges sharded
+        "edge_feat": P((dp + ("model",)), None),
+        "node_feat": P(),                             # replicated [N, d]
+        "pos": P(),
+        "batch_nodes": P(dp, None),                   # batched small graphs
+        "params": P(),
+    }
+    return ShardingPlan(mesh=mesh, specs=specs)
+
+
+def make_recsys_plan(mesh) -> ShardingPlan:
+    dp = _dp_axes(mesh)
+    specs = {
+        "table": P("model", None),       # [rows, dim] row-sharded tables
+        "dense_w": P(),
+        "batch": P(dp),                  # [B, ...] inputs
+        "batch2": P(dp, None),
+        "batch3": P(dp, None, None),
+        "act": P(dp, None),
+        "candidates": P(("model",), None),   # [n_cand, d] sharded scoring
+        "loss": P(),
+    }
+    return ShardingPlan(mesh=mesh, specs=specs)

@@ -1,0 +1,422 @@
+"""Decoder-only transformer family: GQA + RoPE (+ QKV bias) dense FFN or MoE.
+
+One parameterisation covers all five assigned LM architectures
+(qwen2.5-3b, starcoder2-3b, qwen2-0.5b dense; arctic-480b, moonshot MoE).
+Layers are *stacked* ([L, ...] leading axis) and applied with ``lax.scan`` so
+the lowered HLO contains each layer once — this is what keeps 512-device
+dry-run compiles seconds-cheap and is also the production choice (compile
+time scales O(1) in depth).
+
+Implemented training step: causal LM cross-entropy. Serving step: one-token
+decode against a static KV cache (``decode_*`` shapes). MoE uses capacity-
+based top-k dispatch (GShard-style) with optional *dense residual* branch
+(arctic) and *shared experts* (moonshot/DeepSeek lineage), experts sharded
+over the "model" axis (EP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import ShardingPlan, null_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    dense_residual: bool = False   # arctic: dense FFN + MoE in parallel
+    n_shared: int = 0              # moonshot/DeepSeek shared experts
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    dtype: jnp.dtype = jnp.bfloat16
+    # memory controls (production defaults): remat recomputes each layer in
+    # the backward pass; q_chunk bounds the attention-score working set to
+    # [B, H, q_chunk, S] (row-exact softmax — no online rescaling needed
+    # since full key rows are kept).
+    remat: bool = True
+    q_chunk: Optional[int] = 1024
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Total parameters (N for the 6·N·D model-FLOPs accounting)."""
+        d, L = self.d_model, self.n_layers
+        attn = d * self.n_heads * self.d_head + 2 * d * self.n_kv_heads * self.d_head \
+            + self.n_heads * self.d_head * d
+        if self.qkv_bias:
+            attn += (self.n_heads + 2 * self.n_kv_heads) * self.d_head
+        ffn = 3 * d * self.d_ff  # gated (SwiGLU) dense branch
+        per_layer = attn + 2 * d  # + norms
+        if self.moe is None:
+            per_layer += ffn
+        else:
+            m = self.moe
+            per_layer += m.n_experts * 3 * d * m.d_ff_expert + d * m.n_experts
+            per_layer += m.n_shared * 3 * d * m.d_ff_expert
+            if m.dense_residual:
+                per_layer += ffn
+        return L * per_layer + 2 * self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        """Active-per-token parameters (MoE: only routed-to experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, L, m = self.d_model, self.n_layers, self.moe
+        total = self.param_count()
+        routed_all = L * m.n_experts * 3 * d * m.d_ff_expert
+        routed_active = L * m.top_k * 3 * d * m.d_ff_expert
+        return total - routed_all + routed_active
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    d, L = cfg.d_model, cfg.n_layers
+    dh, H, Hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    k = iter(jax.random.split(key, 24))
+    s = lambda *shape: (jax.random.normal(next(k), shape, cfg.dtype)
+                        * (0.02 if len(shape) <= 2 else 0.02))
+    p = dict(
+        embed=s(cfg.vocab, d),
+        final_norm=jnp.ones((d,), cfg.dtype),
+        lm_head=s(d, cfg.vocab),
+        attn_norm=jnp.ones((L, d), cfg.dtype),
+        ffn_norm=jnp.ones((L, d), cfg.dtype),
+        wq=s(L, d, H * dh),
+        wk=s(L, d, Hkv * dh),
+        wv=s(L, d, Hkv * dh),
+        wo=s(L, H * dh, d),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((L, H * dh), cfg.dtype)
+        p["bk"] = jnp.zeros((L, Hkv * dh), cfg.dtype)
+        p["bv"] = jnp.zeros((L, Hkv * dh), cfg.dtype)
+    if cfg.moe is None or cfg.moe.dense_residual:
+        p["w_gate"] = s(L, d, cfg.d_ff)
+        p["w_up"] = s(L, d, cfg.d_ff)
+        p["w_down"] = s(L, cfg.d_ff, d)
+    if cfg.moe is not None:
+        m = cfg.moe
+        p["router"] = s(L, d, m.n_experts)
+        p["moe_gate"] = s(L, m.n_experts, d, m.d_ff_expert)
+        p["moe_up"] = s(L, m.n_experts, d, m.d_ff_expert)
+        p["moe_down"] = s(L, m.n_experts, m.d_ff_expert, d)
+        if m.n_shared:
+            p["shared_gate"] = s(L, d, m.n_shared * m.d_ff_expert)
+            p["shared_up"] = s(L, d, m.n_shared * m.d_ff_expert)
+            p["shared_down"] = s(L, m.n_shared * m.d_ff_expert, d)
+    return p
+
+
+def param_specs(cfg: TransformerConfig, plan: ShardingPlan) -> dict:
+    """PartitionSpec pytree matching init_params' structure."""
+    from jax.sharding import PartitionSpec as P
+
+    sp = dict(
+        embed=plan.spec("embed"),
+        final_norm=plan.spec("norm"),
+        lm_head=plan.spec("lm_head"),
+        attn_norm=plan.spec("norm"),
+        ffn_norm=plan.spec("norm"),
+        wq=plan.spec("wq"), wk=plan.spec("wkv"), wv=plan.spec("wkv"),
+        wo=plan.spec("wo"),
+    )
+    if cfg.qkv_bias:
+        sp["bq"] = plan.spec("bias_model")
+        sp["bk"] = plan.spec("bias_model")
+        sp["bv"] = plan.spec("bias_model")
+    if cfg.moe is None or cfg.moe.dense_residual:
+        sp["w_gate"] = plan.spec("w_in")
+        sp["w_up"] = plan.spec("w_in")
+        sp["w_down"] = plan.spec("w_out")
+    if cfg.moe is not None:
+        sp["router"] = plan.spec("router")
+        sp["moe_gate"] = plan.spec("moe_w_in")
+        sp["moe_up"] = plan.spec("moe_w_in")
+        sp["moe_down"] = plan.spec("moe_w_out")
+        if cfg.moe.n_shared:
+            sp["shared_gate"] = plan.spec("w_in")
+            sp["shared_up"] = plan.spec("w_in")
+            sp["shared_down"] = plan.spec("w_out")
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope(x, positions, theta):
+    """x: [..., S, H, dh]; rotate pairs (standard LLaMA/Qwen RoPE)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # [.., S, half]
+    cos = jnp.cos(ang)[..., :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _attn_block(q, k, v, q_start, causal_offset):
+    """q: [B,Sq,Hkv,g,dh] block starting at ``q_start``; full k/v rows."""
+    B, Sq, Hkv, g, dh = q.shape
+    T = k.shape[1]
+    scores = jnp.einsum("bshgd,bthd->bhgst", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    if causal_offset is not None:
+        qi = q_start + jnp.arange(Sq)[:, None] + causal_offset
+        ki = jnp.arange(T)[None, :]
+        mask = (ki <= qi)[None, None, None]
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgst,bthd->bshgd", w, v)
+
+
+def gqa_attention(q, k, v, causal_offset=None, q_chunk=None):
+    """q: [B,S,H,dh], k/v: [B,T,Hkv,dh]. GQA: H = g·Hkv.
+
+    ``q_chunk`` streams query blocks through a scan so the [.., S, T] score
+    tensor never materialises beyond one block (exact softmax: each block
+    keeps its full key row)."""
+    B, S, H, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    q = q.reshape(B, S, Hkv, g, dh)
+    if q_chunk is None or S <= q_chunk or S % q_chunk != 0:
+        out = _attn_block(q, k, v, 0, causal_offset)
+        return out.reshape(B, S, H, dh)
+    nq = S // q_chunk
+    qs = jnp.moveaxis(q.reshape(B, nq, q_chunk, Hkv, g, dh), 1, 0)
+    starts = jnp.arange(nq) * q_chunk
+
+    def body(_, inp):
+        qb, st = inp
+        return None, _attn_block(qb, k, v, st, causal_offset)
+
+    _, outs = jax.lax.scan(body, None, (qs, starts))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hkv, g, dh)
+    return out.reshape(B, S, H, dh)
+
+
+def dense_ffn(x, gate, up, down):
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(jnp.einsum("bsd,df->bsf", x, gate))
+                      * jnp.einsum("bsd,df->bsf", x, up), down)
+
+
+def moe_ffn(x, lw, m: MoEConfig, plan: ShardingPlan):
+    """Capacity-based top-k dispatch (GShard); experts over the 'model' axis.
+
+    Dispatch positions are computed PER TOKEN SHARD (``plan.moe_token_shards``
+    leading axis = the DP axis size) so the cumsum/one-hot bookkeeping and
+    expert queues partition: the dispatch buffer is [shards, E, cap_local, d]
+    sharded (dp, model) — XLA inserts the token↔expert all-to-all. With one
+    shard this degenerates to plain GShard dispatch (smoke-test path).
+    Overflow beyond capacity_factor drops (standard GShard semantics).
+    """
+    B, S, d = x.shape
+    T = B * S
+    shards = getattr(plan, "moe_token_shards", 1) or 1
+    if T % shards != 0:
+        shards = 1
+    Tl = T // shards
+    xt = x.reshape(shards, Tl, d)
+    logits = jnp.einsum("std,de->ste", xt, lw["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, m.top_k)            # [s, Tl, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(m.capacity_factor * Tl * m.top_k / m.n_experts),
+              m.top_k, 1)
+    onehot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.int32)  # [s,Tl,k,E]
+    flat = onehot.reshape(shards, Tl * m.top_k, m.n_experts)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1
+    pos = pos.max(axis=-1).reshape(shards, Tl, m.top_k)
+    keep = (pos < cap) & (pos >= 0)
+
+    e_flat = idx.reshape(shards, -1)                             # [s, Tl*k]
+    p_flat = jnp.where(keep, pos, cap).reshape(shards, -1)
+
+    def dispatch(xs, ef, pf):
+        buf = jnp.zeros((m.n_experts, cap + 1, d), x.dtype)
+        return buf.at[ef, pf].add(
+            jnp.repeat(xs, m.top_k, axis=0), mode="drop")[:, :cap]
+
+    buf = jax.vmap(dispatch)(xt, e_flat, p_flat)                 # [s,E,cap,d]
+    buf = plan.shard(buf, "moe_buf")
+
+    h = jax.nn.silu(jnp.einsum("secd,edf->secf", buf, lw["moe_gate"])) * \
+        jnp.einsum("secd,edf->secf", buf, lw["moe_up"])
+    out_buf = jnp.einsum("secf,efd->secd", h, lw["moe_down"])
+    out_buf = plan.shard(out_buf, "moe_buf")
+
+    def combine(ob, ef, pf, kp, gv):
+        g = ob[ef, jnp.minimum(pf, cap - 1)] * kp.reshape(-1, 1)  # [Tl*k, d]
+        out = jnp.zeros((Tl, d), x.dtype)
+        return out.at[jnp.repeat(jnp.arange(Tl), m.top_k)].add(
+            g * gv.reshape(-1, 1).astype(x.dtype))
+
+    out = jax.vmap(combine)(out_buf, e_flat, p_flat,
+                            keep.reshape(shards, -1), gate_vals)
+
+    if m.n_shared:
+        xf = xt.reshape(T, d)
+        shared = jax.nn.silu(xf @ lw["shared_gate"]) * (xf @ lw["shared_up"])
+        out = out.reshape(T, d) + shared @ lw["shared_down"]
+    return out.reshape(B, S, d)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _layer(cfg: TransformerConfig, plan: ShardingPlan, x, lw, positions,
+           kv_cache=None, cache_len=None):
+    """One transformer block. Returns (x, new_kv) — new_kv is (k, v) of this
+    call's tokens (cache update handled by the caller)."""
+    B, S, d = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+
+    h = rms_norm(x, lw["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, lw["wq"])
+    k = jnp.einsum("bsd,dh->bsh", h, lw["wk"])
+    v = jnp.einsum("bsd,dh->bsh", h, lw["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lw["bq"], k + lw["bk"], v + lw["bv"]
+    q = plan.shard(q.reshape(B, S, H, dh), "act_heads")
+    k = k.reshape(B, S, Hkv, dh)
+    v = v.reshape(B, S, Hkv, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        # insert new k/v at position cache_len (decode: S == 1)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_len, axis=1)
+        att = gqa_attention(q, ck, cv, causal_offset=cache_len,
+                            q_chunk=cfg.q_chunk)
+        new_kv = (ck, cv)
+    else:
+        att = gqa_attention(q, k, v, causal_offset=0, q_chunk=cfg.q_chunk)
+        new_kv = (k, v)
+
+    att = plan.shard(att, "act_heads")
+    x = x + jnp.einsum("bsx,xd->bsd", att.reshape(B, S, H * dh), lw["wo"])
+    x = plan.shard(x, "act")
+
+    h = rms_norm(x, lw["ffn_norm"], cfg.norm_eps)
+    if cfg.moe is None:
+        y = dense_ffn(h, lw["w_gate"], lw["w_up"], lw["w_down"])
+    else:
+        y = moe_ffn(h, lw, cfg.moe, plan)
+        if cfg.moe.dense_residual:
+            y = y + dense_ffn(h, lw["w_gate"], lw["w_up"], lw["w_down"])
+    x = plan.shard(x + y, "act")
+    return x, new_kv
+
+
+_STACKED = ("attn_norm", "ffn_norm", "wq", "wk", "wv", "wo", "bq", "bk", "bv",
+            "w_gate", "w_up", "w_down", "router", "moe_gate", "moe_up",
+            "moe_down", "shared_gate", "shared_up", "shared_down")
+
+
+def _split_stacked(params):
+    stacked = {k: v for k, v in params.items() if k in _STACKED}
+    rest = {k: v for k, v in params.items() if k not in _STACKED}
+    return stacked, rest
+
+
+def forward(cfg: TransformerConfig, params: dict, tokens: jax.Array,
+            plan: ShardingPlan = None) -> jax.Array:
+    """tokens [B, S] -> logits [B, S, V] (training / prefill path)."""
+    plan = plan or null_plan()
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = plan.shard(x, "act")
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    stacked, _ = _split_stacked(params)
+
+    def body(x, lw):
+        x, _ = _layer(cfg, plan, x, lw, positions)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stacked)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return plan.shard(logits, "logits")
+
+
+def lm_loss(cfg: TransformerConfig, params: dict, tokens: jax.Array,
+            plan: ShardingPlan = None) -> jax.Array:
+    """Next-token cross entropy (the train_step objective)."""
+    logits = forward(cfg, params, tokens[:, :-1], plan)
+    targets = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_len: int,
+                  dtype=None) -> tuple:
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def decode_step(cfg: TransformerConfig, params: dict, tokens: jax.Array,
+                kv_cache: tuple, cache_len, plan: ShardingPlan = None):
+    """One-token decode: tokens [B, 1]; kv_cache ([L,B,T,Hkv,dh] ×2).
+
+    Returns (logits [B, 1, V], new_cache). ``cache_len`` is the current
+    number of valid cache entries (traced scalar — static shapes).
+    """
+    plan = plan or null_plan()
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(cache_len + jnp.arange(S)[None], (B, S))
+    stacked, _ = _split_stacked(params)
+    ck, cv = kv_cache
+
+    def body(x, inp):
+        lw, ck_l, cv_l = inp
+        x, (nk, nv) = _layer(cfg, plan, x, lw, positions,
+                             kv_cache=(ck_l, cv_l), cache_len=cache_len)
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (stacked, ck, cv))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return plan.shard(logits, "logits"), (nk, nv)

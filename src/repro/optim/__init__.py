@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import compressed_psum, quantize_int8, dequantize_int8
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "compressed_psum", "quantize_int8", "dequantize_int8"]

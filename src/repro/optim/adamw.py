@@ -1,0 +1,108 @@
+"""AdamW + cosine schedule + global-norm clipping (no optax offline; this is
+the full implementation, pytree-generic, dtype-preserving: optimizer moments
+are fp32 regardless of bf16 params — standard mixed-precision practice)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # Moment precision: "f32" | "bf16" | "int8" (8-bit-Adam-style per-tensor
+    # quantised states, Dettmers et al. — at 480B params f32 moments alone
+    # are 3.8 TB; int8 states are what makes arctic-class training fit pods).
+    moments_dtype: str = "f32"
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def _q8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    return dict(q=jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8),
+                scale=scale)
+
+
+def _dq8(s):
+    return s["q"].astype(jnp.float32) * s["scale"]
+
+
+def _moment_zeros(p, dtype: str):
+    if dtype == "int8":
+        return dict(q=jnp.zeros(p.shape, jnp.int8),
+                    scale=jnp.zeros((), jnp.float32))
+    return jnp.zeros(p.shape, jnp.bfloat16 if dtype == "bf16" else jnp.float32)
+
+
+def _moment_load(m):
+    if isinstance(m, dict):
+        return _dq8(m)
+    return m.astype(jnp.float32)
+
+
+def _moment_store(m, like):
+    if isinstance(like, dict):
+        return _q8(m)
+    return m.astype(like.dtype)
+
+
+def adamw_init(params, cfg: AdamWConfig | None = None):
+    dtype = cfg.moments_dtype if cfg is not None else "f32"
+    zeros = lambda p: _moment_zeros(p, dtype)
+    return dict(mu=jax.tree.map(zeros, params),
+                nu=jax.tree.map(zeros, params),
+                step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m_store, v_store):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.beta1 * _moment_load(m_store) + (1 - cfg.beta1) * g
+        v = cfg.beta2 * _moment_load(v_store) + (1 - cfg.beta2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        new_p = p.astype(jnp.float32) - lr * (
+            mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32))
+        return (new_p.astype(p.dtype), _moment_store(m, m_store),
+                _moment_store(v, v_store))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, dict(mu=new_m, nu=new_v, step=step), dict(
+        grad_norm=gn, lr=lr)

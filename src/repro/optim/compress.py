@@ -1,0 +1,49 @@
+"""Gradient compression (beyond-paper distributed-optimization trick).
+
+int8 quantisation with per-tensor scale + error feedback (1-bit-Adam/EF-SGD
+lineage). ``compressed_psum`` replaces the data-parallel gradient all-reduce
+inside a ``shard_map`` trainer: ring traffic drops 4× (int8 vs f32). Here the
+all-gather + local-sum form is used (one hop); a production ring would chunk
+into reduce-scatter + all-gather of int8 — same arithmetic, noted in
+DESIGN.md.
+
+Error feedback keeps the quantisation *residual* per device and adds it to
+the next step's gradient, which restores convergence to the uncompressed
+fixed point (Karimireddy et al. 2019).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jax.Array, axis_name: str):
+    """Bandwidth-reduced psum over ``axis_name`` (inside shard_map)."""
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis_name)          # [P, ...] int8 (4× smaller)
+    ss = jax.lax.all_gather(scale, axis_name)      # [P] f32 (negligible)
+    return jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0))
+
+
+def ef_compress_grad(g: jax.Array, residual: jax.Array, axis_name: str):
+    """Error-feedback compressed gradient sync. Returns (g_sync, new_residual)."""
+    corrected = g + residual
+    q, scale = quantize_int8(corrected)
+    sent = dequantize_int8(q, scale)
+    new_residual = corrected - sent
+    qs = jax.lax.all_gather(q, axis_name)
+    ss = jax.lax.all_gather(scale, axis_name)
+    summed = jnp.tensordot(ss, qs.astype(jnp.float32), axes=(0, 0))
+    n = jax.lax.psum(1, axis_name)
+    return summed / n, new_residual

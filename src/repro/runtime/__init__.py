@@ -1,0 +1,3 @@
+from repro.runtime.loop import TrainLoopRunner, FailureInjector
+
+__all__ = ["TrainLoopRunner", "FailureInjector"]

@@ -1,0 +1,36 @@
+"""Sparse linear-algebra substrate.
+
+JAX has no CSR/CSC and no distributed sparse matrices; this package builds the
+pieces the paper's solver (and the GNN / recsys archs) need from first
+principles: a fixed-capacity padded COO container, an ELL container for the
+Pallas SpMV hot path, segment-reduction helpers (including the lexicographic
+"semiring" reductions CombBLAS expresses with custom ``oplus``), and
+conversions between them.
+"""
+
+from repro.sparse.coo import COO, coo_from_dense, spmv, spmm, row_sums, extract_diag
+from repro.sparse.ell import ELL, coo_to_ell, ell_spmv_ref
+from repro.sparse.segment import (
+    segment_sum,
+    segment_max,
+    segment_min,
+    segment_argmax_lex,
+    segment_argmin_lex,
+)
+
+__all__ = [
+    "COO",
+    "coo_from_dense",
+    "spmv",
+    "spmm",
+    "row_sums",
+    "extract_diag",
+    "ELL",
+    "coo_to_ell",
+    "ell_spmv_ref",
+    "segment_sum",
+    "segment_max",
+    "segment_min",
+    "segment_argmax_lex",
+    "segment_argmin_lex",
+]

@@ -1,0 +1,201 @@
+"""Fixed-capacity padded COO sparse matrices.
+
+TPU/XLA require static shapes, so every COO carries a fixed ``capacity`` of
+entry slots. Padding slots use the sentinel ``row = col = n_rows`` (one past
+the end) with ``val = 0``:
+
+* ``segment_*`` reductions with ``num_segments = n_rows`` silently drop
+  out-of-range ids, so padded entries never contribute to row reductions.
+* gathers use ``jnp.take(..., mode="fill")`` so padded column reads produce
+  the semiring identity instead of garbage.
+
+This mirrors how CombBLAS hands each rank a local block of dynamic nnz — the
+static-shape port pads each block to a capacity chosen by the partitioner
+(random vertex ordering keeps the per-block nnz balanced, which is what makes
+this padding affordable; see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class COO:
+    """Padded COO matrix of logical shape ``(n_rows, n_cols)``.
+
+    ``row``/``col``/``val`` all have shape ``(capacity,)``. Entries with
+    ``row == n_rows`` are padding. Duplicate (row, col) pairs are allowed and
+    add (standard COO semantics).
+    """
+
+    row: jax.Array  # int32 [capacity]
+    col: jax.Array  # int32 [capacity]
+    val: jax.Array  # float [capacity]
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+    n_cols: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity(self) -> int:
+        return self.row.shape[0]
+
+    @property
+    def valid(self) -> jax.Array:
+        return self.row < self.n_rows
+
+    @property
+    def nnz(self) -> jax.Array:
+        """Number of non-padding entries (traced value)."""
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def transpose(self) -> "COO":
+        # Padding sentinel must stay out-of-range for the *new* row dim.
+        pad = ~self.valid
+        new_row = jnp.where(pad, self.n_cols, self.col)
+        new_col = jnp.where(pad, self.n_cols, self.row)
+        return COO(new_row.astype(jnp.int32), new_col.astype(jnp.int32),
+                   jnp.where(pad, 0, self.val), self.n_cols, self.n_rows)
+
+    def with_capacity(self, capacity: int) -> "COO":
+        """Pad (or validated-shrink) to a new capacity."""
+        cap = self.capacity
+        if capacity == cap:
+            return self
+        if capacity > cap:
+            extra = capacity - cap
+            row = jnp.concatenate([self.row, jnp.full((extra,), self.n_rows, self.row.dtype)])
+            col = jnp.concatenate([self.col, jnp.full((extra,), self.n_rows, self.col.dtype)])
+            val = jnp.concatenate([self.val, jnp.zeros((extra,), self.val.dtype)])
+            return COO(row, col, val, self.n_rows, self.n_cols)
+        # Shrink: only sound if trailing slots are padding; callers ensure it.
+        return COO(self.row[:capacity], self.col[:capacity], self.val[:capacity],
+                   self.n_rows, self.n_cols)
+
+    def to_dense(self) -> jax.Array:
+        out = jnp.zeros((self.n_rows + 1, self.n_cols + 1), self.val.dtype)
+        r = jnp.minimum(self.row, self.n_rows)
+        c = jnp.minimum(self.col, self.n_cols)
+        out = out.at[r, c].add(jnp.where(self.valid, self.val, 0))
+        return out[: self.n_rows, : self.n_cols]
+
+
+def coo_from_dense(a: np.ndarray | jax.Array, capacity: int | None = None) -> COO:
+    a = np.asarray(a)
+    r, c = np.nonzero(a)
+    v = a[r, c]
+    n_rows, n_cols = a.shape
+    nnz = len(r)
+    cap = capacity if capacity is not None else max(nnz, 1)
+    assert cap >= nnz, f"capacity {cap} < nnz {nnz}"
+    row = np.full((cap,), n_rows, np.int32)
+    col = np.full((cap,), n_rows, np.int32)
+    val = np.zeros((cap,), a.dtype if a.dtype.kind == "f" else np.float32)
+    row[:nnz] = r
+    col[:nnz] = c
+    val[:nnz] = v
+    return COO(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val), n_rows, n_cols)
+
+
+def coo_from_arrays(row, col, val, n_rows: int, n_cols: int,
+                    capacity: int | None = None) -> COO:
+    """Build a COO from host arrays, padding to ``capacity``."""
+    row = np.asarray(row, np.int32)
+    col = np.asarray(col, np.int32)
+    val = np.asarray(val, np.float32)
+    nnz = row.shape[0]
+    cap = capacity if capacity is not None else max(nnz, 1)
+    assert cap >= nnz, f"capacity {cap} < nnz {nnz}"
+    r = np.full((cap,), n_rows, np.int32)
+    c = np.full((cap,), n_rows, np.int32)
+    v = np.zeros((cap,), np.float32)
+    r[:nnz] = row
+    c[:nnz] = col
+    v[:nnz] = val
+    return COO(jnp.asarray(r), jnp.asarray(c), jnp.asarray(v), n_rows, n_cols)
+
+
+# ----------------------------------------------------------------------------
+# Core ops (sum semiring). These are the pure-jnp oracles the Pallas ELL
+# kernel is checked against and the building block of the distributed SpMV.
+# ----------------------------------------------------------------------------
+
+def spmv(a: COO, x: jax.Array) -> jax.Array:
+    """y = A @ x. x: [n_cols] -> y: [n_rows]."""
+    xg = jnp.take(x, a.col, mode="fill", fill_value=0)
+    prod = jnp.where(a.valid, a.val * xg, 0)
+    return jax.ops.segment_sum(prod, a.row, num_segments=a.n_rows)
+
+
+def spmv_t(a: COO, x: jax.Array) -> jax.Array:
+    """y = Aᵀ @ x without materialising the transpose."""
+    xg = jnp.take(x, a.row, mode="fill", fill_value=0)
+    prod = jnp.where(a.valid, a.val * xg, 0)
+    col = jnp.where(a.valid, a.col, a.n_cols)
+    return jax.ops.segment_sum(prod, col, num_segments=a.n_cols)
+
+
+def spmm(a: COO, x: jax.Array) -> jax.Array:
+    """Y = A @ X. X: [n_cols, d] -> Y: [n_rows, d] (the GNN message-passing op)."""
+    xg = jnp.take(x, a.col, axis=0, mode="fill", fill_value=0)
+    prod = jnp.where(a.valid[:, None], a.val[:, None] * xg, 0)
+    return jax.ops.segment_sum(prod, a.row, num_segments=a.n_rows)
+
+
+def row_sums(a: COO) -> jax.Array:
+    v = jnp.where(a.valid, a.val, 0)
+    return jax.ops.segment_sum(v, a.row, num_segments=a.n_rows)
+
+
+def extract_diag(a: COO) -> jax.Array:
+    on_diag = a.valid & (a.row == a.col)
+    v = jnp.where(on_diag, a.val, 0)
+    return jax.ops.segment_sum(v, a.row, num_segments=a.n_rows)
+
+
+def degrees(a: COO) -> jax.Array:
+    """Unweighted row degree (number of valid entries per row)."""
+    ones = a.valid.astype(jnp.int32)
+    return jax.ops.segment_sum(ones, a.row, num_segments=a.n_rows)
+
+
+@partial(jax.jit, static_argnames=("n_rows", "n_cols", "capacity"))
+def coalesce(row, col, val, n_rows: int, n_cols: int, capacity: int) -> COO:
+    """Sum duplicate (row, col) entries; drop padding; return a padded COO.
+
+    Works on padded inputs (sentinel row == n_rows). Deterministic: output is
+    sorted by (row, col). This is the workhorse of Galerkin coarsening
+    (PᵀAP by edge contraction, DESIGN.md §4).
+
+    ``capacity`` must be >= the number of distinct (row, col) pairs; surplus
+    unique entries would be silently dropped (callers pick conservative
+    capacities — typically the input length).
+
+    Two-key ``lexsort`` is used instead of a fused integer key so the routine
+    never overflows int32 on large graphs (row * n_cols does at ~46k rows).
+    """
+    valid = row < n_rows
+    row = jnp.where(valid, row, n_rows)
+    col = jnp.where(valid, col, n_rows)
+    order = jnp.lexsort((col, row))
+    r = row[order]
+    c = col[order]
+    v = jnp.where(valid, val, 0)[order]
+    # Unique (r, c) pairs via "is this the first occurrence" flags.
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (r[1:] != r[:-1]) | (c[1:] != c[:-1])])
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    summed = jax.ops.segment_sum(v, seg, num_segments=capacity)
+    # r, c are constant within a segment, so max is a cheap representative.
+    rep_row = jax.ops.segment_max(r, seg, num_segments=capacity)
+    rep_col = jax.ops.segment_max(c, seg, num_segments=capacity)
+    is_pad = (rep_row < 0) | (rep_row >= n_rows)  # empty segs give iinfo.min
+    out_row = jnp.where(is_pad, n_rows, rep_row).astype(jnp.int32)
+    out_col = jnp.where(is_pad, n_rows, rep_col).astype(jnp.int32)
+    out_val = jnp.where(is_pad, 0.0, summed)
+    return COO(out_row, out_col, out_val, n_rows, n_cols)

@@ -1,0 +1,95 @@
+"""ELL (ELLPACK) format: the Pallas SpMV kernel's layout.
+
+ELL stores a fixed ``width`` of (col, val) slots per row — a dense
+``[n_rows, width]`` pair of arrays. Rows shorter than ``width`` pad with
+``col = n_cols`` / ``val = 0``. On TPU this is the natural SpMV layout: the
+gather and multiply-accumulate vectorise over contiguous row blocks with no
+data-dependent control flow, and BlockSpec tiling maps directly onto the
+``[rows, width]`` grid (see ``repro/kernels/spmv_ell``).
+
+Power-law graphs make plain ELL wasteful (width = max degree), which is
+exactly why the paper randomises vertex order and distributes edges 2D; the
+distributed path therefore stores *per-device blocks* in COO and only the
+within-block hot loop converts to bounded-width ELL, spilling overlong rows
+to a COO remainder (hybrid ELL+COO, cf. Bell & Garland SpMV).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.coo import COO
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ELL:
+    col: jax.Array  # int32 [n_rows, width], padding = n_cols
+    val: jax.Array  # float [n_rows, width], padding = 0
+    n_cols: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_rows(self) -> int:
+        return self.col.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.col.shape[1]
+
+
+def coo_to_ell(a: COO, width: int | None = None, pad_rows_to: int | None = None
+               ) -> tuple[ELL, COO]:
+    """Split a COO into (ELL part, COO remainder). Host-side (numpy) setup.
+
+    Entries beyond ``width`` per row spill to the remainder COO; with
+    ``width >= max_degree`` the remainder is empty. ``pad_rows_to`` rounds the
+    row count up (kernel block alignment).
+    """
+    row = np.asarray(a.row)
+    col = np.asarray(a.col)
+    val = np.asarray(a.val)
+    ok = row < a.n_rows
+    row, col, val = row[ok], col[ok], val[ok]
+
+    order = np.lexsort((col, row))
+    row, col, val = row[order], col[order], val[order]
+    # Rank of each entry within its row.
+    if len(row):
+        starts = np.concatenate([[0], np.flatnonzero(row[1:] != row[:-1]) + 1])
+        rank = np.arange(len(row)) - np.repeat(starts, np.diff(np.concatenate([starts, [len(row)]])))
+    else:
+        rank = np.zeros((0,), np.int64)
+
+    counts = np.bincount(row, minlength=a.n_rows)
+    w = int(counts.max()) if width is None and len(counts) else (width or 1)
+    n_rows = a.n_rows if pad_rows_to is None else int(np.ceil(a.n_rows / pad_rows_to) * pad_rows_to)
+
+    in_ell = rank < w
+    ell_col = np.full((n_rows, w), a.n_cols, np.int32)
+    ell_val = np.zeros((n_rows, w), np.float32)
+    ell_col[row[in_ell], rank[in_ell]] = col[in_ell]
+    ell_val[row[in_ell], rank[in_ell]] = val[in_ell]
+
+    rem_row, rem_col, rem_val = row[~in_ell], col[~in_ell], val[~in_ell]
+    rem_cap = max(len(rem_row), 1)
+    rrow = np.full((rem_cap,), a.n_rows, np.int32)
+    rcol = np.full((rem_cap,), a.n_rows, np.int32)
+    rval = np.zeros((rem_cap,), np.float32)
+    rrow[: len(rem_row)] = rem_row
+    rcol[: len(rem_row)] = rem_col
+    rval[: len(rem_row)] = rem_val
+
+    ell = ELL(jnp.asarray(ell_col), jnp.asarray(ell_val), a.n_cols)
+    rem = COO(jnp.asarray(rrow), jnp.asarray(rcol), jnp.asarray(rval),
+              a.n_rows, a.n_cols)
+    return ell, rem
+
+
+def ell_spmv_ref(ell: ELL, x: jax.Array) -> jax.Array:
+    """Pure-jnp oracle for the Pallas ELL SpMV kernel."""
+    xg = jnp.take(x, ell.col, mode="fill", fill_value=0)
+    return jnp.sum(ell.val * xg, axis=1)

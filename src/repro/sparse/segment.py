@@ -1,0 +1,117 @@
+"""Segment reductions, including the lexicographic "semiring" ⊕ operators.
+
+CombBLAS lets the paper define SpMV with custom (⊗, ⊕): Alg 1 reduces
+neighbours by min-hash, Alg 2 reduces by the lexicographic max of
+(state, strength-weight, -index). JAX has no segment reduction over tuples,
+so lexicographic reductions are staged:
+
+  1. reduce the primary key,
+  2. mask entries that don't attain the per-segment primary optimum,
+  3. reduce the secondary key among survivors,
+  4. tie-break deterministically on the smallest index.
+
+Each stage is a plain ``segment_max``/``segment_min``, which XLA lowers to a
+sorted scatter-reduce — well-shaped for both CPU validation and TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+segment_sum = jax.ops.segment_sum
+segment_max = jax.ops.segment_max
+segment_min = jax.ops.segment_min
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _big(dtype):
+    return jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).max
+
+
+def _small(dtype):
+    return jnp.finfo(dtype).min if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).min
+
+
+def segment_argmax_lex(primary, secondary, payload, seg_ids, num_segments,
+                       valid=None):
+    """Per-segment payload of the entry maximising (primary, secondary, -payload).
+
+    Returns ``(best_primary, best_secondary, best_payload)`` arrays of length
+    ``num_segments``. Invalid / empty segments yield
+    (dtype-min, dtype-min, int32-max).
+
+    ``payload`` is an int32 id; ties on (primary, secondary) resolve to the
+    smallest payload — a deterministic stand-in for CombBLAS's arbitrary-but-
+    associative tie handling (the paper's hash tie-break builds the hash into
+    ``primary``/``secondary`` itself).
+    """
+    if valid is not None:
+        seg_ids = jnp.where(valid, seg_ids, num_segments)
+
+    p = jnp.where(seg_ids < num_segments, primary, _small(primary.dtype))
+    best_p = segment_max(p, seg_ids, num_segments=num_segments)
+    on_p = p == jnp.take(best_p, jnp.minimum(seg_ids, num_segments - 1),
+                         mode="fill", fill_value=_big(primary.dtype))
+    on_p = on_p & (seg_ids < num_segments)
+
+    s = jnp.where(on_p, secondary, _small(secondary.dtype))
+    best_s = segment_max(s, seg_ids, num_segments=num_segments)
+    on_s = on_p & (s == jnp.take(best_s, jnp.minimum(seg_ids, num_segments - 1),
+                                 mode="fill", fill_value=_big(secondary.dtype)))
+
+    ids = jnp.where(on_s, payload.astype(jnp.int32), _I32_MAX)
+    best_id = segment_min(ids, seg_ids, num_segments=num_segments)
+    return best_p, best_s, best_id
+
+
+def segment_argmin_lex(primary, payload, seg_ids, num_segments, valid=None):
+    """Per-segment payload of the entry minimising (primary, payload).
+
+    The reduction of Alg 1: ⊕ keeps the neighbour with the smallest hash
+    (primary), tie-broken on the smallest id. Empty segments yield
+    (dtype-max, int32-max).
+    """
+    if valid is not None:
+        seg_ids = jnp.where(valid, seg_ids, num_segments)
+
+    p = jnp.where(seg_ids < num_segments, primary, _big(primary.dtype))
+    best_p = segment_min(p, seg_ids, num_segments=num_segments)
+    on_p = (p == jnp.take(best_p, jnp.minimum(seg_ids, num_segments - 1),
+                          mode="fill", fill_value=_small(primary.dtype)))
+    on_p = on_p & (seg_ids < num_segments)
+
+    ids = jnp.where(on_p, payload.astype(jnp.int32), _I32_MAX)
+    best_id = segment_min(ids, seg_ids, num_segments=num_segments)
+    return best_p, best_id
+
+
+def segment_mean(values, seg_ids, num_segments):
+    s = segment_sum(values, seg_ids, num_segments=num_segments)
+    n = segment_sum(jnp.ones_like(values), seg_ids, num_segments=num_segments)
+    return s / jnp.maximum(n, 1)
+
+
+def segment_std(values, seg_ids, num_segments):
+    m = segment_mean(values, seg_ids, num_segments)
+    d = values - jnp.take(m, jnp.minimum(seg_ids, num_segments - 1),
+                          mode="fill", fill_value=0)
+    v = segment_mean(d * d, seg_ids, num_segments)
+    return jnp.sqrt(jnp.maximum(v, 0))
+
+
+def segment_softmax(logits, seg_ids, num_segments, valid=None):
+    """Numerically-stable softmax within segments (GAT-style edge softmax)."""
+    if valid is not None:
+        seg_ids = jnp.where(valid, seg_ids, num_segments)
+    m = segment_max(jnp.where(seg_ids < num_segments, logits, -jnp.inf),
+                    seg_ids, num_segments=num_segments)
+    m = jnp.where(jnp.isfinite(m), m, 0)
+    z = jnp.exp(logits - jnp.take(m, jnp.minimum(seg_ids, num_segments - 1),
+                                  mode="fill", fill_value=0))
+    z = jnp.where(seg_ids < num_segments, z, 0)
+    denom = segment_sum(z, seg_ids, num_segments=num_segments)
+    return z / jnp.take(jnp.maximum(denom, 1e-30),
+                        jnp.minimum(seg_ids, num_segments - 1),
+                        mode="fill", fill_value=1.0)

@@ -1,0 +1,103 @@
+"""Fault tolerance: atomic checkpoints, crash recovery, elastic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
+                                   save_checkpoint)
+from repro.runtime.loop import FailureInjector, TrainLoopRunner
+
+
+def tree_eq(a, b):
+    return all(bool(jnp.allclose(x, y)) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        tree = dict(w=jnp.arange(12.0).reshape(3, 4),
+                    opt=dict(mu=jnp.ones((5,)), step=jnp.asarray(7)))
+        save_checkpoint(str(tmp_path), 3, tree)
+        assert latest_step(str(tmp_path)) == 3
+        restored, manifest = restore_checkpoint(str(tmp_path), 3, tree)
+        assert tree_eq(tree, restored)
+        assert manifest["step"] == 3
+
+    def test_atomic_no_partial_steps(self, tmp_path):
+        tree = dict(w=jnp.ones((4,)))
+        save_checkpoint(str(tmp_path), 1, tree)
+        # a stale tmp dir (simulated crash mid-save) must be invisible
+        os.makedirs(tmp_path / "step_00000002.tmp")
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_restore_with_shardings(self, tmp_path):
+        tree = dict(w=jnp.arange(16.0))
+        save_checkpoint(str(tmp_path), 1, tree)
+        sh = dict(w=jax.sharding.SingleDeviceSharding(jax.devices()[0]))
+        restored, _ = restore_checkpoint(str(tmp_path), 1, tree, shardings=sh)
+        assert tree_eq(tree, restored)
+
+
+class TestRunner:
+    def _setup(self, tmp_path):
+        # toy quadratic: params converge to the data mean
+        def step_fn(params, opt, batch):
+            g = jax.grad(lambda w: jnp.mean((w - batch) ** 2))(params["w"])
+            params = dict(w=params["w"] - 0.1 * g)
+            return params, opt, dict(loss=jnp.mean((params["w"] - batch) ** 2),
+                                     grad_norm=jnp.linalg.norm(g))
+
+        def data_fn(step):
+            rng = np.random.default_rng(step)  # deterministic replay
+            return jnp.asarray(rng.normal(size=(4,)).astype(np.float32) + 3.0)
+
+        return step_fn, data_fn
+
+    def test_runs_and_checkpoints(self, tmp_path):
+        step_fn, data_fn = self._setup(tmp_path)
+        runner = TrainLoopRunner(step_fn, data_fn, str(tmp_path),
+                                 ckpt_every=5)
+        params, _, metrics = runner.run(dict(w=jnp.zeros(4)), {}, 60)
+        assert latest_step(str(tmp_path)) == 60
+        # effective contraction 0.95/step: w -> data mean 3, loss -> var ≈ 1
+        assert float(metrics["loss"]) < 2.0
+
+    def test_recovers_from_injected_failure(self, tmp_path):
+        step_fn, data_fn = self._setup(tmp_path)
+        inj = FailureInjector(fail_at=(7, 13))
+        runner = TrainLoopRunner(step_fn, data_fn, str(tmp_path),
+                                 ckpt_every=5, failure_injector=inj)
+        params, _, metrics = runner.run(dict(w=jnp.zeros(4)), {}, 20)
+        assert inj.fired == {7, 13}
+        # deterministic replay => same result as a failure-free run
+        runner2 = TrainLoopRunner(step_fn, data_fn, str(tmp_path / "clean"),
+                                  ckpt_every=5)
+        params2, _, _ = runner2.run(dict(w=jnp.zeros(4)), {}, 20)
+        np.testing.assert_allclose(np.asarray(params["w"]),
+                                   np.asarray(params2["w"]), rtol=1e-6)
+
+
+class TestTrainDriver:
+    def test_lm_training_loss_decreases(self, tmp_path):
+        from repro.launch.train import main
+
+        loss = main(["--steps", "30", "--batch", "4", "--seq", "32",
+                     "--ckpt-dir", str(tmp_path), "--ckpt-every", "10"])
+        # zipf tokens over 512-vocab: random-init loss ~ ln(512) ≈ 6.2
+        assert loss < 5.0
+
+    def test_lm_training_recovers_and_resumes(self, tmp_path):
+        from repro.launch.train import main
+
+        main(["--steps", "12", "--batch", "4", "--seq", "32",
+              "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+              "--inject-failures", "6"])
+        # resume continues from the checkpoint
+        loss = main(["--steps", "16", "--batch", "4", "--seq", "32",
+                     "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+                     "--resume"])
+        assert loss == loss  # finite

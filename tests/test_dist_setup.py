@@ -1,0 +1,69 @@
+"""Distributed SETUP (paper's parallel Alg 1 / Alg 2) equals the
+single-device implementations — subprocess with 4 fake devices."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DRIVER = textwrap.dedent("""
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax, jax.numpy as jnp
+    import jax.sharding as shd
+    from repro.graphs.generators import barabasi_albert, ensure_connected, to_laplacian_coo
+    from repro.core.graph import graph_from_adjacency
+    from repro.core.elimination import select_eliminated
+    from repro.core.aggregation import AggregationConfig, aggregation_round, UNDECIDED
+    from repro.dist.partition import partition_edges_2d
+    from repro.dist.setup_demo import distributed_select_eliminated, distributed_vote_round
+
+    n, r, c, v = ensure_connected(*barabasi_albert(600, m=2, seed=5, weighted=True))
+    level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(shd.AxisType.Auto,) * 2)
+    part = partition_edges_2d(n, r, c, v, 2, 2, random_ordering=False)
+
+    # --- Alg 1: distributed selection == single-device selection ---------
+    ref = np.asarray(jax.device_get(select_eliminated(level)))
+    got = np.asarray(jax.device_get(
+        distributed_select_eliminated(mesh, part, n)))[:n]
+    elim_match = bool((ref == got).all())
+
+    # --- Alg 2: one voting round with uniform strengths ------------------
+    cfg = AggregationConfig()
+    sq_ref = jnp.ones((level.adj.capacity,), jnp.int32)
+    state0 = jnp.full((n,), UNDECIDED, jnp.int32)
+    votes0 = jnp.zeros((n,), jnp.int32)
+    aggs0 = jnp.arange(n, dtype=jnp.int32)
+    s_ref, v_ref, a_ref = aggregation_round(level, sq_ref, state0, votes0,
+                                            aggs0, cfg)
+
+    sq_dist = jnp.where(jnp.asarray(part.row_local) < part.nb, 1, 0
+                        ).astype(jnp.int32)
+    s_d, v_d, a_d = distributed_vote_round(mesh, part, n, sq_dist, state0,
+                                           votes0, aggs0)
+    vote_match = bool((np.asarray(s_ref) == np.asarray(s_d)[:n]).all()
+                      and (np.asarray(v_ref) == np.asarray(v_d)[:n]).all()
+                      and (np.asarray(a_ref) == np.asarray(a_d)[:n]).all())
+    print("RESULT " + json.dumps(dict(elim_match=elim_match,
+                                      vote_match=vote_match,
+                                      n_elim=int(ref.sum()))))
+""")
+
+
+def test_distributed_setup_matches_reference():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", DRIVER],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["elim_match"], out
+    assert out["vote_match"], out
+    assert out["n_elim"] > 0

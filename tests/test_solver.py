@@ -1,0 +1,224 @@
+"""End-to-end solver behaviour: cycles, PCG, WDA, baselines (paper §3)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (CycleConfig, LaplacianSolver, SetupConfig,
+                        SmootherConfig, jacobi_pcg)
+from repro.core.graph import graph_from_adjacency
+from repro.core.hierarchy import apply_cycle
+from repro.core.krylov import pcg, pcg_scanned
+from repro.core.serial_ref import serial_lamg_solver
+from repro.core.smoothers import chebyshev, estimate_lambda_max, jacobi
+from repro.core.wda import wda
+from repro.graphs.generators import (barabasi_albert, delaunay,
+                                     ensure_connected, grid_2d,
+                                     to_laplacian_coo)
+
+
+def make_graph(gen=barabasi_albert, **kw):
+    kw.setdefault("seed", 0)
+    return ensure_connected(*gen(**kw))
+
+
+def mean_free(rng, n):
+    b = rng.normal(size=n).astype(np.float32)
+    return b - b.mean()
+
+
+GRAPHS = {
+    "ba": lambda: make_graph(n=1500, m=3, weighted=True),
+    "grid": lambda: make_graph(gen=grid_2d, nx=40, ny=40),
+    "delaunay": lambda: make_graph(gen=delaunay, n=1200),
+}
+
+
+class TestSmoothers:
+    def test_jacobi_reduces_residual(self):
+        n, r, c, v = make_graph(n=500, m=3)
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        b = jnp.asarray(mean_free(np.random.default_rng(0), n))
+        x0 = jnp.zeros(n)
+        x1 = jacobi(level, b, x0, n_sweeps=5)
+        r0 = float(jnp.linalg.norm(b - level.laplacian_matvec(x0)))
+        r1 = float(jnp.linalg.norm(b - level.laplacian_matvec(x1)))
+        assert r1 < r0
+
+    def test_chebyshev_damps_upper_band_uniformly(self):
+        """A degree-6 Chebyshev smoother must contract every mode in its
+        design band [λmax/4, λmax] harder than ω-Jacobi's worst band mode
+        (the property that makes it the better MG smoother, paper §2.5)."""
+        n, r, c, v = make_graph(gen=grid_2d, nx=20, ny=20)
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        from repro.core.graph import laplacian_dense
+        L = np.asarray(jax.device_get(laplacian_dense(level)), np.float64)
+        D = np.asarray(jax.device_get(level.deg), np.float64)
+        w, V = np.linalg.eigh(np.diag(D**-0.5) @ L @ np.diag(D**-0.5))
+        lam = float(estimate_lambda_max(level))
+        band = (w >= lam / 4) & (w <= lam)
+        worst_c, worst_j = 0.0, 0.0
+        for idx in np.flatnonzero(band)[:: max(band.sum() // 8, 1)]:
+            e = np.diag(D**-0.5) @ V[:, idx]          # eigvec of D⁻¹L
+            e = (e / np.linalg.norm(e)).astype(np.float32)
+            # error-propagation: x0 = e, b = 0
+            x_c = chebyshev(level, jnp.zeros(n), jnp.asarray(e), jnp.asarray(lam), degree=6)
+            worst_c = max(worst_c, float(jnp.linalg.norm(x_c)))
+            x_j = jacobi(level, jnp.zeros(n), jnp.asarray(e), n_sweeps=6)
+            worst_j = max(worst_j, float(jnp.linalg.norm(x_j)))
+        assert worst_c < 0.2, f"cheby leaves band mode at {worst_c:.3f}"
+        # worst-case band mode: equioscillation beats Jacobi's band edge
+        assert worst_c < worst_j
+
+    def test_lambda_max_bounds_spectrum(self):
+        n, r, c, v = make_graph(n=200, m=2, weighted=True)
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        lam = float(estimate_lambda_max(level))
+        from repro.core.graph import laplacian_dense
+        L = np.asarray(jax.device_get(laplacian_dense(level)), np.float64)
+        D = np.asarray(jax.device_get(level.deg), np.float64)
+        true = np.max(np.abs(np.linalg.eigvals(L / D[:, None])))
+        assert lam >= 0.9 * true  # power iteration underestimate + margin
+        assert lam <= 2.5 * true
+
+
+class TestCycle:
+    @pytest.mark.parametrize("graph", list(GRAPHS))
+    def test_vcycle_is_a_contraction(self, graph):
+        n, r, c, v = GRAPHS[graph]()
+        solver = LaplacianSolver.setup(n, r, c, v, SetupConfig(coarsest_size=64),
+                                       random_ordering=False)
+        b = jnp.asarray(mean_free(np.random.default_rng(2), n))
+        # two stationary iterations with the cycle as the approximate inverse
+        x = apply_cycle(solver.hierarchy, b, solver.cycle_config)
+        res1 = b - solver.matvec(x)
+        x = x + apply_cycle(solver.hierarchy, res1, solver.cycle_config)
+        res2 = b - solver.matvec(x)
+        n0 = float(jnp.linalg.norm(b))
+        n1 = float(jnp.linalg.norm(res1))
+        n2 = float(jnp.linalg.norm(res2))
+        assert n1 < 0.9 * n0, f"{graph}: cycle barely contracts ({n1/n0:.3f})"
+        assert n2 < n1
+
+    def test_cycle_output_nearly_mean_free(self):
+        """D⁻¹ steps leak a small nullspace component (PCG projects it each
+        iteration); it must stay small or PCG's projection would dominate."""
+        n, r, c, v = GRAPHS["ba"]()
+        solver = LaplacianSolver.setup(n, r, c, v, random_ordering=False)
+        b = jnp.asarray(mean_free(np.random.default_rng(3), n))
+        z = apply_cycle(solver.hierarchy, b, solver.cycle_config)
+        assert abs(float(jnp.mean(z))) < 1e-2 * float(jnp.linalg.norm(z))
+
+
+class TestSolve:
+    @pytest.mark.parametrize("graph", list(GRAPHS))
+    def test_converges_and_solves(self, graph):
+        n, r, c, v = GRAPHS[graph]()
+        solver = LaplacianSolver.setup(n, r, c, v)
+        rng = np.random.default_rng(4)
+        b = mean_free(rng, n)
+        x, info = solver.solve(b, tol=1e-8, maxiter=100)
+        assert info.converged, f"{graph}: {info.residual_norms[-1]}"
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        res = np.asarray(b) - np.asarray(jax.device_get(
+            level.laplacian_matvec(jnp.asarray(x))))
+        # recursive PCG residual reaches 1e-8; the recomputed true residual
+        # stagnates near f32 roundoff amplified by κ(L) — allow 1e-5.
+        assert np.linalg.norm(res) <= 1e-5 * np.linalg.norm(b)
+
+    def test_random_ordering_changes_nothing_numerically(self):
+        n, r, c, v = GRAPHS["ba"]()
+        rng = np.random.default_rng(5)
+        b = mean_free(rng, n)
+        x1, _ = LaplacianSolver.setup(n, r, c, v, random_ordering=False).solve(b)
+        x2, _ = LaplacianSolver.setup(n, r, c, v, random_ordering=True).solve(b)
+        # same solution up to the nullspace component and solver tolerance
+        x1 = np.asarray(x1) - np.asarray(x1).mean()
+        x2 = np.asarray(x2) - np.asarray(x2).mean()
+        np.testing.assert_allclose(x1, x2, rtol=5e-3, atol=5e-4 * np.abs(x1).max())
+
+    def test_beats_jacobi_pcg_on_mesh_graphs(self):
+        """The paper's headline: MG-PCG needs far fewer (work-weighted)
+        iterations than Jacobi-PCG on ill-conditioned graphs (Fig 3). The
+        gap widens with size; 100×100 is the smallest size where the
+        asymptotics dominate the constants on CPU-test budgets."""
+        n, r, c, v = ensure_connected(*grid_2d(100, 100))
+        solver = LaplacianSolver.setup(n, r, c, v)
+        rng = np.random.default_rng(6)
+        b = mean_free(rng, n)
+        _, info = solver.solve(b, tol=1e-8, maxiter=200)
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        _, info_j = jacobi_pcg(level, jnp.asarray(b), tol=1e-8, maxiter=2000)
+        wda_ours = info.wda
+        wda_j = wda(info_j.residual_norms, 1.0)
+        assert info.iters < 0.2 * info_j.iters
+        assert wda_ours < wda_j, f"ours {wda_ours:.1f} vs jacobi {wda_j:.1f}"
+
+    def test_wcycle_and_kcycle_converge(self):
+        n, r, c, v = GRAPHS["grid"]()
+        rng = np.random.default_rng(7)
+        b = mean_free(rng, n)
+        for kind in ("W", "K"):
+            solver = LaplacianSolver.setup(
+                n, r, c, v, cycle_config=CycleConfig(kind=kind))
+            _, info = solver.solve(b, tol=1e-8, maxiter=100)
+            assert info.converged, kind
+
+    def test_chebyshev_smoother_converges(self):
+        n, r, c, v = GRAPHS["grid"]()
+        rng = np.random.default_rng(8)
+        b = mean_free(rng, n)
+        solver = LaplacianSolver.setup(
+            n, r, c, v,
+            cycle_config=CycleConfig(smoother=SmootherConfig(kind="chebyshev")))
+        _, info = solver.solve(b, tol=1e-8, maxiter=100)
+        assert info.converged
+
+    def test_scanned_pcg_matches_eager(self):
+        n, r, c, v = GRAPHS["ba"]()
+        solver = LaplacianSolver.setup(n, r, c, v, random_ordering=False)
+        rng = np.random.default_rng(9)
+        b = jnp.asarray(mean_free(rng, n))
+        step = jax.jit(solver.build_solve_step(n_iters=12))
+        x_s, norms = step(b)
+        x_e, info = solver.solve(b, tol=0.0, maxiter=12)
+        np.testing.assert_allclose(
+            np.asarray(norms), np.asarray(info.residual_norms[:13]),
+            rtol=2e-2, atol=1e-4)
+
+    def test_setup_reuse_across_rhs(self):
+        """Paper §3.2: 'reusing the same setup over multiple solves is
+        desired' — one setup must solve many right-hand sides."""
+        n, r, c, v = GRAPHS["ba"]()
+        solver = LaplacianSolver.setup(n, r, c, v)
+        rng = np.random.default_rng(10)
+        for _ in range(3):
+            b = mean_free(rng, n)
+            _, info = solver.solve(b, tol=1e-6, maxiter=100)
+            assert info.converged
+
+
+class TestSerialReference:
+    def test_serial_lamg_converges_and_is_competitive(self):
+        n, r, c, v = GRAPHS["ba"]()
+        rng = np.random.default_rng(11)
+        b = mean_free(rng, n)
+        ours = LaplacianSolver.setup(n, r, c, v)
+        serial = serial_lamg_solver(n, r, c, v)
+        _, info_p = ours.solve(b, tol=1e-8, maxiter=200)
+        _, info_s = serial.solve(b, tol=1e-8, maxiter=200)
+        assert info_p.converged and info_s.converged
+        # Fig 3 trend: parallel-friendly setup gives up some WDA vs the
+        # serial greedy scheme — allow either way but within a band.
+        assert info_p.wda < 10 * info_s.wda
+
+
+class TestWDA:
+    def test_wda_formula(self):
+        # residual drops 10x per iteration, work 2.0/iter -> WDA == 2.0
+        hist = [1.0, 0.1, 0.01, 0.001]
+        assert abs(wda(hist, 2.0) - 2.0) < 1e-12
+
+    def test_wda_inf_when_stalled(self):
+        assert wda([1.0, 1.0], 1.0) == float("inf")

@@ -1,0 +1,187 @@
+"""Sparse substrate: COO/ELL containers, segment semiring reductions."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparse.coo import (COO, coo_from_dense, coo_from_arrays, spmv,
+                              spmv_t, spmm, row_sums, extract_diag, degrees,
+                              coalesce)
+from repro.sparse.ell import coo_to_ell, ell_spmv_ref
+from repro.sparse.segment import (segment_argmax_lex, segment_argmin_lex,
+                                  segment_softmax, segment_mean, segment_std)
+
+
+def random_dense(rng, n_rows, n_cols, density=0.3):
+    a = rng.random((n_rows, n_cols)) * (rng.random((n_rows, n_cols)) < density)
+    return a.astype(np.float32)
+
+
+class TestCOO:
+    def test_roundtrip_dense(self):
+        rng = np.random.default_rng(0)
+        a = random_dense(rng, 7, 5)
+        coo = coo_from_dense(a, capacity=64)
+        np.testing.assert_allclose(np.asarray(coo.to_dense()), a, rtol=1e-6)
+
+    def test_spmv_matches_dense(self):
+        rng = np.random.default_rng(1)
+        a = random_dense(rng, 13, 9)
+        x = rng.random(9).astype(np.float32)
+        coo = coo_from_dense(a, capacity=200)
+        np.testing.assert_allclose(np.asarray(spmv(coo, jnp.asarray(x))),
+                                   a @ x, rtol=1e-5)
+
+    def test_spmv_t_matches_dense(self):
+        rng = np.random.default_rng(2)
+        a = random_dense(rng, 13, 9)
+        x = rng.random(13).astype(np.float32)
+        coo = coo_from_dense(a, capacity=200)
+        np.testing.assert_allclose(np.asarray(spmv_t(coo, jnp.asarray(x))),
+                                   a.T @ x, rtol=1e-5)
+
+    def test_spmm_matches_dense(self):
+        rng = np.random.default_rng(3)
+        a = random_dense(rng, 11, 6)
+        x = rng.random((6, 4)).astype(np.float32)
+        coo = coo_from_dense(a, capacity=100)
+        np.testing.assert_allclose(np.asarray(spmm(coo, jnp.asarray(x))),
+                                   a @ x, rtol=1e-5)
+
+    def test_padding_is_inert(self):
+        a = np.array([[1.0, 2.0], [0.0, 3.0]], np.float32)
+        small = coo_from_dense(a, capacity=3)
+        big = coo_from_dense(a, capacity=64)
+        x = jnp.asarray([1.0, -1.0])
+        np.testing.assert_allclose(np.asarray(spmv(small, x)),
+                                   np.asarray(spmv(big, x)))
+        np.testing.assert_allclose(np.asarray(row_sums(small)),
+                                   np.asarray(row_sums(big)))
+
+    def test_transpose(self):
+        rng = np.random.default_rng(4)
+        a = random_dense(rng, 6, 8)
+        coo = coo_from_dense(a, capacity=64)
+        np.testing.assert_allclose(np.asarray(coo.transpose().to_dense()), a.T)
+
+    def test_diag_and_degrees(self):
+        a = np.array([[2.0, 1.0, 0], [1.0, 0, 0], [0, 0, 5.0]], np.float32)
+        coo = coo_from_dense(a, capacity=10)
+        np.testing.assert_allclose(np.asarray(extract_diag(coo)), [2, 0, 5])
+        np.testing.assert_allclose(np.asarray(degrees(coo)), [2, 1, 1])
+
+    def test_coalesce_sums_duplicates(self):
+        row = np.array([0, 0, 1, 0, 3], np.int32)  # row 3 = padding (n=3)
+        col = np.array([1, 1, 2, 1, 3], np.int32)
+        val = np.array([1.0, 2.0, 5.0, 4.0, 9.0], np.float32)
+        out = coalesce(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val),
+                       3, 3, 5)
+        dense = np.asarray(out.to_dense())
+        expect = np.zeros((3, 3), np.float32)
+        expect[0, 1] = 7.0
+        expect[1, 2] = 5.0
+        np.testing.assert_allclose(dense, expect)
+
+    @given(st.integers(1, 30), st.integers(1, 30), st.integers(0, 1000))
+    @settings(max_examples=20, deadline=None)
+    def test_coalesce_property(self, n_rows, n_cols, seed):
+        """coalesce(COO) == dense accumulation, for random duplicate COOs."""
+        rng = np.random.default_rng(seed)
+        nnz = rng.integers(1, 50)
+        row = rng.integers(0, n_rows, nnz).astype(np.int32)
+        col = rng.integers(0, n_cols, nnz).astype(np.int32)
+        val = rng.normal(size=nnz).astype(np.float32)
+        dense = np.zeros((n_rows, n_cols), np.float32)
+        np.add.at(dense, (row, col), val)
+        out = coalesce(jnp.asarray(row), jnp.asarray(col), jnp.asarray(val),
+                       n_rows, n_cols, int(nnz))
+        np.testing.assert_allclose(np.asarray(out.to_dense()), dense,
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestELL:
+    @pytest.mark.parametrize("width", [None, 2, 4])
+    def test_ell_plus_remainder_equals_coo(self, width):
+        rng = np.random.default_rng(5)
+        a = random_dense(rng, 16, 16, density=0.4)
+        coo = coo_from_dense(a, capacity=200)
+        ell, rem = coo_to_ell(coo, width=width)
+        x = jnp.asarray(rng.random(16).astype(np.float32))
+        y = ell_spmv_ref(ell, x)[:16] + spmv(rem, x)
+        np.testing.assert_allclose(np.asarray(y), a @ x, rtol=1e-5)
+
+    def test_row_padding(self):
+        a = np.eye(5, dtype=np.float32)
+        coo = coo_from_dense(a, capacity=10)
+        ell, rem = coo_to_ell(coo, width=1, pad_rows_to=8)
+        assert ell.col.shape == (8, 1)
+        assert int(jax.device_get(rem.nnz)) == 0
+
+
+class TestSegment:
+    def test_argmin_lex(self):
+        #       seg:  0    0    0    1    1   (2 empty)
+        primary = jnp.asarray([5, 3, 3, 7, 9], jnp.int32)
+        payload = jnp.asarray([10, 11, 9, 2, 1], jnp.int32)
+        seg = jnp.asarray([0, 0, 0, 1, 1])
+        best_p, best_id = segment_argmin_lex(primary, payload, seg, 3)
+        assert best_p[0] == 3 and best_id[0] == 9
+        assert best_p[1] == 7 and best_id[1] == 2
+        assert best_id[2] == np.iinfo(np.int32).max  # empty
+
+    def test_argmax_lex_uses_secondary(self):
+        primary = jnp.asarray([1, 1, 0], jnp.int32)
+        secondary = jnp.asarray([2, 5, 9], jnp.int32)
+        payload = jnp.asarray([7, 8, 9], jnp.int32)
+        seg = jnp.asarray([0, 0, 0])
+        p, s, i = segment_argmax_lex(primary, secondary, payload, seg, 1)
+        assert (p[0], s[0], i[0]) == (1, 5, 8)
+
+    def test_argmax_lex_tiebreak_min_id(self):
+        primary = jnp.asarray([1, 1], jnp.int32)
+        secondary = jnp.asarray([5, 5], jnp.int32)
+        payload = jnp.asarray([42, 7], jnp.int32)
+        seg = jnp.asarray([0, 0])
+        _, _, i = segment_argmax_lex(primary, secondary, payload, seg, 1)
+        assert i[0] == 7
+
+    def test_valid_mask(self):
+        primary = jnp.asarray([1, 100], jnp.int32)
+        payload = jnp.asarray([5, 6], jnp.int32)
+        seg = jnp.asarray([0, 0])
+        valid = jnp.asarray([True, False])
+        best_p, best_id = segment_argmin_lex(primary, payload, seg, 1, valid=valid)
+        assert best_p[0] == 1 and best_id[0] == 5
+
+    def test_segment_softmax_sums_to_one(self):
+        rng = np.random.default_rng(6)
+        logits = jnp.asarray(rng.normal(size=20).astype(np.float32))
+        seg = jnp.asarray(np.sort(rng.integers(0, 5, 20)))
+        w = segment_softmax(logits, seg, 5)
+        sums = jax.ops.segment_sum(w, seg, num_segments=5)
+        counts = np.bincount(np.asarray(seg), minlength=5)
+        np.testing.assert_allclose(np.asarray(sums)[counts > 0], 1.0, rtol=1e-5)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_argmax_lex_property(self, seed):
+        """Staged reduction == brute-force lexicographic argmax."""
+        rng = np.random.default_rng(seed)
+        m = rng.integers(1, 40)
+        n_seg = rng.integers(1, 6)
+        primary = rng.integers(0, 4, m).astype(np.int32)
+        secondary = rng.integers(0, 4, m).astype(np.int32)
+        payload = rng.permutation(m).astype(np.int32)
+        seg = rng.integers(0, n_seg, m).astype(np.int32)
+        p, s, i = segment_argmax_lex(jnp.asarray(primary), jnp.asarray(secondary),
+                                     jnp.asarray(payload), jnp.asarray(seg), int(n_seg))
+        for g in range(n_seg):
+            sel = seg == g
+            if not sel.any():
+                assert i[g] == np.iinfo(np.int32).max
+                continue
+            keys = sorted(zip(primary[sel], secondary[sel], -payload[sel]))
+            bp, bs, bi = keys[-1]
+            assert (int(p[g]), int(s[g]), int(i[g])) == (bp, bs, -bi)
