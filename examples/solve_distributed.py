@@ -1,5 +1,21 @@
-"""Distributed solve on a simulated multi-device mesh (2×2 + 2 pods here;
-swap in make_production_mesh() on a real pod slice).
+"""Distributed PCG + V-cycle solve on the paper's 2D matrix distribution.
+
+The mesh's trailing two axes are the paper's √P × √P processor grid: the
+graph's vertices are blocked and device (i, j) owns the edges in row
+block i × column block j (see README "Distributed solve" for how mesh
+shapes map onto the paper's figures). The leading "pod" axis splits each
+block's edge slots round-robin, modelling a multi-pod slice.
+
+`DistLaplacianSolver.setup` builds the full multigrid hierarchy on the
+host, 2D-partitions the SpMV of every level with nnz ≥
+``dist_nnz_threshold`` (at most ``max_dist_levels`` of them), and leaves
+the small coarse tail replicated — distributing a few-hundred-edge level
+costs more in collective latency than it saves in FLOPs.
+
+Here the 8 devices are simulated on CPU via
+``--xla_force_host_platform_device_count``; on real hardware drop that
+flag and build the mesh from the actual device grid
+(``repro.launch.mesh``).
 
     PYTHONPATH=src python examples/solve_distributed.py
 """
@@ -18,8 +34,7 @@ from repro.graphs.generators import (barabasi_albert,  # noqa: E402
 
 n, rows, cols, vals = ensure_connected(
     *barabasi_albert(5000, m=4, seed=1, weighted=True))
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 solver = DistLaplacianSolver.setup(n, rows, cols, vals, mesh,
                                    SetupConfig(coarsest_size=64),
                                    dist_nnz_threshold=1000)

@@ -1,0 +1,10 @@
+"""Reproduction of "A Parallel Solver for Graph Laplacians" in JAX.
+
+Importing any ``repro`` module installs the JAX version-compatibility
+shims (see ``repro._jax_compat``) so the mesh-construction idiom used by
+the distributed tests and examples works across JAX releases.
+"""
+
+from repro import _jax_compat
+
+_jax_compat.install()

@@ -1,0 +1,53 @@
+"""Compatibility shims for the range of JAX versions the repo supports.
+
+The distributed tests and examples build meshes with
+
+    jax.make_mesh(shape, names, axis_types=(jax.sharding.AxisType.Auto,) * k)
+
+``AxisType`` and the ``axis_types=`` keyword only exist in newer JAX
+releases; on older ones (e.g. 0.4.x) every mesh axis already behaves like
+``Auto``, so the spelling can be accepted and ignored without changing
+semantics. ``install()`` patches both in when missing and is a no-op on
+JAX versions that already provide them. It is called once from
+``repro/__init__`` so any ``import repro.*`` makes the canonical spelling
+work.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding as shd
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def install() -> None:
+    if not hasattr(shd, "AxisType"):
+        shd.AxisType = _AxisType
+
+    if getattr(jax.make_mesh, "_repro_axis_types_shim", False):
+        return
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return
+    if "axis_types" in params:
+        return
+
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(*args, axis_types=None, **kwargs):
+        # Old JAX: all axes are implicitly Auto; drop the annotation.
+        return orig(*args, **kwargs)
+
+    make_mesh._repro_axis_types_shim = True
+    jax.make_mesh = make_mesh

@@ -49,26 +49,24 @@ def _pack_state_strength(state: jax.Array, strength_q: jax.Array,
     return state.astype(jnp.int32) * (levels + 2) + strength_q.astype(jnp.int32)
 
 
-def aggregation_round(level: GraphLevel, strength_q: jax.Array,
-                      state: jax.Array, votes: jax.Array,
-                      aggregates: jax.Array, cfg: AggregationConfig,
+def apply_vote_update(state: jax.Array, votes: jax.Array,
+                      aggregates: jax.Array, best_key: jax.Array,
+                      best_id: jax.Array, cfg: AggregationConfig,
                       vote_allreduce=None):
-    """One voting round (Alg 2 Aggregation-Step). All fixed-shape jnp.
+    """The replicated state update of one Alg 2 round, given the per-vertex
+    ⊕ reduction results ``(best_key, best_id)``.
 
-    ``vote_allreduce``: optional callable summing vote tallies across devices
-    (identity in single-device mode; ``psum`` under shard_map).
+    Shared verbatim by the single-device round below and
+    ``repro.dist.setup_demo.distributed_vote_round`` — the two must
+    bit-match, so the update logic lives in exactly one place. Vector
+    length is taken from ``state`` (n single-device, n_pad distributed).
+
+    ``vote_allreduce``: optional callable summing vote tallies across
+    devices (identity in single-device mode; ``psum`` under shard_map —
+    the distributed caller's reductions are already global, so it passes
+    None).
     """
-    adj = level.adj
-    n = level.n
-
-    nbr_state = jnp.take(state, adj.col, mode="fill", fill_value=DECIDED)
-    # ⊗: Decided neighbours are filtered (they emit the ⊕ identity).
-    emit_ok = adj.valid & (nbr_state != DECIDED)
-    key = _pack_state_strength(nbr_state, strength_q, cfg.strength_levels)
-    best_key, _, best_id = segment_argmax_lex(
-        key, jnp.zeros_like(key), adj.col, adj.row, num_segments=n,
-        valid=emit_ok)
-
+    n = state.shape[0]
     best_state = jnp.where(best_key >= 0, best_key // (cfg.strength_levels + 2),
                            DECIDED)
     has_best = best_id < jnp.iinfo(jnp.int32).max
@@ -92,8 +90,27 @@ def aggregation_round(level: GraphLevel, strength_q: jax.Array,
     promote = (state == UNDECIDED) & (votes > cfg.seed_votes)
     state = jnp.where(promote, SEED, state)
     # A promoted seed anchors its own aggregate.
-    aggregates = jnp.where(promote, jnp.arange(n), aggregates)
+    aggregates = jnp.where(promote, jnp.arange(n, dtype=jnp.int32), aggregates)
     return state, votes, aggregates
+
+
+def aggregation_round(level: GraphLevel, strength_q: jax.Array,
+                      state: jax.Array, votes: jax.Array,
+                      aggregates: jax.Array, cfg: AggregationConfig,
+                      vote_allreduce=None):
+    """One voting round (Alg 2 Aggregation-Step). All fixed-shape jnp."""
+    adj = level.adj
+    n = level.n
+
+    nbr_state = jnp.take(state, adj.col, mode="fill", fill_value=DECIDED)
+    # ⊗: Decided neighbours are filtered (they emit the ⊕ identity).
+    emit_ok = adj.valid & (nbr_state != DECIDED)
+    key = _pack_state_strength(nbr_state, strength_q, cfg.strength_levels)
+    best_key, _, best_id = segment_argmax_lex(
+        key, jnp.zeros_like(key), adj.col, adj.row, num_segments=n,
+        valid=emit_ok)
+    return apply_vote_update(state, votes, aggregates, best_key, best_id,
+                             cfg, vote_allreduce)
 
 
 def aggregate(level: GraphLevel, strength: jax.Array,

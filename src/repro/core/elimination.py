@@ -8,8 +8,10 @@ Two phases:
    SpMV: ⊗ filters non-candidates, ⊕ keeps the min-hash neighbour. Here the
    SpMV is a lexicographic segment reduction over the edge list
    (``segment_argmin_lex``), which is exactly the CombBLAS computation in
-   data-parallel JAX form — it runs unchanged under ``shard_map`` on the 2D
-   edge partition (repro.dist).
+   data-parallel JAX form — the same staged reduction runs under
+   ``shard_map`` on the 2D edge partition as
+   ``repro.dist.setup_demo.distributed_select_eliminated``, which
+   bit-matches this function.
 
    The eliminated set is an *independent set* (two adjacent candidates can't
    both attain the strict minimum), so L_FF is diagonal and elimination is an
@@ -63,8 +65,13 @@ def select_eliminated(level: GraphLevel, max_degree: int = MAX_ELIM_DEGREE
         nbr_key, adj.col, adj.row, num_segments=n, valid=col_ok)
 
     self_key = (h ^ jnp.uint32(0x80000000)).astype(jnp.int32)
-    # i is eliminated iff it is a candidate and (self_key, i) < (best_key, id)
-    lt = (self_key < best_key) | ((self_key == best_key) & (jnp.arange(n) <= best_id))
+    # i is eliminated iff it is a candidate and (self_key, i) < (best_key, id):
+    # the comparison must be STRICT — a non-strict tie-break can accept i when
+    # (self_key, i) merely ties the neighbourhood optimum, letting two
+    # adjacent candidates with colliding hashes both be eliminated. The
+    # eliminated set would then not be independent, L_FF not diagonal, and
+    # the Schur complement silently wrong.
+    lt = (self_key < best_key) | ((self_key == best_key) & (jnp.arange(n) < best_id))
     return cand & lt
 
 

@@ -8,6 +8,10 @@
 ``info.wda`` reproduces the paper's Fig 3 metric. ``random_ordering=True``
 applies the paper's §2.2 load-balancing permutation (a pure relabeling:
 solutions are permuted back transparently).
+
+This is the single-device reference; the multi-device solver with the
+same hierarchy but 2D-sharded SpMVs is
+``repro.dist.solver.DistLaplacianSolver``.
 """
 
 from __future__ import annotations

@@ -1,0 +1,10 @@
+"""Distributed-memory layer: the paper's 2D sparse-matrix distribution.
+
+* ``repro.dist.partition``  — host-side 2D block partition of an edge list
+  (paper §2.1–§2.2), including the random-ordering load balancing.
+* ``repro.dist.setup_demo`` — the setup-phase semiring SpMVs (Alg 1
+  selection, Alg 2 voting) as ``shard_map`` segment reductions that
+  bit-match the single-device reference implementations.
+* ``repro.dist.solver``     — ``DistLaplacianSolver``: PCG + V-cycle with
+  the SpMV of the top hierarchy levels 2D-sharded across the mesh.
+"""

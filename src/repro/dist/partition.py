@@ -1,0 +1,207 @@
+"""2D block partition of a graph edge list (paper §2.1–§2.2).
+
+The paper distributes the Laplacian over a √P × √P processor grid: vertex
+ids are split into contiguous blocks, and edge (u, v) lands on the
+processor owning row-block(u) × column-block(v). The static-shape port
+here pads every block to one common edge capacity (TPU/XLA need fixed
+shapes), so load balance directly becomes *fill fraction*: the share of
+padded slots holding real edges.
+
+Balance comes from the paper's §2.2 trick — relabel vertices by a random
+permutation before blocking. Power-law graphs number hubs early
+(Barabási–Albert literally creates them first), so natural-order blocks
+concentrate edges in the low blocks; a random relabeling spreads every
+hub's edges uniformly over the grid.
+
+An optional ``pods`` axis splits each block's edge *slots* round-robin
+across a third (outer) mesh axis, mirroring a multi-pod TPU slice: the
+same 2D block structure, with each block's SpMV partial summed across
+pods by the same all-reduce that sums across column blocks.
+
+Everything in this module is host-side numpy; ``repro.dist.setup_demo``
+and ``repro.dist.solver`` move the arrays onto the mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition2D:
+    """Padded block-local COO layout of one graph over a (pods, pr, pc) grid.
+
+    ``row_local``/``col_local``/``val`` have shape ``[pods, pr, pc, cap]``.
+    Block (p, i, j) holds edges whose (permuted) endpoints fall in row
+    block i and column block j; slot padding uses the sentinels
+    ``row_local == nb`` / ``col_local == nb_col`` with ``val == 0`` (the
+    same convention as ``repro.sparse.coo.COO``).
+    """
+
+    row_local: np.ndarray     # int32 [pods, pr, pc, cap]; sentinel = nb
+    col_local: np.ndarray     # int32 [pods, pr, pc, cap]; sentinel = nb_col
+    val: np.ndarray           # float32 [pods, pr, pc, cap]; 0 on padding
+    n: int                    # number of real vertices
+    n_pad: int                # padded vertex count (divisible by pr and pc)
+    pr: int                   # row blocks
+    pc: int                   # column blocks
+    pods: int                 # outer edge-splitting axis
+    nb: int                   # row block size      = n_pad // pr
+    nb_col: int               # column block size   = n_pad // pc
+    nnz: int                  # total real edges (both directions)
+    block_nnz: np.ndarray     # int64 [pods, pr, pc] real edges per block
+    perm: np.ndarray | None   # old vertex id -> new id (None: natural order)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.row_local.shape[-1])
+
+    @property
+    def n_blocks(self) -> int:
+        return self.pods * self.pr * self.pc
+
+    @property
+    def fill_fraction(self) -> float:
+        """Real edges / padded slots — the §2.2 balance metric."""
+        return self.nnz / float(max(self.n_blocks * self.capacity, 1))
+
+
+def partition_edges_2d(n: int, rows, cols, vals, pr: int, pc: int,
+                       pods: int = 1, random_ordering: bool = True,
+                       seed: int = 0) -> Partition2D:
+    """Partition an edge list (both directions present) onto a 2D grid.
+
+    ``random_ordering=True`` applies the paper's §2.2 random vertex
+    relabeling before blocking; ``pad_vector``/``unpad_vector`` translate
+    between user vectors (original ids) and the partitioned layout.
+    """
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.asarray(vals, np.float32)
+    if rows.shape != cols.shape or rows.shape != vals.shape:
+        raise ValueError("rows/cols/vals must have identical shapes")
+    if pr < 1 or pc < 1 or pods < 1:
+        raise ValueError("pr, pc and pods must be positive")
+
+    perm = None
+    if random_ordering:
+        perm = np.random.default_rng(seed).permutation(n)
+        rq, cq = perm[rows], perm[cols]
+    else:
+        rq, cq = rows, cols
+
+    blk = -(-n // (pr * pc))            # ceil: n_pad divisible by pr AND pc
+    n_pad = blk * pr * pc
+    nb = n_pad // pr
+    nb_col = n_pad // pc
+
+    bi = rq // nb
+    bj = cq // nb_col
+    flat = bi * pc + bj
+    counts = np.bincount(flat, minlength=pr * pc)
+    cap = max(1, int(-(-counts.max() // pods))) if len(rows) else 1
+
+    # Stable block-major order; position within a block decides the pod
+    # slice (round-robin) and the slot inside that slice.
+    order = np.argsort(flat, kind="stable")
+    starts = np.zeros(pr * pc, np.int64)
+    starts[1:] = np.cumsum(counts)[:-1]
+    pos = np.arange(len(rows), dtype=np.int64) - starts[flat[order]]
+    pod = pos % pods
+    slot = pos // pods
+
+    row_local = np.full((pods, pr, pc, cap), nb, np.int32)
+    col_local = np.full((pods, pr, pc, cap), nb_col, np.int32)
+    val = np.zeros((pods, pr, pc, cap), np.float32)
+    row_local[pod, bi[order], bj[order], slot] = (rq[order] % nb).astype(np.int32)
+    col_local[pod, bi[order], bj[order], slot] = (cq[order] % nb_col).astype(np.int32)
+    val[pod, bi[order], bj[order], slot] = vals[order]
+
+    block_nnz = np.zeros((pods, pr, pc), np.int64)
+    np.add.at(block_nnz, (pod, bi[order], bj[order]), 1)
+
+    return Partition2D(row_local=row_local, col_local=col_local, val=val,
+                       n=n, n_pad=n_pad, pr=pr, pc=pc, pods=pods,
+                       nb=nb, nb_col=nb_col, nnz=int(len(rows)),
+                       block_nnz=block_nnz, perm=perm)
+
+
+def pad_vector(part: Partition2D, x) -> np.ndarray:
+    """Vertex vector (original ids, length n) -> partitioned layout [n_pad]."""
+    x = np.asarray(x)
+    out = np.zeros((part.n_pad,) + x.shape[1:], x.dtype)
+    if part.perm is None:
+        out[: part.n] = x
+    else:
+        out[part.perm] = x
+    return out
+
+
+def unpad_vector(part: Partition2D, y) -> np.ndarray:
+    """Inverse of ``pad_vector``: [n_pad] layout -> length-n user vector."""
+    y = np.asarray(y)
+    if part.perm is None:
+        return y[: part.n].copy()
+    return y[part.perm]
+
+
+def balance_report(part: Partition2D) -> dict:
+    """Per-device-block balance summary (the paper's Table 1 quantities)."""
+    bn = part.block_nnz.reshape(-1).astype(np.float64)
+    mean = bn.mean() if bn.size else 0.0
+    return dict(
+        imbalance=float(bn.max() / max(mean, 1e-12)) if bn.size else 0.0,
+        fill_fraction=float(part.fill_fraction),
+        max_nnz=int(bn.max()) if bn.size else 0,
+        min_nnz=int(bn.min()) if bn.size else 0,
+        mean_nnz=float(mean),
+        n_blocks=part.n_blocks,
+        capacity=part.capacity,
+        nnz=part.nnz,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mesh geometry helpers shared by setup_demo and solver.
+# ---------------------------------------------------------------------------
+
+def mesh_geometry(mesh):
+    """(pod_axis_names, row_axis, col_axis, pods, pr, pc) of a solver mesh.
+
+    Accepts 2D ``(row, col)`` meshes and 3D ``(pod, row, col)`` meshes —
+    the last two axes are always the processor grid of the paper.
+    """
+    names = tuple(mesh.axis_names)
+    if len(names) == 2:
+        pod_names = ()
+        row_name, col_name = names
+        pods = 1
+    elif len(names) == 3:
+        pod_names = (names[0],)
+        row_name, col_name = names[1], names[2]
+        pods = int(mesh.shape[names[0]])
+    else:
+        raise ValueError(
+            f"expected a 2D (row, col) or 3D (pod, row, col) mesh, got axes {names}")
+    return pod_names, row_name, col_name, pods, int(mesh.shape[row_name]), int(mesh.shape[col_name])
+
+
+def edge_spec(mesh):
+    """PartitionSpec placing [pods, pr, pc, cap] edge arrays on the mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    pod_names, row_name, col_name, *_ = mesh_geometry(mesh)
+    lead = pod_names[0] if pod_names else None
+    return P(lead, row_name, col_name, None)
+
+
+def check_mesh_matches(part: Partition2D, mesh) -> None:
+    _, _, _, pods, pr, pc = mesh_geometry(mesh)
+    if (pr, pc) != (part.pr, part.pc):
+        raise ValueError(
+            f"mesh grid {(pr, pc)} != partition grid {(part.pr, part.pc)}")
+    if pods not in (1, part.pods):
+        raise ValueError(
+            f"mesh pod axis {pods} incompatible with partition pods={part.pods}")

@@ -1,0 +1,317 @@
+"""Distributed SOLVE phase: PCG + V-cycle with 2D-sharded SpMV (paper §3).
+
+``DistLaplacianSolver`` builds the same multigrid hierarchy as
+``core.solver.LaplacianSolver`` (setup is eager and host-driven), then
+splits it at ``dist_nnz_threshold`` / ``max_dist_levels``:
+
+* the top (largest) levels get their fine adjacency partitioned into the
+  paper's 2D block layout (``repro.dist.partition``) and their SpMV — the
+  dominant cost of PCG, smoothing and residual computation — runs as a
+  ``shard_map`` over the device mesh: each device contracts its block's
+  edges against the vector, and one psum over the mesh axes plays the
+  paper's column-reduce + row-broadcast;
+* levels below the threshold fall back to the replicated serial
+  hierarchy (``coarse_h``) — exactly the paper's observation that coarse
+  grids are too small to be worth distributing.
+
+The transfer operators (Schur elimination, aggregation contraction) are
+reused from ``repro.core`` unchanged; only the per-level fine adjacency
+is swapped for its 2D-partitioned twin, so the distributed solver is
+numerically the serial solver with its big SpMVs sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cycles import CycleConfig, cycle
+from repro.core.elimination import EliminationLevel
+from repro.core.graph import GraphLevel, graph_from_adjacency
+from repro.core.hierarchy import Hierarchy, SetupConfig, build_hierarchy
+from repro.dist.partition import (edge_spec, mesh_geometry,
+                                  partition_edges_2d)
+from repro.graphs.generators import to_laplacian_coo
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistGraphLevel:
+    """A multigrid level whose adjacency lives 2D-partitioned on a mesh.
+
+    Drop-in for ``core.graph.GraphLevel`` wherever only ``n``, ``deg`` and
+    ``laplacian_matvec`` are used (smoothers, residuals, PCG) — the matvec
+    is the distributed semiring SpMV instead of a replicated segment-sum.
+    """
+
+    row_local: jax.Array   # int32 [pods, pr, pc, cap], sharded over the mesh
+    col_local: jax.Array   # int32 [pods, pr, pc, cap]
+    val: jax.Array         # float32 [pods, pr, pc, cap]
+    deg: jax.Array         # float32 [n] weighted degrees (replicated)
+    n: int = dataclasses.field(metadata=dict(static=True))
+    n_pad: int = dataclasses.field(metadata=dict(static=True))
+    nb: int = dataclasses.field(metadata=dict(static=True))
+    nb_col: int = dataclasses.field(metadata=dict(static=True))
+    mesh: object = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity(self) -> int:
+        return int(self.val.shape[-1])
+
+    def spmv_padded(self, x_pad: jax.Array) -> jax.Array:
+        """y = A @ x on [n_pad] vectors via the 2D-sharded edge blocks."""
+        mesh = self.mesh
+        _, row_axis, col_axis, *_ = mesh_geometry(mesh)
+        axes = tuple(mesh.axis_names)
+        espec = edge_spec(mesh)
+        nb, nb_col, n_pad = self.nb, self.nb_col, self.n_pad
+
+        def local(row_l, col_l, val, x):
+            i = jax.lax.axis_index(row_axis)
+            j = jax.lax.axis_index(col_axis)
+            row_l = row_l.reshape(-1)
+            col_l = col_l.reshape(-1)
+            val = val.reshape(-1)
+            valid = row_l < nb
+            row_g = jnp.where(valid, i * nb + row_l, n_pad)
+            col_g = jnp.where(valid, j * nb_col + col_l, n_pad)
+            xg = jnp.take(x, col_g, mode="fill", fill_value=0)
+            prod = jnp.where(valid, val * xg, 0)
+            part = jax.ops.segment_sum(prod, row_g, num_segments=n_pad)
+            # Column-communicator reduce + row broadcast == one psum.
+            return jax.lax.psum(part, axes)
+
+        return shard_map(local, mesh=mesh,
+                         in_specs=(espec, espec, espec, P()),
+                         out_specs=P())(self.row_local, self.col_local,
+                                        self.val, x_pad)
+
+    def laplacian_matvec(self, x: jax.Array) -> jax.Array:
+        """L @ x on length-n vectors (smoother / residual interface)."""
+        x_pad = jnp.pad(x, (0, self.n_pad - self.n))
+        return self.deg * x - self.spmv_padded(x_pad)[: self.n]
+
+    def matvec_padded(self, x_pad: jax.Array) -> jax.Array:
+        """L @ x on [n_pad] vectors (the PCG iteration space)."""
+        deg_pad = jnp.pad(self.deg, (0, self.n_pad - self.n))
+        return deg_pad * x_pad - self.spmv_padded(x_pad)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistArrays:
+    """Device-resident distributed state: the jit-able half of the solver.
+
+    ``fine`` is the finest level (a ``DistGraphLevel`` when any level is
+    distributed, the serial ``GraphLevel`` otherwise); ``transfers`` are
+    the distributed-prefix transfer operators with their fine levels
+    swapped for ``DistGraphLevel`` twins.
+    """
+
+    fine: object          # DistGraphLevel | GraphLevel
+    transfers: tuple      # distributed-prefix Transfer objects
+    lam_maxes: tuple      # matching λmax estimates
+
+
+@dataclasses.dataclass(frozen=True)
+class DistLevelMeta:
+    """Host-side description of one distributed level (``kind`` per test API)."""
+
+    kind: str             # "elim" | "agg"
+    n: int
+    nnz: int
+    n_pad: int
+    capacity: int
+    fill_fraction: float
+
+
+def _pcg_scanned_masked(matvec, b, precond, n_iters: int, n: int, n_pad: int):
+    """Fixed-iteration PCG on [n_pad] vectors whose real support is [:n].
+
+    Identical to ``core.krylov.pcg_scanned`` except the mean-free
+    projection (Laplacian nullspace handling) averages over the n real
+    entries and pins padding to zero — padded slots then never contribute
+    to dot products or norms.
+    """
+    mask = jnp.arange(n_pad) < n
+
+    def proj(v):
+        v = jnp.where(mask, v, 0)
+        return jnp.where(mask, v - jnp.sum(v) / n, 0)
+
+    b = proj(b)
+    x0 = jnp.zeros_like(b)
+    r0 = proj(b - matvec(x0))
+    z0 = proj(precond(r0))
+    carry0 = (x0, r0, z0, z0, jnp.vdot(r0, z0))
+
+    def body(carry, _):
+        x, r, z, p, rz = carry
+        Ap = matvec(p)
+        alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
+        x = x + alpha * p
+        r = proj(r - alpha * Ap)
+        z = proj(precond(r))
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / jnp.maximum(rz, 1e-30)
+        p = z + beta * p
+        return (x, r, z, p, rz_new), jnp.linalg.norm(r)
+
+    (x, r, *_), norms = jax.lax.scan(body, carry0, None, length=n_iters)
+    return x, jnp.concatenate([jnp.linalg.norm(r0)[None], norms])
+
+
+def _partition_level(level: GraphLevel, mesh) -> tuple[DistGraphLevel, float]:
+    """2D-partition one level's adjacency and place it on the mesh."""
+    _, _, _, pods, pr, pc = mesh_geometry(mesh)
+    adj = level.adj
+    row, col, val, valid = jax.device_get(
+        (adj.row, adj.col, adj.val, adj.valid))
+    part = partition_edges_2d(level.n, row[valid], col[valid], val[valid],
+                              pr, pc, pods=pods, random_ordering=False)
+    espec = edge_spec(mesh)
+    sharding = NamedSharding(mesh, espec)
+    dlevel = DistGraphLevel(
+        row_local=jax.device_put(jnp.asarray(part.row_local), sharding),
+        col_local=jax.device_put(jnp.asarray(part.col_local), sharding),
+        val=jax.device_put(jnp.asarray(part.val), sharding),
+        deg=level.deg, n=level.n, n_pad=part.n_pad,
+        nb=part.nb, nb_col=part.nb_col, mesh=mesh)
+    return dlevel, part.fill_fraction
+
+
+@dataclasses.dataclass
+class DistLaplacianSolver:
+    """2D-distributed PCG + V-cycle solver (the paper's solve phase).
+
+    Public surface (pinned by tests / configs / examples):
+
+    * ``setup(n, rows, cols, vals, mesh, setup_config, ...)``
+    * ``solve(b, n_iters)`` -> ``(x, residual_norms)``
+    * ``build_solve_step(n_iters)`` -> jit-able ``(arrays, coarse_h, b_pad)``
+    * ``level_meta`` (per distributed level, with ``.kind``), ``coarse_h``
+      (replicated tail ``Hierarchy``), ``arrays``, ``n_pad``.
+    """
+
+    arrays: DistArrays
+    coarse_h: Hierarchy
+    level_meta: list
+    cycle_config: CycleConfig
+    n: int
+    n_pad: int
+    mesh: object
+    perm: np.ndarray | None = None         # §2.2 random ordering
+    inv_perm: np.ndarray | None = None
+    # jitted solve steps keyed by n_iters, so repeat solves (multiple
+    # right-hand sides, benchmark loops) hit the jit cache instead of
+    # recompiling the whole PCG + V-cycle program.
+    _steps: dict = dataclasses.field(default_factory=dict, repr=False,
+                                     compare=False)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def setup(n: int, rows, cols, vals, mesh,
+              setup_config: SetupConfig = SetupConfig(),
+              cycle_config: CycleConfig = CycleConfig(),
+              dist_nnz_threshold: int = 10_000,
+              max_dist_levels: int = 3,
+              random_ordering: bool = True) -> "DistLaplacianSolver":
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals, np.float32)
+        perm = inv_perm = None
+        if random_ordering:
+            rng = np.random.default_rng(setup_config.seed)
+            perm = rng.permutation(n)
+            inv_perm = np.argsort(perm)
+            rows = perm[rows]
+            cols = perm[cols]
+
+        adj = to_laplacian_coo(n, rows, cols, vals)
+        h = build_hierarchy(adj, setup_config)
+
+        dist_transfers = []
+        lam_maxes = []
+        level_meta = []
+        for t, lam in zip(h.transfers, h.lam_maxes):
+            if len(dist_transfers) >= max_dist_levels:
+                break
+            nnz = int(jax.device_get(t.fine.adj.nnz))
+            if nnz < dist_nnz_threshold:
+                break
+            dfine, fill = _partition_level(t.fine, mesh)
+            dist_transfers.append(dataclasses.replace(t, fine=dfine))
+            lam_maxes.append(lam)
+            level_meta.append(DistLevelMeta(
+                kind="elim" if isinstance(t, EliminationLevel) else "agg",
+                n=t.fine.n, nnz=nnz, n_pad=dfine.n_pad,
+                capacity=dfine.capacity, fill_fraction=fill))
+
+        k = len(dist_transfers)
+        coarse_h = Hierarchy(transfers=h.transfers[k:],
+                             lam_maxes=h.lam_maxes[k:],
+                             coarse_inv=h.coarse_inv)
+
+        if k:
+            fine = dist_transfers[0].fine
+            n_pad = fine.n_pad
+        elif h.transfers:
+            fine = h.transfers[0].fine          # full serial fallback
+            n_pad = n
+        else:
+            fine = graph_from_adjacency(adj)
+            n_pad = n
+
+        arrays = DistArrays(fine=fine, transfers=tuple(dist_transfers),
+                            lam_maxes=tuple(lam_maxes))
+        return DistLaplacianSolver(
+            arrays=arrays, coarse_h=coarse_h, level_meta=level_meta,
+            cycle_config=cycle_config, n=n, n_pad=n_pad, mesh=mesh,
+            perm=perm, inv_perm=inv_perm)
+
+    # ------------------------------------------------------------------
+    def build_solve_step(self, n_iters: int = 30):
+        """(arrays, coarse_h, b_pad [n_pad]) -> (x_pad, residual_norms)."""
+        n, n_pad = self.n, self.n_pad
+        cyc = self.cycle_config
+
+        def step(arrays, coarse_h, b_pad):
+            if isinstance(arrays.fine, DistGraphLevel):
+                matvec = arrays.fine.matvec_padded
+            else:
+                matvec = arrays.fine.laplacian_matvec   # n_pad == n fallback
+            transfers = arrays.transfers + coarse_h.transfers
+            lams = arrays.lam_maxes + coarse_h.lam_maxes
+
+            def precond(r_pad):
+                z = cycle(transfers, lams, coarse_h.coarse_inv,
+                          r_pad[:n], cyc)
+                return jnp.pad(z, (0, n_pad - n))
+
+            return _pcg_scanned_masked(matvec, b_pad, precond, n_iters,
+                                       n, n_pad)
+
+        return step
+
+    # ------------------------------------------------------------------
+    def _to_internal(self, b: jax.Array) -> jax.Array:
+        return b[jnp.asarray(self.inv_perm)] if self.perm is not None else b
+
+    def _from_internal(self, x: jax.Array) -> jax.Array:
+        return x[jnp.asarray(self.perm)] if self.perm is not None else x
+
+    def solve(self, b, n_iters: int = 30):
+        """Fixed-iteration distributed PCG solve. Returns (x [n], norms)."""
+        b = jnp.asarray(b, jnp.float32)
+        b_pad = jnp.pad(self._to_internal(b), (0, self.n_pad - self.n))
+        step = self._steps.get(n_iters)
+        if step is None:
+            step = self._steps[n_iters] = jax.jit(self.build_solve_step(n_iters))
+        x_pad, norms = step(self.arrays, self.coarse_h, b_pad)
+        return self._from_internal(x_pad[: self.n]), norms

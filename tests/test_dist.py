@@ -64,6 +64,7 @@ def run_case(ndev, mesh_shape, mesh_axes, kind="ba", thresh=100, maxlev=3):
     return json.loads(line[len("RESULT "):])
 
 
+@pytest.mark.slow  # each case is a fresh-process multi-device jit compile
 class TestDistSolver:
     def test_2x2_matches_reference_ba(self):
         out = run_case(4, "(2, 2)", '("data", "model")')

@@ -7,6 +7,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 DRIVER = textwrap.dedent("""
@@ -55,6 +57,7 @@ DRIVER = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # fresh-process 4-device subprocess
 def test_distributed_setup_matches_reference():
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     proc = subprocess.run([sys.executable, "-c", DRIVER],

@@ -8,6 +8,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+# hypothesis is an optional dev dependency (see pyproject [test] extra):
+# skip this module instead of hard-erroring at collection when absent.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.embedding_bag import embedding_bag_kernel, embedding_bag_ref

@@ -4,6 +4,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+# hypothesis is an optional dev dependency (see pyproject [test] extra):
+# skip this module instead of hard-erroring at collection when absent.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.sparse.coo import (COO, coo_from_dense, coo_from_arrays, spmv,
