@@ -99,6 +99,22 @@ def main(argv=None) -> None:
         print(f"  algebraic wins {out['algebraic_win_fraction']:.0%} "
               f"(paper: 'a majority of the time')")
 
+    if want("multi_rhs"):
+        from benchmarks.multi_rhs_bench import bench_multi_rhs
+
+        out = bench_multi_rhs(scale=scale)
+        _save("multi_rhs", out)
+        print("\n== multi-RHS serving: blocked vs looped solves "
+              "(one hierarchy, k RHS) ==")
+        for r in out["rows"]:
+            print(f"  k={r['k']:>3d}: blocked={r['blocked_s']:7.3f}s "
+                  f"vmap={r['blocked_vmap_s']:7.3f}s "
+                  f"looped={r['looped_s']:7.3f}s "
+                  f"speedup={r['speedup_exact']:5.2f}x/"
+                  f"{r['speedup_vmap']:5.2f}x iters={r['iters']}")
+            _emit_csv(f"multi_rhs_k{r['k']}", r["blocked_s"] * 1e6,
+                      r["speedup_vmap"])
+
     if want("kernels"):
         from benchmarks.kernels_bench import bench_kernels
 

@@ -1,21 +1,27 @@
-"""Quickstart: solve a graph-Laplacian system with the paper's solver.
+"""Quickstart: solve graph-Laplacian systems through the unified API.
 
     PYTHONPATH=src python examples/quickstart.py
+
+One surface for every backend: build a validated ``Problem``, ``setup`` a
+solver (``backend="auto"`` picks the distributed solver when more than one
+device is visible), then solve single right-hand sides or whole blocks of
+them against the same multigrid hierarchy.
 """
 
 import numpy as np
 
-from repro.core import LaplacianSolver, SetupConfig
+from repro.api import Problem, SolverOptions, setup
 from repro.graphs.generators import barabasi_albert, ensure_connected
 
 # a power-law social-network-like graph (the paper's target class)
 n, rows, cols, vals = ensure_connected(
     *barabasi_albert(20_000, m=4, seed=0, weighted=True))
-print(f"graph: {n} vertices, {len(rows)//2} edges")
+problem = Problem.from_edges(n, rows, cols, vals)
+print(f"graph: {problem.n_vertices} vertices, {problem.n_edges} edges")
 
 # multigrid setup: low-degree elimination + aggregation voting (Alg 1 + 2)
-solver = LaplacianSolver.setup(n, rows, cols, vals,
-                               SetupConfig(coarsest_size=128))
+solver = setup(problem, SolverOptions(coarsest_size=128))
+print(f"backend: {solver.backend} (setup {solver.setup_seconds:.2f}s)")
 for lvl in solver.stats()["levels"]:
     print(f"  level[{lvl['kind']:>6s}] n={lvl['n']:>7d} nnz={lvl['nnz']}")
 
@@ -23,6 +29,14 @@ for lvl in solver.stats()["levels"]:
 rng = np.random.default_rng(0)
 b = rng.normal(size=n).astype(np.float32)
 b -= b.mean()                      # RHS must be ⟂ nullspace (constants)
-x, info = solver.solve(b, tol=1e-8)
-print(f"converged={info.converged} iters={info.iters} "
-      f"WDA={info.wda:.2f} (paper Fig 3 range: 3-20 on social graphs)")
+x, result = solver.solve(b)
+print(f"converged={result.converged} iters={result.iters} "
+      f"WDA={result.wda:.2f} (paper Fig 3 range: 3-20 on social graphs)")
+
+# the serving path: many right-hand sides, one hierarchy, one blocked solve
+B = rng.normal(size=(n, 8)).astype(np.float32)
+B -= B.mean(axis=0)
+X, result = solver.solve(B)
+print(f"blocked {result.n_rhs}-RHS solve: converged={result.converged} "
+      f"iters/rhs={result.iters_per_rhs.tolist()} "
+      f"({result.solve_seconds:.2f}s)")

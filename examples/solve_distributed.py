@@ -1,4 +1,5 @@
-"""Distributed PCG + V-cycle solve on the paper's 2D matrix distribution.
+"""Distributed PCG + V-cycle solve on the paper's 2D matrix distribution,
+through the unified ``repro.api`` surface.
 
 The mesh's trailing two axes are the paper's √P × √P processor grid: the
 graph's vertices are blocked and device (i, j) owns the edges in row
@@ -6,11 +7,12 @@ block i × column block j (see README "Distributed solve" for how mesh
 shapes map onto the paper's figures). The leading "pod" axis splits each
 block's edge slots round-robin, modelling a multi-pod slice.
 
-`DistLaplacianSolver.setup` builds the full multigrid hierarchy on the
-host, 2D-partitions the SpMV of every level with nnz ≥
-``dist_nnz_threshold`` (at most ``max_dist_levels`` of them), and leaves
-the small coarse tail replicated — distributing a few-hundred-edge level
-costs more in collective latency than it saves in FLOPs.
+Passing a mesh to ``setup`` selects the distributed backend (``"auto"``
+also picks it whenever more than one device is visible). The hierarchy is
+built on the host, every level with nnz ≥ ``dist_nnz_threshold`` gets its
+SpMV 2D-partitioned (at most ``max_dist_levels`` of them), and the small
+coarse tail stays replicated — distributing a few-hundred-edge level costs
+more in collective latency than it saves in FLOPs.
 
 Here the 8 devices are simulated on CPU via
 ``--xla_force_host_platform_device_count``; on real hardware drop that
@@ -27,23 +29,36 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core.hierarchy import SetupConfig  # noqa: E402
-from repro.dist.solver import DistLaplacianSolver  # noqa: E402
+from repro.api import Problem, SolverOptions, setup  # noqa: E402
 from repro.graphs.generators import (barabasi_albert,  # noqa: E402
                                      ensure_connected)
 
 n, rows, cols, vals = ensure_connected(
     *barabasi_albert(5000, m=4, seed=1, weighted=True))
+problem = Problem.from_edges(n, rows, cols, vals)
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-solver = DistLaplacianSolver.setup(n, rows, cols, vals, mesh,
-                                   SetupConfig(coarsest_size=64),
-                                   dist_nnz_threshold=1000)
-print(f"distributed levels: {[m.kind for m in solver.level_meta]}, "
-      f"replicated tail: {solver.coarse_h.n_levels} levels")
+solver = setup(problem,
+               SolverOptions(coarsest_size=64, max_iters=25,
+                             dist_nnz_threshold=1000),
+               mesh=mesh)                       # mesh => dist backend
+levels = solver.stats()["levels"]
+print(f"backend: {solver.backend}; "
+      f"distributed levels: {[l['kind'] for l in levels if l.get('distributed')]}, "
+      f"replicated tail: {sum(not l.get('distributed') for l in levels)} levels")
 
 rng = np.random.default_rng(0)
 b = rng.normal(size=n).astype(np.float32)
 b -= b.mean()
-x, norms = solver.solve(b, n_iters=25)
-print(f"residual {norms[0]:.3e} -> {norms[-1]:.3e} in 25 iterations "
-      f"on {mesh.devices.size} devices (pods×rows×cols = {mesh.shape})")
+x, result = solver.solve(b)
+norms = result.residual_norms[:, 0]
+print(f"residual {norms[0]:.3e} -> {norms[-1]:.3e} in {result.iters} "
+      f"iterations on {mesh.devices.size} devices "
+      f"(pods×rows×cols = {dict(mesh.shape)})")
+
+# blocked multi-RHS: the 2D-sharded SpMV and V-cycle collectives run once
+# per iteration for the whole block
+B = rng.normal(size=(n, 4)).astype(np.float32)
+B -= B.mean(axis=0)
+X, result = solver.solve(B)
+print(f"blocked {result.n_rhs}-RHS: converged={result.converged} "
+      f"iters/rhs={result.iters_per_rhs.tolist()}")

@@ -1,0 +1,39 @@
+"""``repro.api`` — the public solver surface.
+
+One Problem -> Solver -> Result pipeline over every backend::
+
+    from repro.api import Problem, SolverOptions, solve, setup
+
+    problem = Problem.from_edges(n, rows, cols, vals)
+    x, result = solve(problem, b)                        # backend="auto"
+
+    solver = setup(problem, SolverOptions(tol=1e-10), backend="single")
+    X, result = solver.solve(B)                          # (n, k) multi-RHS
+
+The legacy entry points (``repro.core.solver.LaplacianSolver``,
+``repro.dist.solver.DistLaplacianSolver``,
+``repro.core.serial_ref.serial_lamg_solver``) remain importable — they are
+the backend implementations — but new code should go through this module;
+see MIGRATION.md at the repo root for the old-name -> new-name map.
+"""
+
+from repro.api.facade import Solver, setup, solve
+from repro.api.options import SolverOptions
+from repro.api.problem import Problem, ProblemValidationError
+from repro.api.registry import (available_backends, get_backend,
+                                register_backend, resolve_backend)
+from repro.api.result import SolveResult
+
+__all__ = [
+    "Problem",
+    "ProblemValidationError",
+    "SolveResult",
+    "Solver",
+    "SolverOptions",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "resolve_backend",
+    "setup",
+    "solve",
+]

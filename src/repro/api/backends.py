@@ -1,0 +1,148 @@
+"""The built-in backends behind the ``repro.api`` facade.
+
+Each backend adapts one of the repo's solver implementations to the common
+handle protocol the facade consumes:
+
+    handle = setup_fn(problem, options, mesh)
+    X, norms, iters = handle.solve_block(B, tol, max_iters)   # B: (n, k)
+    handle.work_per_iteration                                 # WDA units
+    handle.stats()                                            # hierarchy dict
+
+``solve_block`` always takes and returns 2-D blocks; the facade does the
+(n,) <-> (n, 1) plumbing. ``norms`` is the (T+1, k) lockstep residual
+history, ``iters`` the per-column iteration counts.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.api.registry import register_backend
+
+
+def default_mesh():
+    """A √P×√P-ish ("data", "model") mesh over all visible devices.
+
+    Used when the dist backend is selected (explicitly or by ``"auto"``)
+    without a mesh: the device count is factored as pr × pc with pr the
+    largest divisor ≤ √P, matching the paper's 2D processor grid.
+    """
+    import jax
+
+    ndev = len(jax.devices())
+    pr = max(d for d in range(1, int(ndev ** 0.5) + 1) if ndev % d == 0)
+    return jax.make_mesh((pr, ndev // pr), ("data", "model"))
+
+
+class _EagerHandle:
+    """Handle over a ``LaplacianSolver`` (the ``single`` and ``serial_ref``
+    backends share the solve phase; only hierarchy construction differs)."""
+
+    def __init__(self, solver, options):
+        self._solver = solver
+        self._options = options
+        self.work_per_iteration = solver.iteration_work(
+            precondition=options.precondition)
+
+    def solve_block(self, B, tol: float, max_iters: int):
+        X, info = self._solver.solve_block(
+            B, tol=tol, maxiter=max_iters,
+            precondition=self._options.precondition,
+            exact_columns=self._options.exact_columns)
+        return (np.asarray(X), info.residual_norms,
+                np.asarray(info.iters, np.int64))
+
+    def stats(self) -> dict:
+        return self._solver.stats()
+
+
+class _DistHandle:
+    """Handle over a ``DistLaplacianSolver`` on a device mesh."""
+
+    def __init__(self, solver, options):
+        self._solver = solver
+        self._options = options
+        self.work_per_iteration = solver.work_per_iteration
+
+    def solve_block(self, B, tol: float, max_iters: int):
+        X, norms, iters = self._solver.solve_block(B, n_iters=max_iters,
+                                                   tol=tol)
+        return (np.asarray(X), np.asarray(norms),
+                np.asarray(iters, np.int64))
+
+    def stats(self) -> dict:
+        import jax
+
+        from repro.core.hierarchy import hierarchy_stats
+
+        s = self._solver
+        levels = [dict(kind=m.kind, n=m.n, nnz=m.nnz,
+                       fill_fraction=m.fill_fraction, distributed=True)
+                  for m in s.level_meta]
+        if s.coarse_h.transfers:
+            tail = hierarchy_stats(s.coarse_h)
+        else:
+            # fully distributed hierarchy: the replicated tail is just the
+            # dense coarsest solve — emit its row like hierarchy_stats does
+            row = dict(kind="coarse",
+                       n=int(s.coarse_h.coarse_inv.shape[0]),
+                       nnz=None, capacity=None)
+            if s.arrays.transfers:
+                c = s.arrays.transfers[-1].coarse
+                row.update(nnz=int(jax.device_get(c.adj.nnz)),
+                           capacity=c.adj.capacity)
+            tail = dict(levels=[row], n_levels=1)
+        for lvl in tail["levels"]:
+            lvl["distributed"] = False
+        return dict(levels=levels + tail["levels"],
+                    n_levels=len(levels) + tail["n_levels"],
+                    mesh_shape=dict(s.mesh.shape))
+
+
+def _setup_single(problem, options, mesh=None):
+    from repro.core.solver import LaplacianSolver
+
+    solver = LaplacianSolver.setup(
+        problem.n, problem.rows, problem.cols,
+        problem.vals.astype(np.float32),
+        setup_config=options.setup_config(),
+        cycle_config=options.cycle_config(),
+        random_ordering=options.random_ordering)
+    return _EagerHandle(solver, options)
+
+
+def _setup_serial_ref(problem, options, mesh=None):
+    from repro.core.serial_ref import serial_lamg_solver
+
+    solver = serial_lamg_solver(
+        problem.n, problem.rows, problem.cols,
+        problem.vals.astype(np.float32),
+        setup_config=options.setup_config(),
+        cycle_config=options.cycle_config(),
+        random_ordering=options.random_ordering)
+    return _EagerHandle(solver, options)
+
+
+def _setup_dist(problem, options, mesh=None):
+    from repro.dist.solver import DistLaplacianSolver
+
+    if not options.precondition:
+        raise ValueError(
+            "the dist backend always preconditions with the multigrid "
+            "cycle; use backend='single' for the plain-CG ablation")
+    if mesh is None:
+        mesh = default_mesh()
+    solver = DistLaplacianSolver.setup(
+        problem.n, problem.rows, problem.cols,
+        problem.vals.astype(np.float32), mesh,
+        setup_config=options.setup_config(),
+        cycle_config=options.cycle_config(),
+        dist_nnz_threshold=options.dist_nnz_threshold,
+        max_dist_levels=options.max_dist_levels,
+        random_ordering=options.random_ordering)
+    return _DistHandle(solver, options)
+
+
+register_backend("single", _setup_single)
+register_backend("serial_ref", _setup_serial_ref)
+register_backend("dist", _setup_dist)

@@ -1,0 +1,116 @@
+"""The facade: ``setup`` once, ``solve`` many — any backend, one surface.
+
+    from repro.api import Problem, SolverOptions, setup, solve
+
+    problem = Problem.from_edges(n, rows, cols, vals)
+    solver = setup(problem)                      # backend="auto"
+    x, result = solver.solve(b)                  # one RHS
+    X, result = solver.solve(B)                  # B: (n, k) — blocked PCG
+    x, result = solve(problem, b)                # one-shot convenience
+
+This is the paper's own shape — one algorithm "amenable to linear algebra
+using arbitrary distributions" — surfaced the way LAMG ships it: a setup
+phase that builds the hierarchy, then any number of solves against it.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api.options import SolverOptions
+from repro.api.problem import Problem
+from repro.api.registry import get_backend, resolve_backend
+from repro.api.result import SolveResult, result_from_history
+
+# Registration side effect: importing the facade makes the built-ins
+# available, so ``from repro.api import solve; solve(...)`` just works.
+from repro.api import backends as _backends  # noqa: F401
+
+
+class Solver:
+    """One multigrid setup, any number of (possibly blocked) solves.
+
+    Construct with :func:`setup`. Thread-compatible with the legacy
+    objects: ``solver.stats()`` reports the hierarchy, ``solver.backend``
+    the resolved backend name.
+    """
+
+    def __init__(self, problem: Problem, options: SolverOptions,
+                 backend: str, handle, setup_seconds: float):
+        self.problem = problem
+        self.options = options
+        self.backend = backend
+        self.setup_seconds = setup_seconds
+        self._handle = handle
+
+    # ------------------------------------------------------------------
+    def solve(self, b, *, tol: float | None = None,
+              max_iters: int | None = None
+              ) -> tuple[np.ndarray, SolveResult]:
+        """Solve L x = b. ``b``: (n,) for one RHS or (n, k) for a block.
+
+        ``tol``/``max_iters`` default to the solver's options. Returns
+        ``(x, SolveResult)`` with ``x`` matching the shape of ``b``.
+        """
+        tol = self.options.tol if tol is None else tol
+        max_iters = self.options.max_iters if max_iters is None else max_iters
+        b = np.asarray(b)
+        single = b.ndim == 1
+        B = b[:, None] if single else b
+        if B.ndim != 2 or B.shape[0] != self.problem.n:
+            raise ValueError(
+                f"b must have shape ({self.problem.n},) or "
+                f"({self.problem.n}, k), got {np.asarray(b).shape}")
+        t0 = time.perf_counter()
+        X, norms, iters = self._handle.solve_block(B, tol, max_iters)
+        solve_seconds = time.perf_counter() - t0
+        result = result_from_history(
+            self.backend, norms, iters, tol,
+            self._handle.work_per_iteration, self.setup_seconds,
+            solve_seconds)
+        return (X[:, 0] if single else X), result
+
+    def stats(self) -> dict:
+        """Hierarchy statistics (per-level kind / size / nnz)."""
+        return self._handle.stats()
+
+
+# ----------------------------------------------------------------------
+def setup(problem: Problem, options: SolverOptions | None = None,
+          backend: str = "auto", mesh=None) -> Solver:
+    """Build the multigrid hierarchy for ``problem`` on a backend.
+
+    ``backend`` is a registry name (``"single"``, ``"serial_ref"``,
+    ``"dist"``) or ``"auto"``, which picks ``"dist"`` when a distributed
+    context is available (a ``mesh`` was passed or more than one JAX device
+    is visible) and ``"single"`` otherwise. ``mesh`` is only consumed by
+    the dist backend; passing one forces it.
+    """
+    if not isinstance(problem, Problem):
+        raise TypeError(
+            f"setup expects a repro.api.Problem (see Problem.from_edges), "
+            f"got {type(problem).__name__}")
+    options = options or SolverOptions()
+    name = resolve_backend(backend, mesh, options)
+    if mesh is not None and name != "dist":
+        raise ValueError(
+            f"a mesh is only consumed by the dist backend, but "
+            f"backend={name!r} was requested")
+    t0 = time.perf_counter()
+    handle = get_backend(name)(problem, options, mesh)
+    return Solver(problem, options, name, handle,
+                  time.perf_counter() - t0)
+
+
+def solve(problem: Problem, b, options: SolverOptions | None = None,
+          backend: str = "auto", mesh=None
+          ) -> tuple[np.ndarray, SolveResult]:
+    """One-shot convenience: ``setup(...)`` then ``solve(b)``.
+
+    For repeated right-hand sides prefer keeping the :class:`Solver` from
+    :func:`setup` (the hierarchy build dominates one solve) or batching
+    them as the columns of ``b``.
+    """
+    return setup(problem, options, backend, mesh).solve(b)

@@ -1,0 +1,95 @@
+"""``SolverOptions``: one knob surface for every backend.
+
+Merges the core layer's ``SetupConfig`` (hierarchy construction),
+``CycleConfig``/``SmootherConfig`` (preconditioner) and the Krylov stopping
+controls into a single flat dataclass. Every backend honors ``tol`` AND
+``max_iters``: the eager backends stop at whichever comes first; the
+distributed backend runs a fixed-shape scan of ``max_iters`` steps in which
+converged columns freeze at ``tol`` (same semantics, jit-compatible shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.aggregation import AggregationConfig
+from repro.core.cycles import CycleConfig
+from repro.core.hierarchy import SetupConfig
+from repro.core.smoothers import SmootherConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverOptions:
+    """All solver knobs, backend-agnostic. Defaults are the paper's choices.
+
+    Stopping (honored by every backend):
+
+    * ``tol`` — relative residual stopping tolerance (``||r|| <= tol·||r0||``),
+    * ``max_iters`` — PCG iteration cap.
+
+    Setup (hierarchy construction):
+
+    * ``coarsest_size``, ``max_levels``, ``elim_max_degree``,
+      ``strength_metric`` (``"algebraic_distance"`` | ``"affinity"``),
+      ``random_ordering`` (paper §2.2 load-balancing relabeling), ``seed``.
+
+    Cycle / smoother:
+
+    * ``cycle`` (``"V"`` | ``"W"`` | ``"K"``), ``smoother`` (``"jacobi"`` |
+      ``"chebyshev"``), ``pre_sweeps``/``post_sweeps``, ``cheby_degree``,
+      ``precondition`` (False = plain CG, the paper's baseline ablation).
+
+    Multi-RHS:
+
+    * ``exact_columns`` — blocked solves reproduce looped single-RHS solves
+      bitwise (eager backends); False trades that for vmapped batched
+      operator applications.
+
+    Distributed backend only:
+
+    * ``dist_nnz_threshold``, ``max_dist_levels`` — which hierarchy levels
+      get the 2D-sharded SpMV (the rest stay replicated).
+    """
+
+    # stopping
+    tol: float = 1e-8
+    max_iters: int = 200
+    # setup
+    coarsest_size: int = 128
+    max_levels: int = 20
+    elim_max_degree: int = 4
+    strength_metric: str = "algebraic_distance"
+    random_ordering: bool = True
+    seed: int = 0
+    # cycle / smoother
+    cycle: str = "V"
+    smoother: str = "jacobi"
+    pre_sweeps: int = 2
+    post_sweeps: int = 2
+    cheby_degree: int = 3
+    precondition: bool = True
+    # multi-RHS
+    exact_columns: bool = True
+    # distributed
+    dist_nnz_threshold: int = 10_000
+    max_dist_levels: int = 3
+
+    def setup_config(self) -> SetupConfig:
+        """The core-layer setup configuration this maps to."""
+        return SetupConfig(
+            max_levels=self.max_levels,
+            coarsest_size=self.coarsest_size,
+            elim_max_degree=self.elim_max_degree,
+            strength_metric=self.strength_metric,
+            aggregation=AggregationConfig(),
+            seed=self.seed)
+
+    def cycle_config(self) -> CycleConfig:
+        """The core-layer cycle/smoother configuration this maps to."""
+        return CycleConfig(
+            kind=self.cycle,
+            smoother=SmootherConfig(
+                kind=self.smoother,
+                pre_sweeps=self.pre_sweeps,
+                post_sweeps=self.post_sweeps,
+                cheby_degree=self.cheby_degree))

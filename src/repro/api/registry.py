@@ -1,0 +1,70 @@
+"""Backend registry: names -> solver implementations.
+
+Built-in backends (registered by ``repro.api.backends``):
+
+* ``"single"``     — single-device multigrid PCG (``LaplacianSolver``),
+* ``"serial_ref"`` — the serial LAMG-style reference setup (greedy
+  elimination + strength-ordered aggregation) with the same solve phase,
+* ``"dist"``       — the 2D-distributed solver (``DistLaplacianSolver``),
+* ``"auto"``       — resolves to ``"dist"`` when a mesh is passed or more
+  than one JAX device is visible, else ``"single"``.
+
+Third-party backends register with :func:`register_backend`; a backend is a
+callable ``(problem, options, mesh) -> handle`` where the handle implements
+``solve_block(B, tol, max_iters) -> (X, norms, iters_per_rhs)`` plus a
+``work_per_iteration`` attribute and a ``stats()`` method (see
+``repro.api.backends`` for the reference implementations).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+_REGISTRY: dict[str, Callable] = {}
+
+
+def register_backend(name: str, setup_fn: Callable) -> None:
+    """Register ``setup_fn(problem, options, mesh) -> handle`` under ``name``."""
+    if name == "auto":
+        raise ValueError('"auto" is reserved for backend resolution')
+    _REGISTRY[name] = setup_fn
+
+
+def available_backends() -> tuple[str, ...]:
+    """Registered backend names (plus the ``"auto"`` selector)."""
+    return tuple(sorted(_REGISTRY)) + ("auto",)
+
+
+def get_backend(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; available: "
+            f"{', '.join(available_backends())}") from None
+
+
+def resolve_backend(name: str = "auto", mesh=None, options=None) -> str:
+    """Resolve ``"auto"`` to a concrete backend name.
+
+    The rule: distributed when a distributed context is available —
+    ``mesh`` explicitly passed, or more than one JAX device visible —
+    otherwise the single-device backend. Explicit names pass through
+    (after checking they exist).
+
+    ``options`` lets auto-resolution respect backend capabilities: the
+    dist backend has no plain-CG ablation, so ``precondition=False``
+    resolves to ``"single"`` unless a mesh explicitly forces dist (which
+    then raises the dist backend's own clear error at setup).
+    """
+    if name != "auto":
+        get_backend(name)
+        return name
+    if mesh is not None:
+        return "dist"
+    no_precond = options is not None and not options.precondition
+    if no_precond:
+        return "single"
+    import jax
+
+    return "dist" if len(jax.devices()) > 1 else "single"

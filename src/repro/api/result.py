@@ -1,0 +1,74 @@
+"""``SolveResult``: identical result fields for every backend.
+
+The three legacy entry points returned three different info objects
+(``LaplacianSolveInfo``, a bare ``(x, norms)`` tuple, ``SolveInfo``). The
+facade normalises them: whatever backend ran, the caller gets the same
+fields with the same meanings, for one right-hand side or a block of them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.wda import wda as _wda
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SolveResult:
+    """Outcome of one ``solve`` call, backend-independent.
+
+    * ``backend`` — registry name that ran (``"auto"`` is resolved first),
+    * ``converged`` — every right-hand side reached ``tol``,
+    * ``iters`` — PCG iterations of the slowest column,
+    * ``iters_per_rhs`` — per-column iteration counts, shape (k,),
+    * ``residual_norms`` — lockstep residual history, shape (iters+1, k)
+      (converged columns hold their frozen final norm),
+    * ``wda`` — Work per Digit of Accuracy (paper Fig 3 metric) over the
+      block residual (Frobenius norm history),
+    * ``work_per_iteration`` — one PCG iteration's cost in finest-level
+      matvec equivalents,
+    * ``setup_seconds`` / ``solve_seconds`` — wall-clock (setup is the
+      hierarchy build of the owning ``Solver``, amortised over its solves),
+    * ``n_rhs`` — number of right-hand sides (k).
+    """
+
+    backend: str
+    converged: bool
+    iters: int
+    iters_per_rhs: np.ndarray
+    residual_norms: np.ndarray
+    wda: float
+    work_per_iteration: float
+    setup_seconds: float
+    solve_seconds: float
+    n_rhs: int
+
+
+def result_from_history(backend: str, norms: np.ndarray,
+                        iters_per_rhs: np.ndarray, tol: float,
+                        work_per_iteration: float, setup_seconds: float,
+                        solve_seconds: float) -> SolveResult:
+    """Assemble a ``SolveResult`` from a (T+1, k) residual history.
+
+    Trims the history at the slowest column's convergence point (frozen
+    tails would otherwise inflate the WDA iteration count) and derives
+    convergence from the tolerance: a column converged iff its final norm
+    is within ``tol`` of its initial norm.
+    """
+    norms = np.asarray(norms, np.float64)
+    if norms.ndim == 1:
+        norms = norms[:, None]
+    iters_per_rhs = np.asarray(iters_per_rhs, np.int64)
+    it_max = int(iters_per_rhs.max()) if iters_per_rhs.size else 0
+    norms = norms[: it_max + 1]
+    converged = bool(np.all(norms[-1] <= tol * norms[0]))
+    frob = np.sqrt((norms ** 2).sum(axis=1))
+    return SolveResult(
+        backend=backend, converged=converged, iters=it_max,
+        iters_per_rhs=iters_per_rhs, residual_norms=norms,
+        wda=_wda(frob.tolist(), work_per_iteration),
+        work_per_iteration=float(work_per_iteration),
+        setup_seconds=float(setup_seconds),
+        solve_seconds=float(solve_seconds), n_rhs=norms.shape[1])

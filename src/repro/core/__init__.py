@@ -13,7 +13,8 @@ from repro.core.strength import (algebraic_distance_strength,
 from repro.core.smoothers import SmootherConfig, jacobi, chebyshev
 from repro.core.cycles import CycleConfig
 from repro.core.hierarchy import Hierarchy, SetupConfig, build_hierarchy, apply_cycle
-from repro.core.krylov import pcg, pcg_scanned, cg, jacobi_pcg
+from repro.core.krylov import (BlockSolveInfo, pcg, pcg_block, pcg_scanned,
+                               cg, jacobi_pcg)
 from repro.core.solver import LaplacianSolver, LaplacianSolveInfo
 from repro.core.wda import wda, pcg_iteration_work, cycle_work_units
 
@@ -27,7 +28,7 @@ __all__ = [
     "SmootherConfig", "jacobi", "chebyshev",
     "CycleConfig",
     "Hierarchy", "SetupConfig", "build_hierarchy", "apply_cycle",
-    "pcg", "pcg_scanned", "cg", "jacobi_pcg",
+    "BlockSolveInfo", "pcg", "pcg_block", "pcg_scanned", "cg", "jacobi_pcg",
     "LaplacianSolver", "LaplacianSolveInfo",
     "wda", "pcg_iteration_work", "cycle_work_units",
 ]

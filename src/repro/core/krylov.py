@@ -24,6 +24,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -31,6 +32,15 @@ class SolveInfo:
     iters: int
     residual_norms: list
     converged: bool
+
+
+@dataclasses.dataclass
+class BlockSolveInfo:
+    """Per-column info for a blocked multi-RHS solve (``pcg_block``)."""
+
+    iters: np.ndarray           # int64 [k] — iterations each column ran
+    residual_norms: np.ndarray  # float [T+1, k] — lockstep residual history
+    converged: np.ndarray       # bool [k]
 
 
 def _project(v):
@@ -66,6 +76,114 @@ def pcg(matvec: Callable, b: jax.Array, precond: Callable | None = None,
         p = z + beta * p
         rz = rz_new
     return x, SolveInfo(maxiter, hist, False)
+
+
+def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
+              tol: float = 1e-8, maxiter: int = 500,
+              exact_columns: bool = True):
+    """Blocked multi-RHS PCG: k single-RHS trajectories advanced in lockstep.
+
+    ``B`` is ``(n, k)`` — one graph, many right-hand sides (the serving
+    scenario: the hierarchy is built once, every column reuses it). ``matvec``
+    and ``precond`` act on single length-n vectors and are lifted over the
+    columns; all k solves share one iteration loop, one convergence check per
+    iteration, and of course one setup.
+
+    ``exact_columns=True`` (default) lifts the operators by a trace-time loop
+    over columns and computes every scalar reduction (means, dots, norms)
+    with the same 1-D primitives ``pcg`` uses, making each column's iterates
+    — and the returned solutions — bitwise identical to standalone ``pcg``
+    solves. ``exact_columns=False`` lifts with ``jax.vmap`` instead: the SpMV
+    and V-cycle run as single batched ops (the throughput path), at the cost
+    of low-bit drift from the single-RHS trajectories (XLA reduces 1-D arrays
+    and 2-D columns in different orders).
+
+    Columns converge independently: once a column's residual drops below
+    ``tol * ||r0||`` its step size is zeroed (x, r freeze) while the rest
+    keep iterating; the loop exits when every column has converged.
+
+    Returns ``(X, BlockSolveInfo)`` with per-column iteration counts,
+    converged flags, and the (T+1, k) residual history (rows beyond a
+    column's own convergence hold its frozen residual norm).
+    """
+    B = jnp.asarray(B)
+    if B.ndim != 2:
+        raise ValueError(f"pcg_block expects B of shape (n, k), got {B.shape}")
+    k = B.shape[1]
+    M = precond if precond is not None else (lambda v: v)
+    if exact_columns:
+        # Eager column loops have no fixed-shape constraint, so frozen
+        # columns skip their SpMV/V-cycle entirely (their outputs only ever
+        # meet zeroed alphas / stale-Z selects).
+        def bmv(V, act):
+            return jnp.stack([matvec(V[:, j]) if act[j]
+                              else jnp.zeros_like(V[:, j])
+                              for j in range(k)], axis=1)
+
+        def bM(V, act):
+            return jnp.stack([M(V[:, j]) if act[j]
+                              else jnp.zeros_like(V[:, j])
+                              for j in range(k)], axis=1)
+    else:
+        _bmv = jax.vmap(matvec, in_axes=1, out_axes=1)
+        _bM = jax.vmap(M, in_axes=1, out_axes=1)
+
+        def bmv(V, act):
+            return _bmv(V)
+
+        def bM(V, act):
+            return _bM(V)
+
+    def cmean(V):
+        return jnp.stack([jnp.mean(V[:, j]) for j in range(k)])
+
+    def proj(V):
+        return V - cmean(V)[None, :]
+
+    def cdot(U, V):
+        return jnp.stack([jnp.vdot(U[:, j], V[:, j]) for j in range(k)])
+
+    def cnorm(V):
+        return jnp.stack([jnp.linalg.norm(V[:, j]) for j in range(k)])
+
+    all_cols = np.ones(k, bool)
+    B = proj(B)
+    X = jnp.zeros_like(B)
+    R = proj(B - bmv(X, all_cols))
+    Z = proj(bM(R, all_cols))
+    P = Z
+    rz = cdot(R, Z)
+    r0n = np.asarray(jax.device_get(cnorm(R)))
+    hist = [r0n]
+    active = r0n > 0.0
+    iters = np.zeros(k, np.int64)
+    for _ in range(maxiter):
+        if not active.any():
+            break
+        act = jnp.asarray(active)
+        iters += active
+        Ap = bmv(P, active)
+        pAp = cdot(P, Ap)
+        alpha = jnp.where(act, rz / pAp, 0.0)
+        X = X + alpha[None, :] * P
+        # Freeze converged columns exactly: re-projecting them every
+        # iteration would keep shaving off the ~eps nullspace leak and
+        # drift their (already reported) residuals.
+        R = jnp.where(act[None, :], proj(R - alpha[None, :] * Ap), R)
+        rn = np.asarray(jax.device_get(cnorm(R)))
+        hist.append(rn)
+        active = active & (rn > tol * r0n)
+        # Z only matters for still-active columns (a just-converged column
+        # never uses its search direction again — pcg returns right here).
+        Z = jnp.where(jnp.asarray(active)[None, :], proj(bM(R, active)), Z)
+        rz_new = cdot(R, Z)
+        beta = jnp.where(jnp.asarray(active), rz_new / rz, 0.0)
+        P = Z + beta[None, :] * P
+        rz = rz_new
+    norms = np.stack(hist)
+    converged = norms[-1] <= tol * r0n
+    return X, BlockSolveInfo(iters=iters, residual_norms=norms,
+                             converged=converged)
 
 
 def pcg_scanned(matvec: Callable, b: jax.Array, precond: Callable | None = None,

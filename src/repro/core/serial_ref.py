@@ -35,7 +35,7 @@ from repro.core.hierarchy import Hierarchy, SetupConfig, _shrink
 from repro.core.smoothers import estimate_lambda_max
 from repro.core.solver import LaplacianSolver
 from repro.core.strength import STRENGTH_METRICS
-from repro.graphs.generators import to_laplacian_coo
+from repro.graphs.generators import random_relabel, to_laplacian_coo
 from repro.core.graph import laplacian_dense
 import dataclasses
 import jax
@@ -143,7 +143,20 @@ def build_serial_hierarchy(adj, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
 def serial_lamg_solver(n, rows, cols, vals,
                        setup_config: SetupConfig = SetupConfig(),
                        cycle_config: CycleConfig = CycleConfig(),
-                       capacity=None) -> LaplacianSolver:
+                       capacity=None,
+                       random_ordering: bool = False) -> LaplacianSolver:
+    """``random_ordering`` applies the same §2.2 relabeling as the parallel
+    solvers (a pure relabeling, permuted back transparently); here it only
+    reshuffles the greedy sweeps' tie-breaking, but keeping the knob live on
+    every backend lets ordering experiments run like-for-like."""
+    rows = np.asarray(rows)
+    cols = np.asarray(cols)
+    vals = np.asarray(vals, np.float32)
+    perm = inv_perm = None
+    if random_ordering:
+        rows, cols, perm, inv_perm = random_relabel(
+            n, rows, cols, setup_config.seed)
     adj = to_laplacian_coo(n, rows, cols, vals, capacity=capacity)
     h = build_serial_hierarchy(adj, setup_config)
-    return LaplacianSolver(hierarchy=h, cycle_config=cycle_config, n=n)
+    return LaplacianSolver(hierarchy=h, cycle_config=cycle_config, n=n,
+                           perm=perm, inv_perm=inv_perm)

@@ -26,9 +26,10 @@ import numpy as np
 from repro.core.cycles import CycleConfig
 from repro.core.hierarchy import (Hierarchy, SetupConfig, apply_cycle,
                                   build_hierarchy, hierarchy_stats)
-from repro.core.krylov import SolveInfo, pcg, pcg_scanned
+from repro.core.krylov import (BlockSolveInfo, SolveInfo, pcg, pcg_block,
+                               pcg_scanned)
 from repro.core.wda import pcg_iteration_work, wda
-from repro.graphs.generators import to_laplacian_coo
+from repro.graphs.generators import random_relabel, to_laplacian_coo
 from repro.sparse.coo import COO
 
 
@@ -61,11 +62,8 @@ class LaplacianSolver:
         vals = np.asarray(vals, np.float32)
         perm = inv_perm = None
         if random_ordering:
-            rng = np.random.default_rng(setup_config.seed)
-            perm = rng.permutation(n)          # old id -> new id
-            inv_perm = np.argsort(perm)
-            rows = perm[rows]
-            cols = perm[cols]
+            rows, cols, perm, inv_perm = random_relabel(
+                n, rows, cols, setup_config.seed)
         adj = to_laplacian_coo(n, rows, cols, vals, capacity=capacity)
         h = build_hierarchy(adj, setup_config)
         return LaplacianSolver(hierarchy=h, cycle_config=cycle_config, n=n,
@@ -95,12 +93,35 @@ class LaplacianSolver:
         b_int = self._to_internal(jnp.asarray(b, jnp.float32))
         M = self.precondition if precondition else None
         x, info = pcg(self.matvec, b_int, precond=M, tol=tol, maxiter=maxiter)
-        w = pcg_iteration_work(self.hierarchy, self.cycle_config) if precondition else 1.0
+        w = self.iteration_work(precondition)
         out = LaplacianSolveInfo(
             iters=info.iters, residual_norms=info.residual_norms,
             converged=info.converged, work_per_iteration=w,
             wda=wda(info.residual_norms, w))
         return self._from_internal(x), out
+
+    # ------------------------------------------------------------------
+    def solve_block(self, B, tol: float = 1e-8, maxiter: int = 200,
+                    precondition: bool = True, exact_columns: bool = True
+                    ) -> tuple[jax.Array, BlockSolveInfo]:
+        """Blocked multi-RHS solve: ``B`` is (n, k), one hierarchy, k solves.
+
+        With ``exact_columns=True`` each column's trajectory is bitwise
+        identical to a single-RHS ``solve`` of that column; with ``False``
+        the SpMV and V-cycle run vmapped over all columns at once (see
+        ``pcg_block``).
+        """
+        B_int = self._to_internal(jnp.asarray(B, jnp.float32))
+        M = self.precondition if precondition else None
+        X, info = pcg_block(self.matvec, B_int, precond=M, tol=tol,
+                            maxiter=maxiter, exact_columns=exact_columns)
+        return self._from_internal(X), info
+
+    def iteration_work(self, precondition: bool = True) -> float:
+        """Work of one PCG iteration in finest-matvec equivalents (WDA)."""
+        if not precondition:
+            return 1.0
+        return pcg_iteration_work(self.hierarchy, self.cycle_config)
 
     # ------------------------------------------------------------------
     def build_solve_step(self, n_iters: int = 30):

@@ -37,7 +37,7 @@ from repro.core.graph import GraphLevel, graph_from_adjacency
 from repro.core.hierarchy import Hierarchy, SetupConfig, build_hierarchy
 from repro.dist.partition import (edge_spec, mesh_geometry,
                                   partition_edges_2d)
-from repro.graphs.generators import to_laplacian_coo
+from repro.graphs.generators import random_relabel, to_laplacian_coo
 
 
 @jax.tree_util.register_dataclass
@@ -131,40 +131,77 @@ class DistLevelMeta:
     fill_fraction: float
 
 
-def _pcg_scanned_masked(matvec, b, precond, n_iters: int, n: int, n_pad: int):
-    """Fixed-iteration PCG on [n_pad] vectors whose real support is [:n].
+def _block_ops(matvec, precond, n: int, n_pad: int):
+    """Column-lifted operators + masked projection for [n_pad, k] blocks.
 
-    Identical to ``core.krylov.pcg_scanned`` except the mean-free
-    projection (Laplacian nullspace handling) averages over the n real
-    entries and pins padding to zero — padded slots then never contribute
-    to dot products or norms.
+    The mean-free projection (Laplacian nullspace handling) averages over
+    the n real entries and pins padding to zero — padded slots never
+    contribute to dot products or norms. ``matvec``/``precond`` are
+    single-vector functions vmapped over the columns, so the distributed
+    SpMV and V-cycle collectives run once per iteration for the whole
+    block.
     """
-    mask = jnp.arange(n_pad) < n
+    mask = (jnp.arange(n_pad) < n)[:, None]
+    bmv = jax.vmap(matvec, in_axes=1, out_axes=1)
+    bM = jax.vmap(precond, in_axes=1, out_axes=1)
 
-    def proj(v):
-        v = jnp.where(mask, v, 0)
-        return jnp.where(mask, v - jnp.sum(v) / n, 0)
+    def proj(V):
+        V = jnp.where(mask, V, 0)
+        return jnp.where(mask, V - jnp.sum(V, axis=0)[None, :] / n, 0)
 
-    b = proj(b)
-    x0 = jnp.zeros_like(b)
-    r0 = proj(b - matvec(x0))
-    z0 = proj(precond(r0))
-    carry0 = (x0, r0, z0, z0, jnp.vdot(r0, z0))
+    def cnorm(V):
+        return jnp.linalg.norm(V, axis=0)
 
-    def body(carry, _):
-        x, r, z, p, rz = carry
-        Ap = matvec(p)
-        alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
-        x = x + alpha * p
-        r = proj(r - alpha * Ap)
-        z = proj(precond(r))
-        rz_new = jnp.vdot(r, z)
-        beta = rz_new / jnp.maximum(rz, 1e-30)
-        p = z + beta * p
-        return (x, r, z, p, rz_new), jnp.linalg.norm(r)
+    return bmv, bM, proj, cnorm
 
-    (x, r, *_), norms = jax.lax.scan(body, carry0, None, length=n_iters)
-    return x, jnp.concatenate([jnp.linalg.norm(r0)[None], norms])
+
+def _pcg_block_init(matvec, B, precond, n: int, n_pad: int):
+    """Blocked PCG carry for B [n_pad, k]: (X, R, Z, P, rz, iters, r0n)."""
+    bmv, bM, proj, cnorm = _block_ops(matvec, precond, n, n_pad)
+    k = B.shape[1]
+    B = proj(B)
+    X0 = jnp.zeros_like(B)
+    R0 = proj(B - bmv(X0))
+    Z0 = proj(bM(R0))
+    return (X0, R0, Z0, Z0, jnp.sum(R0 * Z0, axis=0),
+            jnp.zeros((k,), jnp.int32), cnorm(R0))
+
+
+def _pcg_block_chunk(matvec, precond, n: int, n_pad: int, tol: float,
+                     length: int, carry):
+    """Advance a blocked PCG carry ``length`` scan steps.
+
+    Each step carries a residual-based active mask: once a column's
+    residual norm drops below ``tol * ||r0||`` its alpha is zeroed and its
+    residual pinned, so x/r stop updating while the scan (fixed shapes,
+    fixed length — the jit/dry-run contract) carries the remaining columns.
+    ``tol=0`` reproduces the original never-exit behavior.
+
+    Returns ``(carry, norms [length, k])``; ``carry[5]`` counts the steps
+    each column was active for, cumulative across chunks.
+    """
+    bmv, bM, proj, cnorm = _block_ops(matvec, precond, n, n_pad)
+    r0n = carry[6]
+
+    def body(state, _):
+        X, R, Z, P, rz, iters = state
+        active = cnorm(R) > tol * r0n
+        iters = iters + active.astype(jnp.int32)
+        Ap = bmv(P)
+        pAp = jnp.sum(P * Ap, axis=0)
+        alpha = jnp.where(active, rz / jnp.maximum(pAp, 1e-30), 0.0)
+        X = X + alpha[None, :] * P
+        # Converged columns stop updating: freeze r exactly rather than
+        # re-projecting it (which would drift the reported norms).
+        R = jnp.where(active[None, :], proj(R - alpha[None, :] * Ap), R)
+        Z = jnp.where(active[None, :], proj(bM(R)), Z)
+        rz_new = jnp.sum(R * Z, axis=0)
+        beta = jnp.where(active, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+        P = Z + beta[None, :] * P
+        return (X, R, Z, P, rz_new, iters), cnorm(R)
+
+    state, norms = jax.lax.scan(body, tuple(carry[:6]), None, length=length)
+    return state + (r0n,), norms
 
 
 def _partition_level(level: GraphLevel, mesh) -> tuple[DistGraphLevel, float]:
@@ -193,10 +230,12 @@ class DistLaplacianSolver:
     Public surface (pinned by tests / configs / examples):
 
     * ``setup(n, rows, cols, vals, mesh, setup_config, ...)``
-    * ``solve(b, n_iters)`` -> ``(x, residual_norms)``
+    * ``solve(b, n_iters, tol)`` -> ``(x, residual_norms)``
+    * ``solve_block(B, n_iters, tol)`` -> ``(X, norms, iters)`` multi-RHS
     * ``build_solve_step(n_iters)`` -> jit-able ``(arrays, coarse_h, b_pad)``
     * ``level_meta`` (per distributed level, with ``.kind``), ``coarse_h``
-      (replicated tail ``Hierarchy``), ``arrays``, ``n_pad``.
+      (replicated tail ``Hierarchy``), ``arrays``, ``n_pad``,
+      ``work_per_iteration`` (WDA accounting, from the pre-split hierarchy).
     """
 
     arrays: DistArrays
@@ -208,6 +247,7 @@ class DistLaplacianSolver:
     mesh: object
     perm: np.ndarray | None = None         # §2.2 random ordering
     inv_perm: np.ndarray | None = None
+    work_per_iteration: float = 0.0        # PCG iter cost in finest matvecs
     # jitted solve steps keyed by n_iters, so repeat solves (multiple
     # right-hand sides, benchmark loops) hit the jit cache instead of
     # recompiling the whole PCG + V-cycle program.
@@ -227,11 +267,8 @@ class DistLaplacianSolver:
         vals = np.asarray(vals, np.float32)
         perm = inv_perm = None
         if random_ordering:
-            rng = np.random.default_rng(setup_config.seed)
-            perm = rng.permutation(n)
-            inv_perm = np.argsort(perm)
-            rows = perm[rows]
-            cols = perm[cols]
+            rows, cols, perm, inv_perm = random_relabel(
+                n, rows, cols, setup_config.seed)
 
         adj = to_laplacian_coo(n, rows, cols, vals)
         h = build_hierarchy(adj, setup_config)
@@ -270,32 +307,81 @@ class DistLaplacianSolver:
 
         arrays = DistArrays(fine=fine, transfers=tuple(dist_transfers),
                             lam_maxes=tuple(lam_maxes))
+        from repro.core.wda import pcg_iteration_work
+        work = pcg_iteration_work(h, cycle_config)  # pre-split hierarchy
         return DistLaplacianSolver(
             arrays=arrays, coarse_h=coarse_h, level_meta=level_meta,
             cycle_config=cycle_config, n=n, n_pad=n_pad, mesh=mesh,
-            perm=perm, inv_perm=inv_perm)
+            perm=perm, inv_perm=inv_perm, work_per_iteration=work)
 
     # ------------------------------------------------------------------
-    def build_solve_step(self, n_iters: int = 30):
-        """(arrays, coarse_h, b_pad [n_pad]) -> (x_pad, residual_norms)."""
+    def _operators(self, arrays, coarse_h):
+        """(matvec, precond) on [n_pad] vectors for the current split."""
         n, n_pad = self.n, self.n_pad
         cyc = self.cycle_config
+        if isinstance(arrays.fine, DistGraphLevel):
+            matvec = arrays.fine.matvec_padded
+        else:
+            matvec = arrays.fine.laplacian_matvec       # n_pad == n fallback
+        transfers = arrays.transfers + coarse_h.transfers
+        lams = arrays.lam_maxes + coarse_h.lam_maxes
+
+        def precond(r_pad):
+            z = cycle(transfers, lams, coarse_h.coarse_inv, r_pad[:n], cyc)
+            return jnp.pad(z, (0, n_pad - n))
+
+        return matvec, precond
+
+    def build_init_step(self):
+        """(arrays, coarse_h, B_pad [n_pad, k]) -> blocked PCG carry."""
+        n, n_pad = self.n, self.n_pad
+
+        def step(arrays, coarse_h, B_pad):
+            matvec, precond = self._operators(arrays, coarse_h)
+            return _pcg_block_init(matvec, B_pad, precond, n, n_pad)
+
+        return step
+
+    def build_chunk_step(self, length: int, tol: float = 0.0):
+        """(arrays, coarse_h, carry) -> (carry, norms [length, k])."""
+        n, n_pad = self.n, self.n_pad
+
+        def step(arrays, coarse_h, carry):
+            matvec, precond = self._operators(arrays, coarse_h)
+            return _pcg_block_chunk(matvec, precond, n, n_pad, tol, length,
+                                    carry)
+
+        return step
+
+    def build_solve_block_step(self, n_iters: int = 30, tol: float = 0.0):
+        """(arrays, coarse_h, B_pad [n_pad, k]) -> (X_pad, norms, iters).
+
+        One fused program — init + full-length scan — so a dry-run lowering
+        sees every collective of the solve phase in a single HLO.
+        """
+        init = self.build_init_step()
+        chunk = self.build_chunk_step(n_iters, tol=tol)
+
+        def step(arrays, coarse_h, B_pad):
+            carry = init(arrays, coarse_h, B_pad)
+            r0n = carry[6]
+            carry, norms = chunk(arrays, coarse_h, carry)
+            return (carry[0], jnp.concatenate([r0n[None, :], norms], axis=0),
+                    carry[5])
+
+        return step
+
+    def build_solve_step(self, n_iters: int = 30, tol: float = 0.0):
+        """(arrays, coarse_h, b_pad [n_pad]) -> (x_pad, residual_norms).
+
+        The single-RHS jit/dry-run entry point (pinned by configs and the
+        HLO-lowering tests): a k=1 column through the blocked scanned PCG.
+        """
+        block_step = self.build_solve_block_step(n_iters, tol=tol)
 
         def step(arrays, coarse_h, b_pad):
-            if isinstance(arrays.fine, DistGraphLevel):
-                matvec = arrays.fine.matvec_padded
-            else:
-                matvec = arrays.fine.laplacian_matvec   # n_pad == n fallback
-            transfers = arrays.transfers + coarse_h.transfers
-            lams = arrays.lam_maxes + coarse_h.lam_maxes
-
-            def precond(r_pad):
-                z = cycle(transfers, lams, coarse_h.coarse_inv,
-                          r_pad[:n], cyc)
-                return jnp.pad(z, (0, n_pad - n))
-
-            return _pcg_scanned_masked(matvec, b_pad, precond, n_iters,
-                                       n, n_pad)
+            x, norms, _ = block_step(arrays, coarse_h, b_pad[:, None])
+            return x[:, 0], norms[:, 0]
 
         return step
 
@@ -306,12 +392,67 @@ class DistLaplacianSolver:
     def _from_internal(self, x: jax.Array) -> jax.Array:
         return x[jnp.asarray(self.perm)] if self.perm is not None else x
 
-    def solve(self, b, n_iters: int = 30):
-        """Fixed-iteration distributed PCG solve. Returns (x [n], norms)."""
+    def solve(self, b, n_iters: int = 30, tol: float = 1e-8):
+        """Distributed PCG solve: at most ``n_iters`` scan steps, with a
+        residual-based early exit at ``tol * ||r0||`` (the converged column
+        freezes; pass ``tol=0`` for the fixed-iteration behavior).
+
+        Returns (x [n], norms [T+1]) with T <= n_iters (the solve stops at
+        the first chunk boundary after convergence).
+        """
         b = jnp.asarray(b, jnp.float32)
-        b_pad = jnp.pad(self._to_internal(b), (0, self.n_pad - self.n))
-        step = self._steps.get(n_iters)
-        if step is None:
-            step = self._steps[n_iters] = jax.jit(self.build_solve_step(n_iters))
-        x_pad, norms = step(self.arrays, self.coarse_h, b_pad)
-        return self._from_internal(x_pad[: self.n]), norms
+        X, norms, _ = self.solve_block(b[:, None], n_iters=n_iters, tol=tol)
+        return X[:, 0], norms[:, 0]
+
+    # chunk length for the eager solve path: long enough that compiles and
+    # host round-trips amortise, short enough that a solve converging in
+    # tens of iterations never pays hundreds (the scan itself cannot exit).
+    _CHUNK = 16
+
+    def solve_block(self, B, n_iters: int = 30, tol: float = 1e-8):
+        """Blocked multi-RHS distributed solve: ``B`` is (n, k).
+
+        All k columns ride one scanned PCG program — the 2D-sharded SpMV
+        and V-cycle collectives run once per iteration for the whole block.
+        With ``tol > 0`` the scan runs in chunks of ``_CHUNK`` iterations
+        and stops at the first chunk boundary where every column has
+        converged, so a generous ``n_iters`` cap costs nothing once the
+        block is done. Returns (X [n, k], norms [T+1, k], iters [k]) with
+        T <= n_iters.
+        """
+        B = jnp.asarray(B, jnp.float32)
+        if B.ndim != 2:
+            raise ValueError(f"solve_block expects B of shape (n, k), "
+                             f"got {B.shape}")
+        k = B.shape[1]
+        B_pad = jnp.pad(self._to_internal(B), ((0, self.n_pad - self.n),
+                                               (0, 0)))
+        tol = float(tol)
+
+        init = self._steps.get(("init", k))
+        if init is None:
+            init = self._steps[("init", k)] = jax.jit(self.build_init_step())
+        carry = init(self.arrays, self.coarse_h, B_pad)
+        r0n = np.asarray(jax.device_get(carry[6]))
+
+        # small caps run as one program (one compile, the old behavior);
+        # chunking only pays once the cap is far beyond typical convergence
+        chunked = tol > 0 and n_iters > 2 * self._CHUNK
+        norms_parts = [r0n[None, :]]
+        it = 0
+        while it < n_iters:
+            length = min(self._CHUNK, n_iters - it) if chunked else n_iters
+            key = ("chunk", k, length, tol)
+            step = self._steps.get(key)
+            if step is None:
+                step = self._steps[key] = jax.jit(
+                    self.build_chunk_step(length, tol=tol))
+            carry, ns = step(self.arrays, self.coarse_h, carry)
+            norms_parts.append(np.asarray(jax.device_get(ns)))
+            it += length
+            if tol > 0 and np.all(norms_parts[-1][-1] <= tol * r0n):
+                break
+        X_pad, iters = carry[0], carry[5]
+        norms = np.concatenate(norms_parts, axis=0)
+        return (self._from_internal(X_pad[: self.n]), norms,
+                np.asarray(jax.device_get(iters)))

@@ -162,6 +162,19 @@ def ensure_connected(n, rows, cols, vals, seed: int = 0):
     return n, out_r, out_c, out_w
 
 
+def random_relabel(n, rows, cols, seed: int):
+    """The paper's §2.2 random vertex relabeling, shared by every solver.
+
+    A pure relabeling: ``new = perm[old]``. Returns ``(rows, cols, perm,
+    inv_perm)``; callers map RHS/solutions with ``b[inv_perm]`` /
+    ``x[perm]`` so the ordering is transparent to users.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)            # old id -> new id
+    inv_perm = np.argsort(perm)
+    return perm[rows], perm[cols], perm, inv_perm
+
+
 def to_laplacian_coo(n, rows, cols, vals, capacity=None):
     """Adjacency edge list -> padded COO of the adjacency (off-diag part).
 

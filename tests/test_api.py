@@ -1,0 +1,196 @@
+"""The unified ``repro.api`` facade: Problem validation, backend registry,
+and one Problem -> Solver -> Result surface over every backend."""
+
+import numpy as np
+import pytest
+
+from repro.api import (Problem, ProblemValidationError, SolveResult, Solver,
+                       SolverOptions, available_backends, get_backend,
+                       register_backend, resolve_backend, setup, solve)
+from repro.graphs.generators import (barabasi_albert, ensure_connected,
+                                     grid_2d, to_laplacian_coo)
+from repro.core.graph import graph_from_adjacency
+
+import jax
+import jax.numpy as jnp
+
+
+def quickstart_graph():
+    return ensure_connected(*barabasi_albert(800, m=3, seed=0, weighted=True))
+
+
+def mean_free(rng, n, k=None):
+    b = rng.normal(size=n if k is None else (n, k)).astype(np.float32)
+    return b - b.mean(axis=0)
+
+
+OPTS = SolverOptions(coarsest_size=64, max_iters=100)
+
+
+class TestProblem:
+    def test_from_edges_roundtrip(self):
+        n, r, c, v = quickstart_graph()
+        p = Problem.from_edges(n, r, c, v)
+        assert p.n_vertices == n
+        assert p.n_edges == len(r) // 2
+        np.testing.assert_allclose(p.degrees().sum(), v.sum(), rtol=1e-5)
+
+    def test_rejects_duplicate_edges(self):
+        with pytest.raises(ProblemValidationError, match="duplicate edge"):
+            Problem.from_edges(4, [0, 0, 1, 1], [1, 1, 0, 0],
+                               [1.0, 1.0, 1.0, 1.0])
+
+    def test_allow_duplicates_keeps_summing(self):
+        p = Problem.from_edges(4, [0, 0, 1, 1], [1, 1, 0, 0],
+                               [1.0, 2.0, 1.0, 2.0], allow_duplicates=True)
+        assert len(p.rows) == 2           # collapsed to one entry per direction
+        np.testing.assert_allclose(sorted(p.vals), [3.0, 3.0])
+
+    def test_rejects_self_loops(self):
+        with pytest.raises(ProblemValidationError, match="self-loop"):
+            Problem.from_edges(4, [0, 1, 2], [1, 0, 2], [1.0, 1.0, 1.0])
+
+    def test_rejects_asymmetric_edge_list(self):
+        with pytest.raises(ProblemValidationError, match="not symmetric"):
+            Problem.from_edges(4, [0], [1], [1.0])
+
+    def test_symmetrize_escape_hatch(self):
+        p = Problem.from_edges(4, [0, 1, 2], [1, 2, 3], symmetrize=True)
+        assert p.n_edges == 3
+        assert len(p.rows) == 6           # both directions stored
+
+    def test_rejects_out_of_range_and_bad_weights(self):
+        with pytest.raises(ProblemValidationError, match="outside"):
+            Problem.from_edges(3, [0, 5], [5, 0], [1.0, 1.0])
+        with pytest.raises(ProblemValidationError, match="non-positive"):
+            Problem.from_edges(3, [0, 1], [1, 0], [-1.0, -1.0])
+        with pytest.raises(ProblemValidationError, match="non-finite"):
+            Problem.from_edges(3, [0, 1], [1, 0], [np.nan, np.nan])
+
+    def test_dtype_policy(self):
+        n, r, c, v = quickstart_graph()
+        p64 = Problem.from_edges(n, r, c, v.astype(np.float64),
+                                 dtype="float64")
+        assert p64.vals.dtype == np.float64
+        with pytest.raises(ProblemValidationError, match="dtype"):
+            Problem.from_edges(n, r, c, v, dtype="int32")
+
+    def test_from_adjacency_dense_and_sparse(self):
+        import scipy.sparse as sp
+
+        a = np.array([[0, 2, 0], [2, 0, 1], [0, 1, 0]], np.float32)
+        p = Problem.from_adjacency(a)
+        assert p.n_edges == 2
+        p2 = Problem.from_adjacency(sp.csr_matrix(a))
+        assert p2.n_edges == 2
+        np.testing.assert_allclose(sorted(p.vals), sorted(p2.vals))
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        names = available_backends()
+        for name in ("single", "serial_ref", "dist", "auto"):
+            assert name in names
+
+    def test_unknown_backend_is_a_clear_error(self):
+        with pytest.raises(KeyError, match="available"):
+            get_backend("not-a-backend")
+
+    def test_resolve_passthrough_and_auto(self):
+        assert resolve_backend("single") == "single"
+        # auto: dist iff a distributed context is available
+        expect = "dist" if len(jax.devices()) > 1 else "single"
+        assert resolve_backend("auto") == expect
+        assert resolve_backend("auto", mesh=object()) == "dist"
+
+    def test_custom_backend_roundtrip(self):
+        class _Handle:
+            work_per_iteration = 1.0
+
+            def solve_block(self, B, tol, max_iters):
+                k = B.shape[1]
+                return (np.zeros_like(B),
+                        np.array([[1.0] * k, [0.0] * k]), np.ones(k, int))
+
+            def stats(self):
+                return {}
+
+        register_backend("_test_null", lambda p, o, m: _Handle())
+        try:
+            n, r, c, v = quickstart_graph()
+            p = Problem.from_edges(n, r, c, v)
+            x, res = solve(p, np.zeros(n, np.float32), backend="_test_null")
+            assert res.backend == "_test_null" and res.converged
+        finally:
+            from repro.api import registry
+            registry._REGISTRY.pop("_test_null")
+
+
+class TestFacade:
+    @pytest.mark.parametrize("backend", ["single", "serial_ref", "dist"])
+    def test_quickstart_on_every_backend(self, backend):
+        """The acceptance path: same Problem, same options, same SolveResult
+        fields and semantics on all three backends."""
+        n, r, c, v = quickstart_graph()
+        p = Problem.from_edges(n, r, c, v)
+        b = mean_free(np.random.default_rng(1), n)
+        solver = setup(p, OPTS, backend=backend)
+        assert isinstance(solver, Solver) and solver.backend == backend
+        x, res = solver.solve(b)
+        assert isinstance(res, SolveResult)
+        assert res.converged and res.backend == backend
+        assert res.iters == res.iters_per_rhs.max() > 0
+        assert res.residual_norms.shape == (res.iters + 1, 1)
+        assert np.isfinite(res.wda) and res.work_per_iteration >= 1.0
+        assert res.solve_seconds > 0 and res.setup_seconds > 0
+        # identical field names on every backend (frozen by this tuple)
+        assert tuple(sorted(res.__dataclass_fields__)) == (
+            "backend", "converged", "iters", "iters_per_rhs", "n_rhs",
+            "residual_norms", "setup_seconds", "solve_seconds", "wda",
+            "work_per_iteration")
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        resid = np.asarray(b) - np.asarray(
+            jax.device_get(level.laplacian_matvec(jnp.asarray(x))))
+        assert np.linalg.norm(resid) <= 1e-4 * np.linalg.norm(b)
+
+    def test_stopping_controls_honored(self):
+        n, r, c, v = quickstart_graph()
+        p = Problem.from_edges(n, r, c, v)
+        b = mean_free(np.random.default_rng(2), n)
+        solver = setup(p, OPTS, backend="single")
+        _, res = solver.solve(b, max_iters=2)
+        assert not res.converged and res.iters == 2
+        _, loose = solver.solve(b, tol=1e-2)
+        _, tight = solver.solve(b, tol=1e-8)
+        assert loose.converged and tight.converged
+        assert loose.iters < tight.iters
+
+    def test_one_shot_solve_and_shape_errors(self):
+        n, r, c, v = quickstart_graph()
+        p = Problem.from_edges(n, r, c, v)
+        x, res = solve(p, mean_free(np.random.default_rng(3), n), OPTS,
+                       backend="single")
+        assert res.converged and x.shape == (n,)
+        solver = setup(p, OPTS, backend="single")
+        with pytest.raises(ValueError, match="shape"):
+            solver.solve(np.zeros(n - 1, np.float32))
+        with pytest.raises(TypeError, match="Problem"):
+            setup(np.zeros((3, 3)))
+
+    def test_unpreconditioned_ablation(self):
+        n, r, c, v = ensure_connected(*grid_2d(20, 20))
+        p = Problem.from_edges(n, r, c, v)
+        b = mean_free(np.random.default_rng(4), n)
+        opts = SolverOptions(coarsest_size=64, max_iters=1000,
+                             precondition=False)
+        _, res = solve(p, b, opts, backend="single")
+        assert res.converged and res.work_per_iteration == 1.0
+        with pytest.raises(ValueError, match="precondition"):
+            setup(p, opts, backend="dist")
+
+    def test_hierarchy_stats_exposed(self):
+        n, r, c, v = quickstart_graph()
+        p = Problem.from_edges(n, r, c, v)
+        for backend in ("single", "dist"):
+            st = setup(p, OPTS, backend=backend).stats()
+            assert st["n_levels"] >= 2 and len(st["levels"]) >= 1

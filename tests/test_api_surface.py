@@ -1,0 +1,77 @@
+"""API-surface snapshot: the public names and signatures of ``repro.api``
+are frozen in ``tests/data/api_surface.txt`` so accidental facade changes
+fail fast in CI.
+
+Intentional changes: regenerate the snapshot and commit it together with
+the code change (and a MIGRATION.md note if a name moved):
+
+    PYTHONPATH=src python tests/test_api_surface.py --regen
+"""
+
+import dataclasses
+import inspect
+import os
+
+SNAPSHOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data",
+                        "api_surface.txt")
+
+
+def render_api_surface() -> str:
+    import repro.api as api
+
+    lines = []
+    for name in sorted(api.__all__):
+        obj = getattr(api, name)
+        if inspect.isclass(obj):
+            base = (f"class {name}({obj.__mro__[1].__name__})"
+                    if obj.__mro__[1] is not object else f"class {name}")
+            lines.append(base)
+            if dataclasses.is_dataclass(obj):
+                for f in dataclasses.fields(obj):
+                    lines.append(f"    field {f.name}")
+            for mname, m in sorted(vars(obj).items()):
+                if mname.startswith("_"):
+                    continue
+                if isinstance(m, staticmethod):
+                    sig = inspect.signature(m.__func__)
+                    lines.append(f"    staticmethod {mname}{sig}")
+                elif isinstance(m, property):
+                    lines.append(f"    property {mname}")
+                elif inspect.isfunction(m):
+                    lines.append(f"    def {mname}{inspect.signature(m)}")
+        elif inspect.isfunction(obj):
+            lines.append(f"def {name}{inspect.signature(obj)}")
+        else:
+            lines.append(f"obj {name}")
+    return "\n".join(lines) + "\n"
+
+
+def test_api_surface_matches_snapshot():
+    with open(SNAPSHOT) as f:
+        frozen = f.read()
+    current = render_api_surface()
+    assert current == frozen, (
+        "repro.api public surface changed. If intentional, regenerate with\n"
+        "    PYTHONPATH=src python tests/test_api_surface.py --regen\n"
+        "and commit the snapshot (plus a MIGRATION.md note for renames).\n"
+        "Diff:\n"
+        + "\n".join(l for l in _diff(frozen, current)))
+
+
+def _diff(a: str, b: str):
+    import difflib
+
+    return difflib.unified_diff(a.splitlines(), b.splitlines(),
+                                "frozen", "current", lineterm="")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        os.makedirs(os.path.dirname(SNAPSHOT), exist_ok=True)
+        with open(SNAPSHOT, "w") as f:
+            f.write(render_api_surface())
+        print(f"wrote {SNAPSHOT}")
+    else:
+        print(render_api_surface(), end="")
