@@ -17,11 +17,11 @@ from repro.launch.mesh import HBM_BW
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)  # compile/warm
-    t0 = time.time()
+    jax.block_until_ready(fn(*args))  # compile/warm, fully retired
+    t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
-    return (time.time() - t0) / reps * 1e6  # µs
+    return (time.perf_counter() - t0) / reps * 1e6  # µs
 
 
 def bench_kernels(n=8192, width=8, d=32, hot=4):

@@ -115,6 +115,31 @@ def main(argv=None) -> None:
             _emit_csv(f"multi_rhs_k{r['k']}", r["blocked_s"] * 1e6,
                       r["speedup_vmap"])
 
+    if want("spmv"):
+        from benchmarks.spmv_bench import bench_spmv, write_root_json
+
+        out = bench_spmv(scale=scale)
+        _save("spmv_hotpath", out)
+        path = write_root_json(out)
+        print("\n== SpMV hot path: COO segment-sum vs hybrid ELL+COO "
+              "(Pallas) vs fused Jacobi ==")
+        for r in out["graphs"]:
+            t = r["timings_us"]
+            bm = r["bytes_moved"]
+            print(f"  {r['graph']:>18s} n={r['n']:>6d} nnz={r['nnz']:>7d} "
+                  f"w={r['width']:>2d} spill={r['spill_nnz']:>5d}: "
+                  f"coo={t['spmv_coo']:9.0f}µs "
+                  f"ell={t['spmv_ell_pallas']:9.0f}µs "
+                  f"jac fused/composed bytes="
+                  f"{bm['jacobi_fused']/bm['jacobi_composed_ell']:.2f}x")
+            _emit_csv(f"spmv_{r['graph']}_coo", round(t["spmv_coo"]),
+                      bm["spmv_coo"])
+            _emit_csv(f"spmv_{r['graph']}_ell", round(t["spmv_ell_pallas"]),
+                      bm["spmv_ell"])
+            _emit_csv(f"jacobi_{r['graph']}_fused",
+                      round(t["jacobi_fused_pallas"]), bm["jacobi_fused"])
+        print(f"  (schema {out['schema']} -> {path})")
+
     if want("kernels"):
         from benchmarks.kernels_bench import bench_kernels
 

@@ -1,0 +1,170 @@
+"""SpMV hot-path benchmark: COO segment-sum vs hybrid ELL+COO vs fused Jacobi.
+
+This is the perf record for the solver's dominant cost (the paper measures
+SpMV as >50% of solve time, §3.2). Three execution formats of the same
+Laplacian matvec are timed across graph families / split widths:
+
+* ``spmv_coo``          — gather + ``segment_sum`` (the setup-phase format),
+* ``spmv_ell_pallas``   — the Pallas hybrid ELL+COO kernel path,
+* ``spmv_hybrid_jnp``   — the vectorised jnp execution of the same split
+  (what ``matvec_backend="auto"`` runs off-TPU),
+
+plus one full smoother sweep both ways:
+
+* ``jacobi_composed_coo`` — SpMV + elementwise residual/update passes,
+* ``jacobi_fused_pallas`` — the fused kernel (one pass over
+  (col, val, x, b, deg) per sweep).
+
+Wall times off-TPU are interpret-mode/CPU numbers — they track regressions,
+not TPU performance. The ``bytes_moved`` model is backend-independent HBM
+traffic per call (same accounting as ``benchmarks/kernels_bench.py``): the
+fused sweep moves strictly fewer bytes and fewer passes over the n-vector
+state than the composed version, which is the point of the fusion.
+
+Running this module directly — or through ``benchmarks/run.py --only
+spmv`` — writes the stable-schema ``BENCH_hotpath.json`` at the repo root
+so the perf trajectory is recorded in-tree.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.kernels_bench import _time
+
+SCHEMA = "repro.bench.hotpath/v1"
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_hotpath.json")
+
+FLOAT = 4          # bytes per f32 / int32 element
+
+
+def _graphs(scale: float):
+    from repro.graphs.generators import (barabasi_albert, ensure_connected,
+                                         grid_2d, watts_strogatz)
+
+    side = max(int(40 * (scale / 0.12) ** 0.5), 16)
+    n_ba = max(int(2048 * scale / 0.12), 512)
+    n_ws = max(int(2048 * scale / 0.12), 512)
+    return [
+        ("grid_2d", ensure_connected(*grid_2d(side, side, weighted=True))),
+        ("barabasi_albert",
+         ensure_connected(*barabasi_albert(n_ba, m=4, seed=0,
+                                           weighted=True))),
+        ("watts_strogatz",
+         ensure_connected(*watts_strogatz(n_ws, k=6, p=0.1, seed=0,
+                                          weighted=True))),
+    ]
+
+
+def _bytes_model(n: int, nnz: int, width: int, spill: int) -> dict:
+    """Backend-independent HBM bytes per call for each execution format.
+
+    COO SpMV streams (row, col, val) + a gathered x read per edge and
+    writes y; ELL streams the [n, width] (col, val) tiles with x resident
+    plus the spill edges. A composed Jacobi sweep re-reads the SpMV output
+    and makes separate passes over (b, deg, x) to form the residual and
+    update; the fused kernel folds all of that into the SpMV tile pass.
+    """
+    coo_spmv = 4 * FLOAT * nnz + 2 * FLOAT * n        # r,c,v,x-gather + y rw
+    ell_spmv = (2 * FLOAT * n * width                 # col,val tiles
+                + 2 * FLOAT * n                       # x read + y write
+                + 4 * FLOAT * spill)                  # hybrid remainder
+    composed_tail = 5 * FLOAT * n                     # y reread + b,deg,x + x'
+    jacobi_fused = (2 * FLOAT * n * width + 4 * FLOAT * spill
+                    + 5 * FLOAT * n)                  # x,b,deg,x-gather + x'
+    return dict(spmv_coo=coo_spmv, spmv_ell=ell_spmv,
+                jacobi_composed_coo=coo_spmv + composed_tail,
+                jacobi_composed_ell=ell_spmv + composed_tail,
+                jacobi_fused=jacobi_fused)
+
+
+def bench_spmv(scale: float = 0.12) -> dict:
+    from repro.core.graph import graph_from_adjacency
+    from repro.core.smoothers import jacobi
+    from repro.graphs.generators import to_laplacian_coo
+    from repro.kernels.jacobi import jacobi_step
+    from repro.sparse.coo import spmv
+    from repro.sparse.matvec import (hybrid_spmv, resolve_ell_mode,
+                                     select_ell_width, split_hybrid)
+
+    rows = []
+    for name, (n, r, c, v) in _graphs(scale):
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        adj = level.adj
+        nnz = int(jax.device_get(adj.nnz))
+        counts = np.bincount(
+            np.asarray(jax.device_get(adj.row))[: nnz], minlength=n)
+        width = select_ell_width(counts, "ell")
+        ell, rem, stats = split_hybrid(adj, width)
+        spill = stats["spill_nnz"]
+
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+
+        coo_spmv = jax.jit(lambda x: spmv(adj, x))
+        ell_pallas = jax.jit(lambda x: hybrid_spmv(ell, rem, x, "pallas"))
+        ell_jnp = jax.jit(lambda x: hybrid_spmv(ell, rem, x, "jnp"))
+        jac_composed = jax.jit(
+            lambda b, x: jacobi(level, b, x, n_sweeps=1))
+        inv_d = 1.0 / jnp.maximum(level.deg, 1e-30)
+
+        def jac_composed_ell(b, x):
+            r = b - (level.deg * x - hybrid_spmv(ell, rem, x, "pallas"))
+            return x + (2.0 / 3.0) * inv_d * r
+
+        def jac_fused(b, x):
+            b_eff = b if rem is None else b + spmv(rem, x)
+            return jacobi_step(ell.col, ell.val, x, b_eff, level.deg)
+
+        timings = dict(
+            spmv_coo=_time(coo_spmv, x),
+            spmv_ell_pallas=_time(ell_pallas, x),
+            spmv_hybrid_jnp=_time(ell_jnp, x),
+            jacobi_composed_coo=_time(jac_composed, b, x),
+            jacobi_composed_ell=_time(jax.jit(jac_composed_ell), b, x),
+            jacobi_fused_pallas=_time(jax.jit(jac_fused), b, x),
+        )
+        rows.append(dict(
+            graph=name, n=n, nnz=nnz, width=width, spill_nnz=spill,
+            spill_fraction=round(stats["spill_fraction"], 4),
+            pad_fraction=round(stats["pad_fraction"], 4),
+            timings_us={k: round(t, 1) for k, t in timings.items()},
+            bytes_moved=_bytes_model(n, nnz, width, spill),
+            # composed sweep: SpMV pass + three elementwise passes over
+            # the n-vector state; the fused kernel makes one.
+            passes_over_state=dict(jacobi_composed_coo=4,
+                                   jacobi_composed_ell=4,
+                                   jacobi_fused_pallas=1),
+        ))
+
+    return dict(
+        schema=SCHEMA,
+        generated_by="benchmarks/spmv_bench.py",
+        jax_backend=jax.default_backend(),
+        pallas_interpret=resolve_ell_mode("auto") == "jnp",
+        note=("off-TPU wall times are interpret/CPU regression-tracking "
+              "numbers; bytes_moved is the backend-independent HBM "
+              "traffic model"),
+        graphs=rows,
+    )
+
+
+def write_root_json(out: dict, path: str = ROOT_JSON) -> str:
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=False)
+        f.write("\n")
+    return path
+
+
+if __name__ == "__main__":
+    out = bench_spmv()
+    print(json.dumps(out, indent=1))
+    print("wrote", write_root_json(out))

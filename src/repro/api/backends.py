@@ -77,7 +77,8 @@ class _DistHandle:
 
         s = self._solver
         levels = [dict(kind=m.kind, n=m.n, nnz=m.nnz,
-                       fill_fraction=m.fill_fraction, distributed=True)
+                       fill_fraction=m.fill_fraction, distributed=True,
+                       ell_width=m.ell_width, ell_spill=m.ell_spill)
                   for m in s.level_meta]
         if s.coarse_h.transfers:
             tail = hierarchy_stats(s.coarse_h)

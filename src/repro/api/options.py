@@ -33,6 +33,16 @@ class SolverOptions:
       ``strength_metric`` (``"algebraic_distance"`` | ``"affinity"``),
       ``random_ordering`` (paper §2.2 load-balancing relabeling), ``seed``.
 
+    Solve-phase SpMV execution format:
+
+    * ``matvec_backend`` — ``"coo"`` (gather + segment-sum),
+      ``"ell"`` (hybrid ELL+COO through the Pallas kernels on every
+      level; the fused-Jacobi sweep replaces SpMV + elementwise passes),
+      or ``"auto"`` (per-level layout selection: a level gets the ELL
+      twin only when its degree distribution makes the fixed-width
+      layout pay — see ``repro.sparse.matvec``). The distributed backend
+      applies the same split to each device's local 2D edge block.
+
     Cycle / smoother:
 
     * ``cycle`` (``"V"`` | ``"W"`` | ``"K"``), ``smoother`` (``"jacobi"`` |
@@ -61,6 +71,8 @@ class SolverOptions:
     strength_metric: str = "algebraic_distance"
     random_ordering: bool = True
     seed: int = 0
+    # solve-phase SpMV execution format ("coo" | "ell" | "auto")
+    matvec_backend: str = "coo"
     # cycle / smoother
     cycle: str = "V"
     smoother: str = "jacobi"
@@ -74,6 +86,12 @@ class SolverOptions:
     dist_nnz_threshold: int = 10_000
     max_dist_levels: int = 3
 
+    def __post_init__(self):
+        # Fail in milliseconds, not after a multi-second hierarchy build.
+        from repro.sparse.matvec import validate_backend
+
+        validate_backend(self.matvec_backend)
+
     def setup_config(self) -> SetupConfig:
         """The core-layer setup configuration this maps to."""
         return SetupConfig(
@@ -82,7 +100,8 @@ class SolverOptions:
             elim_max_degree=self.elim_max_degree,
             strength_metric=self.strength_metric,
             aggregation=AggregationConfig(),
-            seed=self.seed)
+            seed=self.seed,
+            matvec_backend=self.matvec_backend)
 
     def cycle_config(self) -> CycleConfig:
         """The core-layer cycle/smoother configuration this maps to."""

@@ -6,6 +6,12 @@ computation — the TPU analogue of the paper's fused MPI solve loop. W- and
 K-cycles (paper §4 future work) are provided as beyond-paper options: the
 K-cycle wraps the recursive correction in 2 steps of flexible CG, trading the
 paper's dot-product concern for TPU's cheap psums.
+
+All per-level matvecs (smoothing, residuals, W/K-cycle corrections) go
+through ``GraphLevel.laplacian_matvec`` and hence the
+``repro.sparse.matvec`` dispatch layer: levels carrying a hybrid ELL+COO
+twin execute in fixed-width layout (the Jacobi smoother additionally takes
+the fused-kernel path inside ``_smooth``); plain levels stay on COO.
 """
 
 from __future__ import annotations

@@ -16,24 +16,39 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.sparse import matvec as matvec_ops
 from repro.sparse.coo import COO, row_sums, spmv, degrees
+from repro.sparse.ell import ELL
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class GraphLevel:
-    """One multigrid level: adjacency + degrees of a weighted graph."""
+    """One multigrid level: adjacency + degrees of a weighted graph.
+
+    ``ell``/``ell_rem`` are an optional hybrid ELL+COO twin of ``adj``,
+    attached at setup time (``core.hierarchy.attach_ell_transfers``) when
+    the solver runs with ``matvec_backend != "coo"``. The twin changes the
+    *execution format* of the hot-loop SpMV only — ``adj`` stays the
+    source of truth for setup, coarsening, and stats. ``ell_mode`` records
+    whether the twin executes through the Pallas kernels or the jnp
+    reference (see ``repro.sparse.matvec.resolve_ell_mode``).
+    """
 
     adj: COO          # symmetric adjacency, off-diagonal, w > 0
     deg: jax.Array    # weighted degrees = Laplacian diagonal, [n]
+    ell: ELL | None = None       # hybrid twin: fixed-width part
+    ell_rem: COO | None = None   # hybrid twin: spill remainder (None = empty)
+    ell_mode: str = dataclasses.field(default="pallas",
+                                      metadata=dict(static=True))
 
     @property
     def n(self) -> int:
         return self.adj.n_rows
 
     def laplacian_matvec(self, x: jax.Array) -> jax.Array:
-        """L @ x = deg ⊙ x − A @ x."""
-        return self.deg * x - spmv(self.adj, x)
+        """L @ x = deg ⊙ x − A @ x (dispatches through repro.sparse.matvec)."""
+        return matvec_ops.laplacian_matvec(self, x)
 
     def unweighted_degrees(self) -> jax.Array:
         return degrees(self.adj)

@@ -47,6 +47,12 @@ class SetupConfig:
     aggregation: AggregationConfig = AggregationConfig()
     min_coarsen_ratio: float = 0.95   # stop if a level shrinks less than 5%
     seed: int = 0
+    # Solve-phase SpMV execution format (repro.sparse.matvec):
+    # "coo" = segment-sum path, "ell" = hybrid ELL+COO through the Pallas
+    # kernels on every level, "auto" = per-level layout selection.
+    matvec_backend: str = "coo"
+    ell_width_percentile: float = 95.0   # hybrid split width = capped
+    ell_width_cap: int = 64              # percentile of the row degrees
 
 
 @jax.tree_util.register_dataclass
@@ -80,6 +86,40 @@ def _shrink(level: GraphLevel) -> GraphLevel:
         return level
     # coalesce output is sorted with padding last, so slicing is sound.
     return graph_from_adjacency(adj.with_capacity(cap))
+
+
+def attach_ell_transfers(transfers: Sequence[Transfer],
+                         cfg: SetupConfig) -> tuple:
+    """Give every level of a built hierarchy its hybrid ELL+COO twin.
+
+    Runs once at the end of setup (host-side split, device-resident
+    result); the solve phase then dispatches on the twin's presence (see
+    ``repro.sparse.matvec``). Under ``matvec_backend="auto"`` a level may
+    keep its COO layout — that *is* the per-level selection. Level
+    identity is preserved: ``t.coarse`` and ``t_next.fine`` are one object
+    before and after, so the cycle's trace-time structure is unchanged.
+    """
+    from repro.sparse.matvec import build_hybrid, validate_backend
+
+    validate_backend(cfg.matvec_backend)
+    if cfg.matvec_backend == "coo":
+        return tuple(transfers)
+    cache: dict = {}
+
+    def attach(level: GraphLevel) -> GraphLevel:
+        out = cache.get(id(level))
+        if out is None:
+            plan = build_hybrid(level.adj, cfg.matvec_backend,
+                                percentile=cfg.ell_width_percentile,
+                                cap=cfg.ell_width_cap)
+            out = level if plan is None else dataclasses.replace(
+                level, ell=plan[0], ell_rem=plan[1], ell_mode=plan[2])
+            cache[id(level)] = out
+        return out
+
+    return tuple(dataclasses.replace(t, fine=attach(t.fine),
+                                     coarse=attach(t.coarse))
+                 for t in transfers)
 
 
 def build_hierarchy(adj: COO, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
@@ -130,8 +170,8 @@ def build_hierarchy(adj: COO, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
     alpha = float(jax.device_get(jnp.mean(level.deg))) or 1.0
     coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
 
-    return Hierarchy(transfers=tuple(transfers), lam_maxes=tuple(lam_maxes),
-                     coarse_inv=coarse_inv)
+    return Hierarchy(transfers=attach_ell_transfers(transfers, cfg),
+                     lam_maxes=tuple(lam_maxes), coarse_inv=coarse_inv)
 
 
 def apply_cycle(h: Hierarchy, b: jax.Array,
@@ -140,16 +180,28 @@ def apply_cycle(h: Hierarchy, b: jax.Array,
     return cycle(h.transfers, h.lam_maxes, h.coarse_inv, b, cfg)
 
 
+def _ell_stats(level) -> dict:
+    """Execution-format columns for stats rows (None = COO path)."""
+    ell = getattr(level, "ell", None)
+    if ell is None:
+        return dict(ell_width=None, ell_spill=None)
+    rem = level.ell_rem
+    spill = int(jax.device_get(rem.nnz)) if rem is not None else 0
+    return dict(ell_width=ell.width, ell_spill=spill)
+
+
 def hierarchy_stats(h: Hierarchy) -> dict:
     rows = []
     for t in h.transfers:
         kind = "elim" if isinstance(t, EliminationLevel) else "agg"
         nnz = int(jax.device_get(t.fine.adj.nnz))
         rows.append(dict(kind=kind, n=t.fine.n, nnz=nnz,
-                         capacity=t.fine.adj.capacity))
+                         capacity=t.fine.adj.capacity,
+                         **_ell_stats(t.fine)))
     if h.transfers:
         t = h.transfers[-1]
         rows.append(dict(kind="coarse", n=t.coarse.n,
                          nnz=int(jax.device_get(t.coarse.adj.nnz)),
-                         capacity=t.coarse.adj.capacity))
+                         capacity=t.coarse.adj.capacity,
+                         **_ell_stats(t.coarse)))
     return dict(levels=rows, n_levels=h.n_levels)

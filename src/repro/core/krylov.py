@@ -15,6 +15,12 @@ Two execution modes:
 Graph Laplacians are singular (nullspace = constants on connected graphs), so
 residuals/preconditioned residuals are projected mean-free each iteration —
 standard semidefinite-CG practice.
+
+The ``matvec`` callables these solvers drive are level matvecs that route
+through the ``repro.sparse.matvec`` operator layer: with
+``matvec_backend="ell"``/``"auto"`` every PCG iteration's SpMV executes in
+hybrid ELL+COO layout (Pallas kernels on TPU) instead of the
+gather+segment-sum COO path — same trajectory, different execution format.
 """
 
 from __future__ import annotations

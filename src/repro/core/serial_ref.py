@@ -31,7 +31,8 @@ from repro.core.coarsen import contract
 from repro.core.cycles import CycleConfig
 from repro.core.elimination import build_elimination_level
 from repro.core.graph import GraphLevel, graph_from_adjacency
-from repro.core.hierarchy import Hierarchy, SetupConfig, _shrink
+from repro.core.hierarchy import (Hierarchy, SetupConfig, _shrink,
+                                  attach_ell_transfers)
 from repro.core.smoothers import estimate_lambda_max
 from repro.core.solver import LaplacianSolver
 from repro.core.strength import STRENGTH_METRICS
@@ -136,8 +137,8 @@ def build_serial_hierarchy(adj, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
     n_c = level.n
     alpha = float(jax.device_get(jnp.mean(level.deg))) or 1.0
     coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
-    return Hierarchy(transfers=tuple(transfers), lam_maxes=tuple(lam_maxes),
-                     coarse_inv=coarse_inv)
+    return Hierarchy(transfers=attach_ell_transfers(transfers, cfg),
+                     lam_maxes=tuple(lam_maxes), coarse_inv=coarse_inv)
 
 
 def serial_lamg_solver(n, rows, cols, vals,

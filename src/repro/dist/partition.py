@@ -28,6 +28,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.sparse.ell import row_ranks_sorted
+
 
 @dataclasses.dataclass(frozen=True)
 class Partition2D:
@@ -164,6 +166,110 @@ def balance_report(part: Partition2D) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Per-block hybrid ELL+COO layout (the dist-local hot-loop format).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EllBlocks:
+    """Hybrid ELL+COO twin of a ``Partition2D``: one bounded-width ELL
+    block per device plus a per-block COO spill for overlong rows.
+
+    Column/row ids are *global* (padded-vertex ids in ``[0, n_pad)``) with
+    sentinel ``n_pad``: inside ``shard_map`` each device gathers straight
+    from the replicated x vector, and only the ELL row offset (``i * nb``)
+    depends on the device coordinate. All blocks share one ``width`` and
+    one ``spill_cap`` (TPU/XLA static shapes).
+    """
+
+    col: np.ndarray        # int32 [pods, pr, pc, nb, width]; sentinel n_pad
+    val: np.ndarray        # float32 [pods, pr, pc, nb, width]; 0 on padding
+    spill_row: np.ndarray  # int32 [pods, pr, pc, spill_cap]; sentinel n_pad
+    spill_col: np.ndarray  # int32 [pods, pr, pc, spill_cap]; sentinel n_pad
+    spill_val: np.ndarray  # float32 [pods, pr, pc, spill_cap]; 0 on padding
+    width: int
+    spill_nnz: int         # total real spill edges across all blocks
+
+    @property
+    def spill_cap(self) -> int:
+        return int(self.spill_row.shape[-1])
+
+
+def ell_blocks_from_partition(part: Partition2D,
+                              width: int | None = None,
+                              percentile: float = 95.0,
+                              cap: int = 64,
+                              backend: str = "ell") -> EllBlocks | None:
+    """Convert every 2D block of ``part`` to bounded-width ELL + COO spill.
+
+    ``width=None`` chooses a capped percentile of the *per-block* row
+    occupancy (a block row only holds the neighbours that fall in its
+    column block, so block widths are ~1/pc of the global degree — this is
+    what keeps dist-local ELL narrow even on power-law graphs). Entries
+    beyond ``width`` per (block, row) spill to that block's COO remainder.
+
+    ``backend`` applies the same per-level layout selection as the
+    replicated path (``repro.sparse.matvec.select_ell_width``): under
+    ``"auto"`` a level whose blocks are too small or would be mostly
+    padding returns ``None`` — the level stays on COO execution.
+    """
+    from repro.sparse.matvec import select_ell_width
+
+    pods, pr, pc = part.pods, part.pr, part.pc
+    nb, nb_col, n_pad = part.nb, part.nb_col, part.n_pad
+
+    # Per-(pod, block, local-row) occupancy over the valid slots.
+    valid = part.row_local < nb                       # [pods, pr, pc, cap]
+    counts = np.zeros((pods, pr, pc, nb), np.int64)
+    p_, i_, j_, _ = np.nonzero(valid)
+    np.add.at(counts, (p_, i_, j_, part.row_local[valid]), 1)
+    selected = select_ell_width(counts.reshape(-1), backend,
+                                percentile=percentile, cap=cap)
+    if width is None:
+        if selected is None and backend != "ell":
+            return None
+        width = selected or 1
+
+    ell_col = np.full((pods, pr, pc, nb, width), n_pad, np.int32)
+    ell_val = np.zeros((pods, pr, pc, nb, width), np.float32)
+    spills = []
+    for p in range(pods):
+        for i in range(pr):
+            for j in range(pc):
+                ok = valid[p, i, j]
+                r = part.row_local[p, i, j][ok].astype(np.int64)
+                c = part.col_local[p, i, j][ok].astype(np.int64)
+                v = part.val[p, i, j][ok]
+                order = np.lexsort((c, r))
+                r, c, v = r[order], c[order], v[order]
+                rank = row_ranks_sorted(r)
+                in_ell = rank < width
+                ell_col[p, i, j, r[in_ell], rank[in_ell]] = \
+                    (j * nb_col + c[in_ell]).astype(np.int32)
+                ell_val[p, i, j, r[in_ell], rank[in_ell]] = v[in_ell]
+                spills.append(((i * nb + r[~in_ell]).astype(np.int32),
+                               (j * nb_col + c[~in_ell]).astype(np.int32),
+                               v[~in_ell]))
+
+    spill_nnz = sum(len(s[0]) for s in spills)
+    spill_cap = max(max((len(s[0]) for s in spills), default=0), 1)
+    spill_row = np.full((pods, pr, pc, spill_cap), n_pad, np.int32)
+    spill_col = np.full((pods, pr, pc, spill_cap), n_pad, np.int32)
+    spill_val = np.zeros((pods, pr, pc, spill_cap), np.float32)
+    it = iter(spills)
+    for p in range(pods):
+        for i in range(pr):
+            for j in range(pc):
+                sr, sc, sv = next(it)
+                spill_row[p, i, j, : len(sr)] = sr
+                spill_col[p, i, j, : len(sr)] = sc
+                spill_val[p, i, j, : len(sr)] = sv
+
+    return EllBlocks(col=ell_col, val=ell_val, spill_row=spill_row,
+                     spill_col=spill_col, spill_val=spill_val,
+                     width=int(width), spill_nnz=int(spill_nnz))
+
+
+# ---------------------------------------------------------------------------
 # Mesh geometry helpers shared by setup_demo and solver.
 # ---------------------------------------------------------------------------
 
@@ -195,6 +301,15 @@ def edge_spec(mesh):
     pod_names, row_name, col_name, *_ = mesh_geometry(mesh)
     lead = pod_names[0] if pod_names else None
     return P(lead, row_name, col_name, None)
+
+
+def ell_block_spec(mesh):
+    """PartitionSpec placing [pods, pr, pc, nb, width] ELL arrays on the mesh."""
+    from jax.sharding import PartitionSpec as P
+
+    pod_names, row_name, col_name, *_ = mesh_geometry(mesh)
+    lead = pod_names[0] if pod_names else None
+    return P(lead, row_name, col_name, None, None)
 
 
 def check_mesh_matches(part: Partition2D, mesh) -> None:

@@ -34,8 +34,10 @@ from jax.sharding import PartitionSpec as P
 from repro.core.cycles import CycleConfig, cycle
 from repro.core.elimination import EliminationLevel
 from repro.core.graph import GraphLevel, graph_from_adjacency
-from repro.core.hierarchy import Hierarchy, SetupConfig, build_hierarchy
-from repro.dist.partition import (edge_spec, mesh_geometry,
+from repro.core.hierarchy import (Hierarchy, SetupConfig,
+                                  attach_ell_transfers, build_hierarchy)
+from repro.dist.partition import (edge_spec, ell_block_spec,
+                                  ell_blocks_from_partition, mesh_geometry,
                                   partition_edges_2d)
 from repro.graphs.generators import random_relabel, to_laplacian_coo
 
@@ -48,6 +50,14 @@ class DistGraphLevel:
     Drop-in for ``core.graph.GraphLevel`` wherever only ``n``, ``deg`` and
     ``laplacian_matvec`` are used (smoothers, residuals, PCG) — the matvec
     is the distributed semiring SpMV instead of a replicated segment-sum.
+
+    When ``matvec_backend != "coo"`` the level additionally carries each
+    device's local edge block in hybrid ELL+COO layout (``ell_col`` /
+    ``ell_val`` plus the ``spill_*`` remainder, built at partition time by
+    ``partition.ell_blocks_from_partition``): the within-block contraction
+    then runs through the Pallas ELL SpMV kernel instead of a
+    segment-sum, while the communication schedule — one psum over the
+    mesh axes — is unchanged.
     """
 
     row_local: jax.Array   # int32 [pods, pr, pc, cap], sharded over the mesh
@@ -59,6 +69,14 @@ class DistGraphLevel:
     nb: int = dataclasses.field(metadata=dict(static=True))
     nb_col: int = dataclasses.field(metadata=dict(static=True))
     mesh: object = dataclasses.field(metadata=dict(static=True))
+    # hybrid ELL+COO twin of the local blocks (None = COO execution)
+    ell_col: jax.Array | None = None    # int32 [pods, pr, pc, nb, width]
+    ell_val: jax.Array | None = None    # float32 [pods, pr, pc, nb, width]
+    spill_row: jax.Array | None = None  # int32 [pods, pr, pc, spill_cap]
+    spill_col: jax.Array | None = None  # int32 [pods, pr, pc, spill_cap]
+    spill_val: jax.Array | None = None  # float32 [pods, pr, pc, spill_cap]
+    ell_mode: str = dataclasses.field(default="pallas",
+                                      metadata=dict(static=True))
 
     @property
     def capacity(self) -> int:
@@ -66,6 +84,8 @@ class DistGraphLevel:
 
     def spmv_padded(self, x_pad: jax.Array) -> jax.Array:
         """y = A @ x on [n_pad] vectors via the 2D-sharded edge blocks."""
+        if self.ell_col is not None:
+            return self._spmv_padded_ell(x_pad)
         mesh = self.mesh
         _, row_axis, col_axis, *_ = mesh_geometry(mesh)
         axes = tuple(mesh.axis_names)
@@ -91,6 +111,59 @@ class DistGraphLevel:
                          in_specs=(espec, espec, espec, P()),
                          out_specs=P())(self.row_local, self.col_local,
                                         self.val, x_pad)
+
+    def _spmv_padded_ell(self, x_pad: jax.Array) -> jax.Array:
+        """ELL execution of the same 2D schedule: each device contracts
+        its block in fixed-width layout (Pallas kernel or jnp reference),
+        adds its COO spill, and the one psum plays the paper's
+        column-reduce + row-broadcast exactly as in the COO path.
+
+        ``check_rep=False``: shard_map has no replication rule for
+        ``pallas_call`` (the result is replicated by the psum anyway).
+        """
+        from repro.kernels.spmv_ell import spmv_ell
+        from repro.sparse.ell import ELL, ell_spmv_ref
+
+        mesh = self.mesh
+        _, row_axis, _, *_ = mesh_geometry(mesh)
+        axes = tuple(mesh.axis_names)
+        espec = edge_spec(mesh)
+        ell_spec = ell_block_spec(mesh)
+        nb, n_pad = self.nb, self.n_pad
+        width = int(self.ell_col.shape[-1])
+        use_pallas = self.ell_mode == "pallas"
+
+        has_spill = self.spill_row is not None
+
+        def local(ec, ev, *rest):
+            *spill, x = rest
+            i = jax.lax.axis_index(row_axis)
+            ec = ec.reshape(nb, width)
+            ev = ev.reshape(nb, width)
+            # Column ids are global with sentinel n_pad, so the gather
+            # source is the replicated x itself.
+            if use_pallas:
+                y = spmv_ell(ec, ev, x)
+            else:
+                y = ell_spmv_ref(ELL(ec, ev, n_pad), x)
+            part = jnp.zeros((n_pad,), x.dtype)
+            part = jax.lax.dynamic_update_slice(
+                part, y.astype(x.dtype), (i * nb,))
+            if has_spill:            # spill-free levels: pure ELL contraction
+                sr, sc, sv = (a.reshape(-1) for a in spill)
+                xg = jnp.take(x, sc, mode="fill", fill_value=0)
+                prod = jnp.where(sr < n_pad, sv * xg, 0)
+                part = part + jax.ops.segment_sum(prod, sr,
+                                                  num_segments=n_pad)
+            return jax.lax.psum(part, axes)
+
+        spill_args = ((self.spill_row, self.spill_col, self.spill_val)
+                      if has_spill else ())
+        spill_specs = (espec,) * len(spill_args)
+        return shard_map(local, mesh=mesh,
+                         in_specs=(ell_spec, ell_spec) + spill_specs + (P(),),
+                         out_specs=P(), check_rep=False)(
+            self.ell_col, self.ell_val, *spill_args, x_pad)
 
     def laplacian_matvec(self, x: jax.Array) -> jax.Array:
         """L @ x on length-n vectors (smoother / residual interface)."""
@@ -129,6 +202,8 @@ class DistLevelMeta:
     n_pad: int
     capacity: int
     fill_fraction: float
+    ell_width: int | None = None   # hybrid block width (None = COO execution)
+    ell_spill: int | None = None   # total spill edges across blocks
 
 
 def _block_ops(matvec, precond, n: int, n_pad: int):
@@ -204,8 +279,20 @@ def _pcg_block_chunk(matvec, precond, n: int, n_pad: int, tol: float,
     return state + (r0n,), norms
 
 
-def _partition_level(level: GraphLevel, mesh) -> tuple[DistGraphLevel, float]:
-    """2D-partition one level's adjacency and place it on the mesh."""
+def _partition_level(level: GraphLevel, mesh, matvec_backend: str = "coo",
+                     ell_width_percentile: float = 95.0,
+                     ell_width_cap: int = 64
+                     ) -> tuple[DistGraphLevel, float, object]:
+    """2D-partition one level's adjacency and place it on the mesh.
+
+    With ``matvec_backend != "coo"`` each block is additionally converted
+    to the hybrid ELL+COO layout at partition time, so the per-device
+    contraction in ``shard_map`` runs through the Pallas ELL kernel.
+    Returns ``(level, fill_fraction, EllBlocks-or-None)``.
+    """
+    from repro.sparse.matvec import resolve_ell_mode, validate_backend
+
+    validate_backend(matvec_backend)
     _, _, _, pods, pr, pc = mesh_geometry(mesh)
     adj = level.adj
     row, col, val, valid = jax.device_get(
@@ -214,13 +301,36 @@ def _partition_level(level: GraphLevel, mesh) -> tuple[DistGraphLevel, float]:
                               pr, pc, pods=pods, random_ordering=False)
     espec = edge_spec(mesh)
     sharding = NamedSharding(mesh, espec)
+    ell_kw: dict = {}
+    blocks = None
+    if matvec_backend != "coo":
+        # Per-level layout selection rides inside: "auto" may return None
+        # (level stays on COO execution), "ell" always converts.
+        blocks = ell_blocks_from_partition(part,
+                                           percentile=ell_width_percentile,
+                                           cap=ell_width_cap,
+                                           backend=matvec_backend)
+        if blocks is not None:
+            ell_sharding = NamedSharding(mesh, ell_block_spec(mesh))
+            ell_kw = dict(
+                ell_col=jax.device_put(jnp.asarray(blocks.col), ell_sharding),
+                ell_val=jax.device_put(jnp.asarray(blocks.val), ell_sharding),
+                ell_mode=resolve_ell_mode(matvec_backend))
+            if blocks.spill_nnz:     # spill-free levels skip the COO pass
+                ell_kw.update(
+                    spill_row=jax.device_put(jnp.asarray(blocks.spill_row),
+                                             sharding),
+                    spill_col=jax.device_put(jnp.asarray(blocks.spill_col),
+                                             sharding),
+                    spill_val=jax.device_put(jnp.asarray(blocks.spill_val),
+                                             sharding))
     dlevel = DistGraphLevel(
         row_local=jax.device_put(jnp.asarray(part.row_local), sharding),
         col_local=jax.device_put(jnp.asarray(part.col_local), sharding),
         val=jax.device_put(jnp.asarray(part.val), sharding),
         deg=level.deg, n=level.n, n_pad=part.n_pad,
-        nb=part.nb, nb_col=part.nb_col, mesh=mesh)
-    return dlevel, part.fill_fraction
+        nb=part.nb, nb_col=part.nb_col, mesh=mesh, **ell_kw)
+    return dlevel, part.fill_fraction, blocks
 
 
 @dataclasses.dataclass
@@ -271,7 +381,12 @@ class DistLaplacianSolver:
                 n, rows, cols, setup_config.seed)
 
         adj = to_laplacian_coo(n, rows, cols, vals)
-        h = build_hierarchy(adj, setup_config)
+        # Build the hierarchy without replicated ELL twins: the largest
+        # levels are about to get *per-block* ELL layouts instead, so
+        # attaching serial twins there would be discarded setup work. The
+        # replicated coarse tail gets its twins after the split below.
+        h = build_hierarchy(
+            adj, dataclasses.replace(setup_config, matvec_backend="coo"))
 
         dist_transfers = []
         lam_maxes = []
@@ -282,24 +397,31 @@ class DistLaplacianSolver:
             nnz = int(jax.device_get(t.fine.adj.nnz))
             if nnz < dist_nnz_threshold:
                 break
-            dfine, fill = _partition_level(t.fine, mesh)
+            dfine, fill, blocks = _partition_level(
+                t.fine, mesh, matvec_backend=setup_config.matvec_backend,
+                ell_width_percentile=setup_config.ell_width_percentile,
+                ell_width_cap=setup_config.ell_width_cap)
             dist_transfers.append(dataclasses.replace(t, fine=dfine))
             lam_maxes.append(lam)
             level_meta.append(DistLevelMeta(
                 kind="elim" if isinstance(t, EliminationLevel) else "agg",
                 n=t.fine.n, nnz=nnz, n_pad=dfine.n_pad,
-                capacity=dfine.capacity, fill_fraction=fill))
+                capacity=dfine.capacity, fill_fraction=fill,
+                ell_width=blocks.width if blocks is not None else None,
+                ell_spill=blocks.spill_nnz if blocks is not None else None))
 
         k = len(dist_transfers)
-        coarse_h = Hierarchy(transfers=h.transfers[k:],
+        coarse_transfers = attach_ell_transfers(h.transfers[k:],
+                                                setup_config)
+        coarse_h = Hierarchy(transfers=coarse_transfers,
                              lam_maxes=h.lam_maxes[k:],
                              coarse_inv=h.coarse_inv)
 
         if k:
             fine = dist_transfers[0].fine
             n_pad = fine.n_pad
-        elif h.transfers:
-            fine = h.transfers[0].fine          # full serial fallback
+        elif coarse_transfers:
+            fine = coarse_transfers[0].fine     # full serial fallback
             n_pad = n
         else:
             fine = graph_from_adjacency(adj)

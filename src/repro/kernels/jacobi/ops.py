@@ -1,3 +1,10 @@
+"""jit'd public wrapper for the fused Jacobi sweep.
+
+``interpret=None`` (the default) auto-selects the execution mode from
+``jax.default_backend()``: compiled on TPU, interpret-mode everywhere else
+(CPU validation, unit tests). Pass an explicit bool to override.
+"""
+
 from __future__ import annotations
 
 from functools import partial
@@ -6,11 +13,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.jacobi.jacobi import jacobi_step_pallas
+from repro.kernels.spmv_ell.ops import resolve_interpret
 
 
 @partial(jax.jit, static_argnames=("omega", "block_rows", "interpret"))
 def jacobi_step(col, val, x, b, deg, omega: float = 2.0 / 3.0,
-                block_rows: int = 256, interpret: bool = True):
+                block_rows: int = 256, interpret: bool | None = None):
+    interpret = resolve_interpret(interpret)
     n = col.shape[0]
     pad = (-n) % block_rows
     if pad:

@@ -1,5 +1,10 @@
 """jit'd public wrapper: pads rows to the block size and dispatches to the
-Pallas kernel (interpret-mode on CPU, compiled on TPU)."""
+Pallas kernel.
+
+``interpret=None`` (the default) auto-selects the execution mode from
+``jax.default_backend()``: compiled on TPU, interpret-mode everywhere else
+(CPU validation, unit tests). Pass an explicit bool to override.
+"""
 
 from __future__ import annotations
 
@@ -11,9 +16,17 @@ import jax.numpy as jnp
 from repro.kernels.spmv_ell.spmv_ell import spmv_ell_pallas
 
 
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Pallas interpret mode: compiled on TPU, interpreted elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
 @partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def spmv_ell(col: jax.Array, val: jax.Array, x: jax.Array,
-             block_rows: int = 256, interpret: bool = True) -> jax.Array:
+             block_rows: int = 256, interpret: bool | None = None) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     n_rows = col.shape[0]
     pad = (-n_rows) % block_rows
     if pad:

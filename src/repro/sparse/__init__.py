@@ -5,11 +5,16 @@ pieces the paper's solver (and the GNN / recsys archs) need from first
 principles: a fixed-capacity padded COO container, an ELL container for the
 Pallas SpMV hot path, segment-reduction helpers (including the lexicographic
 "semiring" reductions CombBLAS expresses with custom ``oplus``), and
-conversions between them.
+conversions between them. ``repro.sparse.matvec`` is the solve-phase
+dispatch layer between the COO and hybrid ELL+COO execution formats
+(``matvec_backend`` on the ``repro.api`` facade).
 """
 
 from repro.sparse.coo import COO, coo_from_dense, spmv, spmm, row_sums, extract_diag
 from repro.sparse.ell import ELL, coo_to_ell, ell_spmv_ref
+from repro.sparse.matvec import (MATVEC_BACKENDS, hybrid_spmv,
+                                 laplacian_matvec, select_ell_width,
+                                 split_hybrid)
 from repro.sparse.segment import (
     segment_sum,
     segment_max,
@@ -28,6 +33,11 @@ __all__ = [
     "ELL",
     "coo_to_ell",
     "ell_spmv_ref",
+    "MATVEC_BACKENDS",
+    "hybrid_spmv",
+    "laplacian_matvec",
+    "select_ell_width",
+    "split_hybrid",
     "segment_sum",
     "segment_max",
     "segment_min",

@@ -12,6 +12,28 @@ exactly why the paper randomises vertex order and distributes edges 2D; the
 distributed path therefore stores *per-device blocks* in COO and only the
 within-block hot loop converts to bounded-width ELL, spilling overlong rows
 to a COO remainder (hybrid ELL+COO, cf. Bell & Garland SpMV).
+
+**Measured width/spill tradeoff** (``benchmarks/spmv_bench.py``; width
+chosen by ``repro.sparse.matvec.select_ell_width`` as a capped percentile
+of the row degrees). On regular-degree graphs the split is essentially
+free: a 40x40 2D grid converts at width 4 with zero spill and 2.5% pad;
+Watts-Strogatz (k=6) at width 7 with 0.5% spill and 15% pad. On power-law
+graphs the two padding costs trade against each other — Barabási–Albert
+(m=4, n=2048, mean degree 7.9) measures:
+
+    width   spilled edges   padded ELL slots   ELL slots / nnz
+      4         49.6%             0.1%              0.50
+      8         27.2%            27.8%              1.01
+     16         13.7%            57.2%              2.02
+     32          5.9%            76.7%              4.03
+
+i.e. width near the *mean* degree keeps the fixed-width tiles dense while
+the COO remainder absorbs the hub tail; pushing width toward the
+95th-percentile degree (w=20 here) more than doubles the bytes the kernel
+streams for a ~4% spill reduction. The fused-Jacobi bytes advantage over
+the composed sweep (one pass over (col, val, x, b, deg) vs SpMV + three
+elementwise passes) holds across this whole range — see
+``BENCH_hotpath.json`` at the repo root.
 """
 
 from __future__ import annotations
@@ -41,6 +63,21 @@ class ELL:
         return self.col.shape[1]
 
 
+def row_ranks_sorted(row: np.ndarray) -> np.ndarray:
+    """Rank of each entry within its row, for a row-sorted entry list.
+
+    The ELL slot index: entry k of row r lands in column k of the ELL
+    tile (entries with rank >= width spill). Shared by the replicated
+    split below and the per-block distributed split
+    (``repro.dist.partition.ell_blocks_from_partition``).
+    """
+    if not len(row):
+        return np.zeros((0,), np.int64)
+    starts = np.concatenate([[0], np.flatnonzero(row[1:] != row[:-1]) + 1])
+    sizes = np.diff(np.concatenate([starts, [len(row)]]))
+    return np.arange(len(row)) - np.repeat(starts, sizes)
+
+
 def coo_to_ell(a: COO, width: int | None = None, pad_rows_to: int | None = None
                ) -> tuple[ELL, COO]:
     """Split a COO into (ELL part, COO remainder). Host-side (numpy) setup.
@@ -57,15 +94,13 @@ def coo_to_ell(a: COO, width: int | None = None, pad_rows_to: int | None = None
 
     order = np.lexsort((col, row))
     row, col, val = row[order], col[order], val[order]
-    # Rank of each entry within its row.
-    if len(row):
-        starts = np.concatenate([[0], np.flatnonzero(row[1:] != row[:-1]) + 1])
-        rank = np.arange(len(row)) - np.repeat(starts, np.diff(np.concatenate([starts, [len(row)]])))
-    else:
-        rank = np.zeros((0,), np.int64)
+    rank = row_ranks_sorted(row)
 
     counts = np.bincount(row, minlength=a.n_rows)
-    w = int(counts.max()) if width is None and len(counts) else (width or 1)
+    if width is None:
+        w = int(counts.max()) if len(counts) else 0
+    else:
+        w = int(width)  # width=0 is legal: everything spills to the remainder
     n_rows = a.n_rows if pad_rows_to is None else int(np.ceil(a.n_rows / pad_rows_to) * pad_rows_to)
 
     in_ell = rank < w

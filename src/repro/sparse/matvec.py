@@ -1,0 +1,184 @@
+"""Hybrid ELL+COO matvec operator layer — the solve-phase hot path.
+
+The paper measures SpMV as >50% of solve time and the scaling limiter
+(§3.2). This module is the single dispatch point between the two SpMV
+execution formats the repo carries:
+
+* ``"coo"`` — the scatter-heavy ``gather + segment_sum`` path
+  (``repro.sparse.coo.spmv``). Always available; the setup phase and the
+  numerical oracles live here.
+* ``"ell"`` — the hybrid ELL+COO split (``repro.sparse.ell.coo_to_ell``)
+  executed by the Pallas kernels in ``repro/kernels``: a fixed-width
+  ``[rows, width]`` gather+MAC with zero data-dependent control flow, plus
+  a small COO remainder for the overlong (power-law) rows.
+* ``"auto"`` — per-level layout selection: a level gets an ELL twin only
+  when its degree distribution makes the fixed-width layout pay
+  (see :func:`select_ell_width`); other levels stay on COO.
+
+Every solver-side consumer (``GraphLevel.laplacian_matvec``, the smoothers,
+``core.krylov`` PCG, ``core.cycles``) routes through
+:func:`laplacian_matvec`, so the execution format is a pure setup-time
+decision: the hierarchy attaches ELL twins once and the solve phase
+dispatches on their presence. The distributed solver applies the same split
+per 2D edge block (``repro.dist.partition.ell_blocks_from_partition``).
+
+Kernel vs reference execution (``ell_mode``): the forced ``"ell"`` backend
+always runs the Pallas kernels (interpret-mode off-TPU, compiled on TPU —
+see ``repro.kernels.spmv_ell.ops.resolve_interpret``); ``"auto"`` uses the
+kernels on TPU and the vectorised jnp ELL reference elsewhere, because
+interpret-mode Pallas is a correctness tool, not an execution engine.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse.coo import COO, spmv
+from repro.sparse.ell import ELL, coo_to_ell, ell_spmv_ref
+
+MATVEC_BACKENDS = ("coo", "ell", "auto")
+
+# "auto" layout-selection defaults: levels smaller than MIN_ELL_ROWS are
+# cheaper replicated-COO than kernel-launched; ELL slots beyond
+# MAX_PAD_FACTOR x nnz mean the fixed width is mostly padding (the
+# power-law failure mode plain ELL has, cf. Bell & Garland).
+MIN_ELL_ROWS = 256
+MAX_PAD_FACTOR = 3.0
+
+
+def validate_backend(backend: str) -> str:
+    if backend not in MATVEC_BACKENDS:
+        raise ValueError(
+            f"matvec_backend must be one of {MATVEC_BACKENDS}, "
+            f"got {backend!r}")
+    return backend
+
+
+def resolve_ell_mode(backend: str) -> str:
+    """How attached ELL twins execute: ``"pallas"`` or ``"jnp"``.
+
+    Forced ``"ell"`` always exercises the Pallas kernels (that is the
+    point of the knob — interpret-mode off-TPU); ``"auto"`` picks the
+    kernel only where it compiles (TPU) and the jnp reference elsewhere.
+    """
+    if backend == "ell":
+        return "pallas"
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def select_ell_width(counts, backend: str, *, percentile: float = 95.0,
+                     cap: int = 64, min_rows: int = MIN_ELL_ROWS,
+                     max_pad_factor: float = MAX_PAD_FACTOR) -> int | None:
+    """Choose the hybrid split width for one level (or refuse with None).
+
+    ``counts`` is the per-row nonzero count (local rows for a distributed
+    block). The width is a capped percentile of the degree distribution:
+    overlong power-law rows spill to the COO remainder instead of
+    inflating every row's storage. Under ``"auto"`` the level keeps its
+    COO layout when it is too small to amortise a kernel launch or when
+    the chosen width would be mostly padding.
+    """
+    validate_backend(backend)
+    if backend == "coo":
+        return None
+    counts = np.asarray(counts)
+    nnz = int(counts.sum()) if counts.size else 0
+    max_deg = int(counts.max()) if counts.size else 0
+    if nnz == 0 or max_deg == 0:
+        return None                      # edgeless: nothing to lay out
+    width = int(np.ceil(np.percentile(counts, percentile)))
+    width = max(1, min(width, cap, max_deg))
+    if backend == "ell":
+        return width
+    # "auto": per-level layout selection
+    if counts.size < min_rows:
+        return None
+    if counts.size * width > max_pad_factor * nnz:
+        return None
+    return width
+
+
+def split_hybrid(adj: COO, width: int) -> tuple[ELL, COO | None, dict]:
+    """Split ``adj`` into (ELL part, COO remainder-or-None, stats).
+
+    The remainder is ``None`` when nothing spills, so the hot loop can
+    statically skip the second pass (this is what makes the fused Jacobi
+    kernel a true single-pass sweep on spill-free levels).
+    """
+    ell, rem = coo_to_ell(adj, width=width)
+    spill_nnz = int(jax.device_get(rem.nnz))
+    nnz = int(jax.device_get(adj.nnz))
+    stats = dict(width=width, spill_nnz=spill_nnz,
+                 spill_fraction=spill_nnz / max(nnz, 1),
+                 pad_fraction=1.0 - (nnz - spill_nnz) /
+                 max(adj.n_rows * max(width, 1), 1))
+    return ell, (rem if spill_nnz else None), stats
+
+
+def build_hybrid(adj: COO, backend: str, *, percentile: float = 95.0,
+                 cap: int = 64) -> tuple[ELL, COO | None, str] | None:
+    """Plan one level's ELL twin: ``(ell, remainder, ell_mode)`` or None.
+
+    Host-side setup helper: reads the degree distribution off-device,
+    chooses the width (:func:`select_ell_width`) and splits. Returns None
+    when the level should stay on the COO path (``backend="coo"`` or an
+    ``"auto"`` rejection).
+    """
+    validate_backend(backend)
+    if backend == "coo":
+        return None
+    row = np.asarray(jax.device_get(adj.row))
+    counts = np.bincount(row[row < adj.n_rows], minlength=adj.n_rows)
+    width = select_ell_width(counts, backend, percentile=percentile, cap=cap)
+    if width is None:
+        return None
+    ell, rem, _ = split_hybrid(adj, width)
+    return ell, rem, resolve_ell_mode(backend)
+
+
+# ----------------------------------------------------------------------------
+# Solve-phase operators. These are the only SpMV entry points the smoother /
+# residual / PCG / V-cycle hot loop goes through.
+# ----------------------------------------------------------------------------
+
+def hybrid_spmv(ell: ELL, rem: COO | None, x: jax.Array,
+                mode: str = "pallas") -> jax.Array:
+    """y = A @ x through the hybrid ELL+COO split.
+
+    ``mode="pallas"`` runs the Pallas ELL kernel
+    (``repro.kernels.spmv_ell``); ``"jnp"`` the vectorised reference.
+    ``width == 0`` degrades to remainder-only (the full-spill case).
+    """
+    if ell.width == 0:
+        y = jnp.zeros((ell.n_rows,), x.dtype)
+    elif mode == "pallas":
+        from repro.kernels.spmv_ell import spmv_ell
+
+        y = spmv_ell(ell.col, ell.val, x)
+    else:
+        y = ell_spmv_ref(ell, x)
+    if rem is not None:
+        y = y + spmv(rem, x)
+    return y
+
+
+def level_spmv(level, x: jax.Array) -> jax.Array:
+    """A @ x for a level-like object, dispatching on its attached layout.
+
+    ``level`` needs ``.adj`` and optionally ``.ell`` / ``.ell_rem`` /
+    ``.ell_mode`` (as attached by ``core.hierarchy``). No ELL twin —
+    including any object that simply never grew the attributes — means
+    the COO segment-sum path.
+    """
+    ell = getattr(level, "ell", None)
+    if ell is None:
+        return spmv(level.adj, x)
+    return hybrid_spmv(ell, level.ell_rem, x,
+                       getattr(level, "ell_mode", "pallas"))
+
+
+def laplacian_matvec(level, x: jax.Array) -> jax.Array:
+    """L @ x = deg * x - A @ x through the selected execution format."""
+    return level.deg * x - level_spmv(level, x)

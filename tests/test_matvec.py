@@ -1,0 +1,379 @@
+"""Hybrid ELL+COO hot path: layout round-trips and solve equivalence.
+
+Covers the `repro.sparse.matvec` operator layer end to end:
+
+* COO <-> ELL split round-trips (empty rows, duplicate edges, width=0
+  full spill, power-law degree graphs) — the split must be a pure
+  execution-format change, never a value change;
+* the per-level layout selection rules for ``matvec_backend="auto"``;
+* the fused hybrid Jacobi sweep against the composed COO smoother,
+  including levels with a spill remainder;
+* ELL-backed solves vs COO-backed solves through the ``repro.api``
+  facade: same solutions to tight tolerance and identical PCG iteration
+  counts on the ``single``, ``serial_ref`` and ``dist`` backends;
+* per-block ELL conversion of the 2D distributed partition.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sparse.coo import coo_from_arrays, coo_from_dense, spmv
+from repro.sparse.ell import coo_to_ell, ell_spmv_ref
+from repro.sparse.matvec import (hybrid_spmv, laplacian_matvec,
+                                 select_ell_width, split_hybrid)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def random_coo(rng, n_rows, n_cols, nnz, duplicates=False, power_law=False):
+    """Random padded COO; optionally with duplicate (row, col) pairs and a
+    power-law row distribution (a few hub rows hold most entries)."""
+    if power_law and n_rows > 1:
+        # Zipf-ish row choice: low ids become hubs, many rows stay empty.
+        row = (n_rows * rng.random(nnz) ** 3).astype(np.int64)
+    else:
+        row = rng.integers(0, n_rows, nnz)
+    col = rng.integers(0, n_cols, nnz)
+    if duplicates and nnz > 1:
+        dup = rng.integers(0, nnz, nnz // 2)
+        row[: len(dup)] = row[dup]
+        col[: len(dup)] = col[dup]
+    val = rng.normal(size=nnz).astype(np.float32)
+    return coo_from_arrays(row, col, val, n_rows, n_cols,
+                           capacity=nnz + int(rng.integers(0, 5)))
+
+
+class TestHybridSplit:
+    @pytest.mark.parametrize("width", [0, 1, 3, None])
+    def test_split_plus_remainder_is_lossless(self, width):
+        rng = np.random.default_rng(0)
+        a = random_coo(rng, 40, 30, 120, duplicates=True, power_law=True)
+        ell, rem = coo_to_ell(a, width=width)
+        x = jnp.asarray(rng.normal(size=30).astype(np.float32))
+        got = ell_spmv_ref(ell, x)[: a.n_rows] + spmv(rem, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(spmv(a, x)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_width_zero_spills_everything(self):
+        rng = np.random.default_rng(1)
+        a = random_coo(rng, 16, 16, 50)
+        ell, rem = coo_to_ell(a, width=0)
+        assert ell.width == 0
+        assert int(jax.device_get(rem.nnz)) == int(jax.device_get(a.nnz))
+        x = jnp.asarray(rng.normal(size=16).astype(np.float32))
+        # hybrid_spmv degrades to remainder-only
+        np.testing.assert_allclose(np.asarray(hybrid_spmv(ell, rem, x)),
+                                   np.asarray(spmv(a, x)), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_empty_rows_and_empty_matrix(self):
+        a = coo_from_dense(np.zeros((8, 8), np.float32), capacity=4)
+        ell, rem = coo_to_ell(a, width=2)
+        x = jnp.ones((8,))
+        assert float(jnp.abs(ell_spmv_ref(ell, x)).max()) == 0.0
+        assert int(jax.device_get(rem.nnz)) == 0
+
+    def test_split_hybrid_none_remainder_when_spill_free(self):
+        a = coo_from_dense(np.eye(8, dtype=np.float32), capacity=8)
+        ell, rem, stats = split_hybrid(a, width=1)
+        assert rem is None and stats["spill_nnz"] == 0
+        ell2, rem2, stats2 = split_hybrid(a, width=0)
+        assert rem2 is not None and stats2["spill_nnz"] == 8
+
+    @pytest.mark.parametrize("seed", range(25))
+    def test_property_roundtrip(self, seed):
+        """ELL part + COO remainder == original, for any width (seeded
+        property sweep; runs without the optional hypothesis dep)."""
+        rng = np.random.default_rng(1000 + seed)
+        n_rows = int(rng.integers(1, 60))
+        n_cols = int(rng.integers(1, 60))
+        nnz = int(rng.integers(1, 150))
+        a = random_coo(rng, n_rows, n_cols, nnz,
+                       duplicates=bool(rng.integers(0, 2)),
+                       power_law=bool(rng.integers(0, 2)))
+        width = int(rng.integers(0, 8))
+        ell, rem = coo_to_ell(a, width=width)
+        x = jnp.asarray(rng.normal(size=n_cols).astype(np.float32))
+        got = hybrid_spmv(ell, rem, x, mode="jnp")[: n_rows] + 0.0
+        np.testing.assert_allclose(np.asarray(got), np.asarray(spmv(a, x)),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_hybrid_pallas_matches_coo(self):
+        """The Pallas execution of the split must match the COO oracle."""
+        rng = np.random.default_rng(7)
+        a = random_coo(rng, 300, 300, 2000, power_law=True)
+        ell, rem = coo_to_ell(a, width=4)
+        assert int(jax.device_get(rem.nnz)) > 0  # spill actually exercised
+        x = jnp.asarray(rng.normal(size=300).astype(np.float32))
+        got = hybrid_spmv(ell, rem, x, mode="pallas")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(spmv(a, x)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestLayoutSelection:
+    def test_coo_backend_never_selects(self):
+        assert select_ell_width(np.full(1000, 4), "coo") is None
+
+    def test_ell_backend_always_selects(self):
+        w = select_ell_width(np.full(8, 3), "ell")
+        assert w == 3  # tiny level still converts under the forced backend
+
+    def test_auto_rejects_small_levels(self):
+        assert select_ell_width(np.full(100, 4), "auto") is None
+
+    def test_auto_rejects_padding_waste(self):
+        # a few hub rows in a sea of empty ones: even width-1 ELL would be
+        # mostly padded slots, so the level stays COO under "auto".
+        counts = np.zeros(2048, np.int64)
+        counts[:4] = 50
+        w = select_ell_width(counts, "auto")
+        assert w is None
+        # ...but the forced backend still converts (spill-heavy hybrid)
+        assert select_ell_width(counts, "ell") == 1
+
+    def test_auto_accepts_regular_graphs(self):
+        assert select_ell_width(np.full(2048, 4), "auto") == 4
+
+    def test_width_is_capped_percentile(self):
+        counts = np.r_[np.full(950, 4), np.full(50, 200)]
+        assert select_ell_width(counts, "ell", percentile=90.0, cap=64) == 4
+        assert select_ell_width(counts, "ell", percentile=100.0, cap=64) == 64
+        assert select_ell_width(counts, "ell", percentile=100.0, cap=16) == 16
+
+    def test_invalid_backend_raises(self):
+        with pytest.raises(ValueError, match="matvec_backend"):
+            select_ell_width(np.full(10, 2), "csr")
+
+    def test_solver_options_reject_typo_eagerly(self):
+        """The knob fails at construction, not after a hierarchy build."""
+        from repro.api import SolverOptions
+
+        with pytest.raises(ValueError, match="matvec_backend"):
+            SolverOptions(matvec_backend="ellpack")
+
+
+class TestFusedJacobiHybrid:
+    def test_fused_sweep_matches_coo_smoother_with_spill(self):
+        """A power-law level whose twin has a real spill remainder: the
+        fused sweep (spill folded into the RHS) must match the composed
+        COO smoother."""
+        import dataclasses
+
+        from repro.core.graph import graph_from_adjacency
+        from repro.core.smoothers import jacobi
+        from repro.graphs.generators import (barabasi_albert,
+                                             ensure_connected,
+                                             to_laplacian_coo)
+        from repro.sparse.matvec import resolve_ell_mode
+
+        n, r, c, v = ensure_connected(*barabasi_albert(600, m=4, seed=1,
+                                                       weighted=True))
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        ell, rem, stats = split_hybrid(level.adj, width=5)
+        assert stats["spill_nnz"] > 0
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+        want = jacobi(level, b, x, n_sweeps=2)
+        for mode in ("pallas", "jnp"):
+            lvl = dataclasses.replace(level, ell=ell, ell_rem=rem,
+                                      ell_mode=mode)
+            got = jacobi(lvl, b, x, n_sweeps=2)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-5)
+        assert resolve_ell_mode("ell") == "pallas"
+
+    def test_level_matvec_dispatches_on_twin(self):
+        import dataclasses
+
+        from repro.core.graph import graph_from_adjacency
+        from repro.graphs.generators import grid_2d, to_laplacian_coo
+
+        n, r, c, v = grid_2d(12, 12)
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        ell, rem, _ = split_hybrid(level.adj, width=4)
+        lvl = dataclasses.replace(level, ell=ell, ell_rem=rem,
+                                  ell_mode="pallas")
+        x = jnp.asarray(np.random.default_rng(3).normal(size=n)
+                        .astype(np.float32))
+        np.testing.assert_allclose(np.asarray(laplacian_matvec(lvl, x)),
+                                   np.asarray(level.laplacian_matvec(x)),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def _solve_pair(backend, matvec_backend, mesh=None):
+    from repro.api import Problem, SolverOptions, setup
+    from repro.graphs.generators import barabasi_albert, ensure_connected
+
+    n, r, c, v = ensure_connected(*barabasi_albert(900, m=3, seed=5,
+                                                   weighted=True))
+    p = Problem.from_edges(n, r, c, v)
+    b = np.random.default_rng(4).normal(size=n).astype(np.float32)
+    b -= b.mean()
+    opts = SolverOptions(coarsest_size=64, dist_nnz_threshold=100,
+                         matvec_backend=matvec_backend)
+    solver = setup(p, opts, backend=backend, mesh=mesh)
+    x, res = solver.solve(b)
+    return np.asarray(x), res, solver.stats()
+
+
+class TestSolveEquivalence:
+    """SolverOptions(matvec_backend=...) end-to-end through the facade."""
+
+    @pytest.mark.parametrize("backend", ["single", "serial_ref", "dist"])
+    @pytest.mark.parametrize("matvec_backend", ["ell", "auto"])
+    def test_ell_solve_matches_coo_solve(self, backend, matvec_backend):
+        x_coo, res_coo, _ = _solve_pair(backend, "coo")
+        x_ell, res_ell, stats = _solve_pair(backend, matvec_backend)
+        assert res_ell.converged
+        # identical PCG trajectory: same iteration count, same answer
+        assert res_ell.iters == res_coo.iters
+        np.testing.assert_allclose(x_ell, x_coo, rtol=1e-5, atol=1e-5)
+        # the hybrid layout was actually attached on the big levels
+        widths = [l.get("ell_width") for l in stats["levels"]]
+        assert any(w is not None for w in widths)
+        if matvec_backend == "ell":
+            top = stats["levels"][0]
+            assert top["ell_width"] is not None
+
+    def test_stats_report_width_and_spill(self):
+        _, _, stats = _solve_pair("single", "ell")
+        top = stats["levels"][0]
+        assert top["ell_width"] >= 1 and top["ell_spill"] >= 0
+
+
+DIST_DRIVER = textwrap.dedent("""
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    import jax.sharding as shd
+    from repro.api import Problem, SolverOptions, setup
+    from repro.graphs.generators import barabasi_albert, ensure_connected
+
+    n, r, c, v = ensure_connected(*barabasi_albert(1200, m=3, seed=3,
+                                                   weighted=True))
+    p = Problem.from_edges(n, r, c, v)
+    b = np.random.default_rng(0).normal(size=n).astype(np.float32)
+    b -= b.mean()
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(shd.AxisType.Auto,) * 2)
+    out = {}
+    for mb in ("coo", "ell"):
+        s = setup(p, SolverOptions(coarsest_size=64, max_iters=25,
+                                   dist_nnz_threshold=100,
+                                   matvec_backend=mb),
+                  backend="dist", mesh=mesh)
+        x, res = s.solve(b)
+        out[mb] = (np.asarray(x), res.iters, bool(res.converged))
+    print("RESULT " + json.dumps(dict(
+        maxdiff=float(np.abs(out["ell"][0] - out["coo"][0]).max()),
+        iters_coo=out["coo"][1], iters_ell=out["ell"][1],
+        converged=out["ell"][2])))
+""")
+
+
+@pytest.mark.slow  # fresh-process multi-device jit compile
+def test_dist_2x2_ell_matches_coo():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", DIST_DRIVER],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["converged"]
+    assert out["iters_ell"] == out["iters_coo"]
+    assert out["maxdiff"] < 1e-5, out
+
+
+class TestEllBlocks:
+    def test_blocks_preserve_every_edge(self):
+        """ELL blocks + spill hold exactly the partition's edges (global
+        ids), for a hub-heavy graph and a pod-split mesh."""
+        from repro.dist.partition import (ell_blocks_from_partition,
+                                          partition_edges_2d)
+        from repro.graphs.generators import barabasi_albert
+
+        n, r, c, v = barabasi_albert(800, m=4, seed=0, weighted=True)
+        part = partition_edges_2d(n, r, c, v, 2, 2, pods=2)
+        blocks = ell_blocks_from_partition(part, width=3)
+        assert blocks.width == 3
+
+        # Reconstruct the dense matrix from ELL + spill and compare.
+        n_pad = part.n_pad
+        dense = np.zeros((n_pad, n_pad), np.float64)
+        for p in range(part.pods):
+            for i in range(part.pr):
+                for j in range(part.pc):
+                    bc = blocks.col[p, i, j]
+                    bv = blocks.val[p, i, j]
+                    rows = i * part.nb + np.arange(part.nb)
+                    for w in range(blocks.width):
+                        ok = bc[:, w] < n_pad
+                        np.add.at(dense, (rows[ok], bc[ok, w]), bv[ok, w])
+                    sr = blocks.spill_row[p, i, j]
+                    ok = sr < n_pad
+                    np.add.at(dense, (sr[ok], blocks.spill_col[p, i, j][ok]),
+                              blocks.spill_val[p, i, j][ok])
+
+        want = np.zeros((n_pad, n_pad), np.float64)
+        perm = part.perm
+        np.add.at(want, (perm[r], perm[c]), v)
+        np.testing.assert_allclose(dense, want, rtol=1e-5, atol=1e-6)
+        # narrow width on a hub-heavy graph must actually spill
+        assert blocks.spill_nnz > 0
+
+    def test_auto_width_bounded_by_cap(self):
+        from repro.dist.partition import (ell_blocks_from_partition,
+                                          partition_edges_2d)
+        from repro.graphs.generators import grid_2d
+
+        n, r, c, v = grid_2d(20, 20)
+        part = partition_edges_2d(n, r, c, v, 2, 2)
+        blocks = ell_blocks_from_partition(part, cap=8)
+        assert 1 <= blocks.width <= 8
+
+    def test_auto_backend_rejects_tiny_partitions(self):
+        """Per-level layout selection applies to dist blocks too."""
+        from repro.dist.partition import (ell_blocks_from_partition,
+                                          partition_edges_2d)
+        from repro.graphs.generators import grid_2d
+
+        n, r, c, v = grid_2d(8, 8)  # 64 vertices: below MIN_ELL_ROWS
+        part = partition_edges_2d(n, r, c, v, 2, 2)
+        assert ell_blocks_from_partition(part, backend="auto") is None
+        assert ell_blocks_from_partition(part, backend="ell") is not None
+
+    def test_spill_free_level_drops_spill_arrays(self):
+        """Width >= max block degree: the DistGraphLevel carries no spill
+        arrays and the ELL matvec still matches the replicated level."""
+        import jax.numpy as jnp
+
+        from repro.core.graph import graph_from_adjacency
+        from repro.dist.solver import _partition_level
+        from repro.graphs.generators import (ensure_connected, grid_2d,
+                                             to_laplacian_coo)
+
+        n, r, c, v = ensure_connected(*grid_2d(24, 24))
+        level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        dlevel, _, blocks = _partition_level(level, mesh,
+                                             matvec_backend="ell",
+                                             ell_width_percentile=100.0)
+        assert blocks.spill_nnz == 0
+        assert dlevel.spill_row is None and dlevel.ell_col is not None
+        x = jnp.asarray(np.random.default_rng(0).normal(size=n)
+                        .astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(jax.device_get(dlevel.laplacian_matvec(x))),
+            np.asarray(jax.device_get(level.laplacian_matvec(x))),
+            rtol=1e-4, atol=1e-5)
