@@ -140,6 +140,31 @@ def main(argv=None) -> None:
                       round(t["jacobi_fused_pallas"]), bm["jacobi_fused"])
         print(f"  (schema {out['schema']} -> {path})")
 
+    if want("setup"):
+        from benchmarks.setup_bench import bench_setup, write_root_json
+
+        out = bench_setup(scale=scale)
+        _save("setup_phase", out)
+        path = write_root_json(out)
+        print("\n== setup phase: eager host-driven loop vs bucketed "
+              "jitted super-steps ==")
+        for r in out["graphs"]:
+            print(f"  {r['graph']:>18s} n={r['n']:>6d} nnz={r['nnz']:>7d}: "
+                  f"eager={r['eager_cold_s']:6.1f}/{r['eager_warm_s']:6.1f}s "
+                  f"superstep={r['superstep_cold_s']:6.1f}/"
+                  f"{r['superstep_warm_s']:6.1f}s (cold/warm) "
+                  f"speedup={r['speedup_cold']:.1f}x/{r['speedup_warm']:.1f}x "
+                  f"syncs={r['host_syncs_eager']}->"
+                  f"{r['host_syncs_superstep']} "
+                  f"match={r['levels_match']}")
+            _emit_csv(f"setup_{r['graph']}_superstep_warm",
+                      r["superstep_warm_s"] * 1e6, r["speedup_warm"])
+        rc = out["recompile_check"]
+        print(f"  second same-bucket graph: "
+              f"{rc['second_build_compiles']} new super-step compiles "
+              f"(zero_recompiles={rc['zero_recompiles']})")
+        print(f"  (schema {out['schema']} -> {path})")
+
     if want("kernels"):
         from benchmarks.kernels_bench import bench_kernels
 

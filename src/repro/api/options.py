@@ -32,6 +32,12 @@ class SolverOptions:
     * ``coarsest_size``, ``max_levels``, ``elim_max_degree``,
       ``strength_metric`` (``"algebraic_distance"`` | ``"affinity"``),
       ``random_ordering`` (paper §2.2 load-balancing relabeling), ``seed``.
+    * ``setup_mode`` — ``"superstep"`` (default): setup runs as jitted
+      super-steps compiled once per capacity bucket and reused across
+      levels and graphs (``repro.core.setup_step``); ``"eager"``: the
+      host-driven reference loop. Both produce equivalent hierarchies.
+    * ``setup_bucket_floor`` — power-of-two floor on the super-step
+      padding buckets (0 = exact power-of-two buckets).
 
     Solve-phase SpMV execution format:
 
@@ -73,6 +79,11 @@ class SolverOptions:
     seed: int = 0
     # solve-phase SpMV execution format ("coo" | "ell" | "auto")
     matvec_backend: str = "coo"
+    # setup execution mode ("superstep" = bucketed compile-once jitted
+    # super-steps, "eager" = host-driven reference loop) and the optional
+    # power-of-two floor on the super-step padding buckets
+    setup_mode: str = "superstep"
+    setup_bucket_floor: int = 0
     # cycle / smoother
     cycle: str = "V"
     smoother: str = "jacobi"
@@ -91,6 +102,13 @@ class SolverOptions:
         from repro.sparse.matvec import validate_backend
 
         validate_backend(self.matvec_backend)
+        if self.setup_mode not in ("superstep", "eager"):
+            raise ValueError(f"setup_mode must be 'superstep' or 'eager', "
+                             f"got {self.setup_mode!r}")
+        floor = self.setup_bucket_floor
+        if floor < 0 or (floor & (floor - 1)):
+            raise ValueError(f"setup_bucket_floor must be 0 or a power of "
+                             f"two, got {floor!r}")
 
     def setup_config(self) -> SetupConfig:
         """The core-layer setup configuration this maps to."""
@@ -101,7 +119,9 @@ class SolverOptions:
             strength_metric=self.strength_metric,
             aggregation=AggregationConfig(),
             seed=self.seed,
-            matvec_backend=self.matvec_backend)
+            matvec_backend=self.matvec_backend,
+            setup_mode=self.setup_mode,
+            setup_bucket_floor=self.setup_bucket_floor)
 
     def cycle_config(self) -> CycleConfig:
         """The core-layer cycle/smoother configuration this maps to."""

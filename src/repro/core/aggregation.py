@@ -115,10 +115,18 @@ def aggregation_round(level: GraphLevel, strength_q: jax.Array,
 
 def aggregate(level: GraphLevel, strength: jax.Array,
               cfg: AggregationConfig = AggregationConfig(),
-              vote_allreduce=None):
-    """Run Alg 2. Returns (aggregates [n] int32 root-vertex ids, state)."""
+              vote_allreduce=None, n_valid=None):
+    """Run Alg 2. Returns (aggregates [n] int32 root-vertex ids, state).
+
+    ``n_valid``: optional (possibly traced) count of real vertices when
+    ``level`` is a bucket-padded level (``repro.core.setup_step``). Padding
+    vertices start Decided, so they never vote, join, or seed — the first
+    ``n_valid`` outputs bit-match the unpadded run.
+    """
     n = level.n
     state = jnp.full((n,), UNDECIDED, jnp.int32)
+    if n_valid is not None:
+        state = jnp.where(jnp.arange(n) < n_valid, state, DECIDED)
     votes = jnp.zeros((n,), jnp.int32)
     aggregates = jnp.arange(n, dtype=jnp.int32)
     strength_q = jnp.clip((strength * cfg.strength_levels).astype(jnp.int32),
@@ -140,20 +148,49 @@ def aggregate(level: GraphLevel, strength: jax.Array,
     return aggregates, state
 
 
+def renumber_device(aggregates: jax.Array, n_valid=None):
+    """Device-side contiguous renumbering (the paper's global reordering).
+
+    Pure jnp — safe inside jit and the setup super-steps. Roots are vertices
+    that are their own aggregate; ranking them by a ``cumsum`` assigns
+    coarse ids in increasing root-vertex order, exactly like the old
+    host-NumPy implementation. ``n_valid`` masks bucket padding (padding
+    vertices self-point but must be neither roots nor checked).
+
+    Returns ``(coarse_id [n] int32, n_coarse int32 scalar, ok bool scalar)``
+    where ``ok`` asserts every non-root pointer hits a root.
+    """
+    n = aggregates.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    roots = aggregates == iota
+    if n_valid is not None:
+        roots = roots & (iota < n_valid)
+    root_rank = (jnp.cumsum(roots.astype(jnp.int32)) - 1).astype(jnp.int32)
+    coarse_id = jnp.take(root_rank, aggregates, mode="fill", fill_value=0)
+    n_coarse = jnp.sum(roots.astype(jnp.int32))
+    hits_root = jnp.take(roots, aggregates, mode="fill", fill_value=False)
+    if n_valid is not None:
+        hits_root = hits_root | (iota >= n_valid)
+    return coarse_id, n_coarse, jnp.all(hits_root)
+
+
 def renumber_aggregates(aggregates: jax.Array, n: int):
     """Contiguous coarse ids (paper's global reordering). Eager helper.
 
     Returns (coarse_id [n] int32, n_coarse int). Roots are vertices that are
     their own aggregate; every non-root points at a root (single-level
-    indirection by construction of Alg 2).
+    indirection by construction of Alg 2). The renumbering itself runs on
+    device (:func:`renumber_device`); only the two decision scalars cross
+    to the host, in a single batched ``device_get``.
     """
-    aggregates = jax.device_get(aggregates)
-    import numpy as np
-
-    roots = aggregates == np.arange(n)
-    root_rank = np.cumsum(roots) - 1
-    coarse_id = root_rank[aggregates]
-    n_coarse = int(roots.sum())
+    aggregates = jnp.asarray(aggregates)
+    # The old NumPy body implicitly enforced this via broadcasting; a
+    # capacity-padded array with self-pointing padding would otherwise
+    # silently count every padding slot as a root.
+    assert aggregates.shape[0] == n, \
+        f"aggregates length {aggregates.shape[0]} != n {n}"
+    coarse_id, n_coarse, ok = renumber_device(aggregates)
+    n_coarse, ok = jax.device_get((n_coarse, ok))
     # Non-root aggregate pointers must reference roots.
-    assert bool(roots[aggregates].all()), "aggregate pointers must hit roots"
-    return jnp.asarray(coarse_id, jnp.int32), n_coarse
+    assert bool(ok), "aggregate pointers must hit roots"
+    return coarse_id, int(n_coarse)

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import GraphLevel, graph_from_adjacency
-from repro.sparse.coo import COO, coalesce
+from repro.sparse.coo import COO, coalesce_arrays
 
 
 @jax.tree_util.register_dataclass
@@ -44,19 +44,46 @@ class AggregationLevel:
         return jnp.take(x_c, self.coarse_id, mode="fill", fill_value=0)
 
 
-def contract(level: GraphLevel, coarse_id: jax.Array, n_coarse: int,
-             coarse_capacity: int | None = None) -> AggregationLevel:
-    """Build PᵀLP by edge contraction."""
-    adj = level.adj
-    n = level.n
+def contract_arrays(adj: COO, coarse_id: jax.Array, n_coarse,
+                    sentinel=None, out_capacity: int | None = None):
+    """The shape-generic core of :func:`contract`: relabel both endpoints
+    of every edge by aggregate id and coalesce, dropping self-loops.
+
+    ``n_coarse`` may be a traced scalar (the bucketed setup super-steps) or
+    a static int (the eager path); ``sentinel`` is the padding id of the
+    output (default ``n_coarse``). Every input edge is contracted;
+    ``out_capacity`` sizes only the coalesced output (default
+    ``adj.capacity``). Returns ``(row, col, val, nnz)`` of length
+    ``out_capacity``, sorted with padding last.
+    """
+    n = adj.n_rows
+    if sentinel is None:
+        sentinel = n_coarse
     cr = jnp.take(coarse_id, jnp.minimum(adj.row, n - 1), mode="fill", fill_value=0)
     cc = jnp.take(coarse_id, jnp.minimum(adj.col, n - 1), mode="fill", fill_value=0)
     keep = adj.valid & (cr != cc)  # self-loops drop out of the Laplacian
-    row = jnp.where(keep, cr, n_coarse)
-    col = jnp.where(keep, cc, n_coarse)
+    row = jnp.where(keep, cr, sentinel)
+    col = jnp.where(keep, cc, sentinel)
     val = jnp.where(keep, adj.val, 0)
-    cap = coarse_capacity or adj.capacity
-    coarse_adj = coalesce(row, col, val, n_coarse, n_coarse, cap)
-    coarse = graph_from_adjacency(coarse_adj)
+    return coalesce_arrays(row, col, val, n_coarse,
+                           out_capacity or adj.capacity, sentinel=sentinel)
+
+
+_contract_jit = jax.jit(contract_arrays,
+                        static_argnames=("n_coarse", "out_capacity"))
+
+
+def contract(level: GraphLevel, coarse_id: jax.Array, n_coarse: int,
+             coarse_capacity: int | None = None) -> AggregationLevel:
+    """Build PᵀLP by edge contraction (one :func:`contract_arrays` call,
+    jitted per static coarse size for the eager path; the super-steps call
+    the traced-size core directly inside their own jit).
+    ``coarse_capacity`` sizes the coalesced output only — every fine edge
+    participates in the contraction regardless."""
+    adj = level.adj
+    row, col, val, _ = _contract_jit(
+        adj, coarse_id, n_coarse=n_coarse,
+        out_capacity=coarse_capacity or adj.capacity)
+    coarse = graph_from_adjacency(COO(row, col, val, n_coarse, n_coarse))
     return AggregationLevel(fine=level, coarse=coarse,
                             coarse_id=coarse_id.astype(jnp.int32))

@@ -44,13 +44,20 @@ MAX_ELIM_DEGREE = 4  # paper: "like LAMG, we eliminate vertices of degree 4 or l
 # Phase 1: selection (Alg 1)
 # ----------------------------------------------------------------------------
 
-def select_eliminated(level: GraphLevel, max_degree: int = MAX_ELIM_DEGREE
-                      ) -> jax.Array:
-    """Boolean [n] mask of vertices to eliminate. Pure jnp; shard_map-safe."""
+def select_eliminated(level: GraphLevel, max_degree: int = MAX_ELIM_DEGREE,
+                      n_valid=None) -> jax.Array:
+    """Boolean [n] mask of vertices to eliminate. Pure jnp; shard_map-safe.
+
+    ``n_valid``: optional (possibly traced) real-vertex count for
+    bucket-padded levels (``repro.core.setup_step``) — padding vertices
+    have degree 0 and would otherwise all qualify as candidates.
+    """
     adj = level.adj
     n = level.n
     udeg = level.unweighted_degrees()
     cand = udeg <= max_degree
+    if n_valid is not None:
+        cand = cand & (jnp.arange(n) < n_valid)
 
     h = hash32(jnp.arange(n, dtype=jnp.uint32))
     # ⊗: keep only candidate neighbours; carry their hash. Using the
@@ -151,21 +158,35 @@ def _neighbour_table(adj: COO, max_width: int):
 
 
 def build_elimination_level(level: GraphLevel, elim: jax.Array,
-                            coarse_capacity: int | None = None
+                            coarse_capacity: int | None = None,
+                            n_f: int | None = None,
+                            max_degree: int = MAX_ELIM_DEGREE
                             ) -> EliminationLevel:
-    """Eager/host-driven constructor (concrete sizes -> static shapes)."""
+    """Eager/host-driven constructor (concrete sizes -> static shapes).
+
+    ``n_f``: the eliminated count, when the caller already fetched it (the
+    setup loop's batched decision fetch) — passing it avoids a second
+    host sync on the mask. ``max_degree`` must cover the selection rule's
+    degree bound: the Schur fill cliques are built from an [n, max_degree]
+    neighbour table, so a narrower table than the selection bound would
+    silently drop fill edges.
+
+    ``setup_step._build_elim_build`` is this constructor's bucketed twin
+    (traced sizes, bucket sentinels); any change to the Schur algebra here
+    must be mirrored there — the equivalence test pins the two.
+    """
     n = level.n
-    elim = jax.device_get(elim)
-    n_f = int(elim.sum())
+    elim_j = jnp.asarray(elim)
+    if n_f is None:
+        n_f = int(jax.device_get(elim_j.sum()))
     n_c = n - n_f
 
-    keep = ~jnp.asarray(elim)
+    keep = ~elim_j
     c_index = (jnp.cumsum(keep.astype(jnp.int32)) - 1).astype(jnp.int32)
-    f_index = (jnp.cumsum(jnp.asarray(elim).astype(jnp.int32)) - 1).astype(jnp.int32)
-    f_vertices = jnp.nonzero(jnp.asarray(elim), size=max(n_f, 1), fill_value=n)[0].astype(jnp.int32)
+    f_index = (jnp.cumsum(elim_j.astype(jnp.int32)) - 1).astype(jnp.int32)
+    f_vertices = jnp.nonzero(elim_j, size=max(n_f, 1), fill_value=n)[0].astype(jnp.int32)
 
     adj = level.adj
-    elim_j = jnp.asarray(elim)
     row_f = jnp.take(elim_j, adj.row, mode="fill", fill_value=False) & adj.valid
     # F -> C edges become P_F (scaled); C -> C edges survive into A_CC.
     inv_deg_f = 1.0 / jnp.take(level.deg, f_vertices, mode="fill", fill_value=1.0)
@@ -191,7 +212,7 @@ def build_elimination_level(level: GraphLevel, elim: jax.Array,
 
     # Fill edges: for every eliminated f with neighbours u≠v (all in C):
     #   w_uv += w_uf * w_fv / deg_f
-    w = MAX_ELIM_DEGREE
+    w = max_degree
     nb_col, nb_val = _neighbour_table(adj, w)
     f_nb_col = jnp.take(nb_col, f_vertices, axis=0, mode="fill", fill_value=n)    # [n_f, w]
     f_nb_val = jnp.take(nb_val, f_vertices, axis=0, mode="fill", fill_value=0)
@@ -226,4 +247,5 @@ def eliminate_low_degree(level: GraphLevel, max_degree: int = MAX_ELIM_DEGREE,
     n_elim = int(jax.device_get(elim.sum()))
     if n_elim == 0 or n_elim == level.n:
         return None
-    return build_elimination_level(level, elim, coarse_capacity)
+    return build_elimination_level(level, elim, coarse_capacity,
+                                   n_f=n_elim, max_degree=max_degree)

@@ -58,6 +58,20 @@ def graph_from_adjacency(adj: COO) -> GraphLevel:
     return GraphLevel(adj=adj, deg=row_sums(adj))
 
 
+def pow2_bucket(n: int, floor: int = 0) -> int:
+    """Round up to the next power of two, with an optional floor.
+
+    The shared capacity-bucket rule: hierarchy level capacities, the setup
+    super-step padding shapes (``repro.core.setup_step``) and the
+    internally padded strength/λmax reductions all use it, so the eager
+    and super-step setup paths compute over identical shapes.
+    """
+    import math
+
+    b = 1 << max(int(math.ceil(math.log2(max(n, 1)))), 0)
+    return max(b, floor, 1)
+
+
 def laplacian_dense(level: GraphLevel) -> jax.Array:
     """Dense L (tests / coarsest solve only)."""
     return jnp.diag(level.deg) - level.adj.to_dense()

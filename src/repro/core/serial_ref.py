@@ -111,7 +111,8 @@ def build_serial_hierarchy(adj, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
         progressed = False
         elim = greedy_eliminate_mask(level, cfg.elim_max_degree)
         if elim.sum() >= max(cfg.elim_min_fraction * level.n, 1):
-            t = build_elimination_level(level, jnp.asarray(elim))
+            t = build_elimination_level(level, jnp.asarray(elim),
+                                        max_degree=cfg.elim_max_degree)
             t = dataclasses.replace(t, coarse=_shrink(t.coarse))
             transfers.append(t)
             lam_maxes.append(jnp.asarray(0.0))

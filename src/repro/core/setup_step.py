@@ -1,0 +1,472 @@
+"""Compile-once, device-resident multigrid setup: bucketed super-steps.
+
+The eager setup loop in ``core.hierarchy`` pays a fresh XLA compile for
+every level's exact shapes and blocks on a host round-trip for every
+data-dependent decision (elimination count, coarsening ratio, capacity
+shrink) — the serialization the paper's "everything is an SpMV"
+formulation exists to avoid, and the cost center LAMG and the GPU UA-AMG
+work (Brannick et al.) both report for aggregation-based setup.
+
+This module restructures the per-level work into a handful of jitted
+**super-steps** whose compiled programs are keyed only on power-of-two
+*capacity buckets*, never on exact level sizes:
+
+* ``elim_select`` — Alg 1 candidate selection + eliminated count,
+* ``elim_build``  — Schur-complement level construction (P_F, fill
+  cliques, coalesced coarse adjacency + degrees),
+* ``agg``         — strength sweeps, Alg 2 voting rounds, device-side
+  ``cumsum`` renumbering, edge-contraction coalesce, and the λmax power
+  iteration, fused into one program,
+* ``rebucket``    — shrink the carry to the next level's buckets,
+* ``ingest``      — degree computation for the padded finest level.
+
+A level of logical size ``n`` with ``nnz`` edges is carried as arrays
+padded to ``(bucket(n), bucket(nnz))`` with the *logical* size passed as a
+traced scalar; padding vertices are isolated (degree 0, sentinel edge ids
+``= n_cap``) and masked out of the few places where isolated vertices
+behave differently (elimination candidacy, vote state init, renumbering
+roots, mean/rescale reductions). Two levels — or two graphs — that land in
+the same buckets therefore reuse one compiled program per step: the
+compiled-function registry below records hits/misses, and a second
+same-bucket graph triggers **zero** new super-step compiles
+(``tests/test_setup_superstep.py`` pins this).
+
+Host contact is reduced to the level-advance decisions: one batched
+scalar ``device_get`` after ``elim_select`` (the eliminated count), one
+after ``elim_build`` / ``agg`` (coarse nnz, coarse size, ratio check) —
+everything else, including renumbering and contraction, stays on device.
+The produced hierarchy is equivalent to the eager path's (same level
+sizes and kinds, same PCG iteration counts); exact-shape wrapping into
+``GraphLevel``/``Transfer`` objects happens once at the end with plain
+slices.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import aggregate, renumber_device
+from repro.core.coarsen import AggregationLevel, contract_arrays
+from repro.core.elimination import (EliminationLevel, _neighbour_table,
+                                    select_eliminated)
+from repro.core.graph import GraphLevel, graph_from_adjacency, pow2_bucket
+from repro.core.smoothers import estimate_lambda_max
+from repro.core.strength import STRENGTH_METRICS
+from repro.sparse.coo import COO, coalesce_arrays
+
+
+# ----------------------------------------------------------------------------
+# Compiled-step registry: one jitted program per (step, bucket-key).
+# ----------------------------------------------------------------------------
+
+_CACHE: dict = {}
+_STATS: dict = {}       # step name -> {"compiles": int, "calls": int}
+_SYNCS = [0]            # batched host fetches since the last reset
+
+
+def reset_counters() -> None:
+    """Zero the compile/call/host-sync counters (the cache stays warm)."""
+    _STATS.clear()
+    _SYNCS[0] = 0
+
+
+def clear_cache() -> None:
+    """Drop every compiled super-step (cold-start benchmarking)."""
+    _CACHE.clear()
+
+
+def counters() -> dict:
+    """Snapshot: per-step ``{"compiles", "calls"}`` plus batched host
+    fetches since the last :func:`reset_counters`.
+
+    ``compiles`` counts registry misses. Each registry entry is a
+    ``jax.jit`` that only ever sees one set of shapes (its bucket), so a
+    miss is exactly one XLA compile and a hit is a cache reuse.
+    """
+    return dict(steps={k: dict(v) for k, v in _STATS.items()},
+                host_syncs=_SYNCS[0])
+
+
+def _step(name: str, key, builder):
+    st = _STATS.setdefault(name, dict(compiles=0, calls=0))
+    st["calls"] += 1
+    fn = _CACHE.get((name, key))
+    if fn is None:
+        st["compiles"] += 1
+        fn = _CACHE[(name, key)] = builder()
+    return fn
+
+
+def _fetch(*vals):
+    """One batched host sync for this decision point."""
+    _SYNCS[0] += 1
+    return jax.device_get(vals)
+
+
+def bucket(n: int, floor: int = 0) -> int:
+    """Round up to the next power of two, with an optional floor.
+
+    The floor (``SetupConfig.setup_bucket_floor``, itself a power of two)
+    widens compile reuse: every level smaller than the floor shares the
+    floor-sized programs instead of compiling tiny per-size variants.
+    Delegates to ``graph.pow2_bucket`` — the ONE bucket rule shared with
+    the strength/λmax RNG padding and the eager path's capacity shrink
+    (the eager/super-step bit-identity depends on these agreeing).
+    """
+    return pow2_bucket(n, floor)
+
+
+# ----------------------------------------------------------------------------
+# Super-step builders. Each returns a jitted function whose shapes are fully
+# determined by the bucket key; logical sizes ride as traced scalars.
+# ----------------------------------------------------------------------------
+
+def _plevel(row, col, val, deg) -> GraphLevel:
+    """Bucket-padded arrays as a real GraphLevel of n_cap isolated-padded
+    vertices (sentinel ids == n_cap keep every segment reduction exact)."""
+    n_cap = deg.shape[0]
+    return GraphLevel(adj=COO(row, col, val, n_cap, n_cap), deg=deg)
+
+
+def _build_ingest(n_cap: int, e_cap: int):
+    def step(row, col, val):
+        valid = row < n_cap
+        return jax.ops.segment_sum(jnp.where(valid, val, 0), row,
+                                   num_segments=n_cap)
+
+    return jax.jit(step)
+
+
+def _build_elim_select(n_cap: int, e_cap: int, max_degree: int):
+    def step(row, col, val, deg, n):
+        level = _plevel(row, col, val, deg)
+        elim = select_eliminated(level, max_degree, n_valid=n)
+        return elim, jnp.sum(elim.astype(jnp.int32))
+
+    return jax.jit(step)
+
+
+def _build_elim_build(n_cap: int, e_cap: int, f_cap: int, max_degree: int):
+    # The bucketed twin of elimination.build_elimination_level (traced
+    # n/n_f/n_c, sentinel n_cap/f_cap instead of n/n_f). The two MUST stay
+    # formula-identical — the hierarchy-equivalence test pins them on two
+    # graph families; apply any Schur-algebra change to both.
+    # Schur fill cliques come from an [n, max_degree] neighbour table —
+    # the width must cover the selection rule's degree bound.
+    w = max_degree
+
+    def step(row, col, val, deg, n, elim):
+        level = _plevel(row, col, val, deg)
+        adj = level.adj
+        n_f = jnp.sum(elim.astype(jnp.int32))
+        n_c = n - n_f
+        iota = jnp.arange(n_cap, dtype=jnp.int32)
+
+        keep = ~elim
+        c_index = (jnp.cumsum(keep.astype(jnp.int32)) - 1).astype(jnp.int32)
+        f_index = (jnp.cumsum(elim.astype(jnp.int32)) - 1).astype(jnp.int32)
+        # F-slot -> fine id (the scatter is the fixed-shape nonzero()).
+        f_slot = jnp.where(elim, f_index, f_cap)
+        f_vertices = jnp.full((f_cap,), n_cap, jnp.int32).at[f_slot].set(
+            iota, mode="drop")
+
+        row_f = jnp.take(elim, adj.row, mode="fill",
+                         fill_value=False) & adj.valid
+        inv_deg_f = 1.0 / jnp.take(level.deg, f_vertices, mode="fill",
+                                   fill_value=1.0)
+        p_row = jnp.where(row_f, jnp.take(f_index,
+                                          jnp.minimum(adj.row, n_cap - 1),
+                                          mode="fill", fill_value=0), f_cap)
+        p_col = jnp.where(row_f, jnp.take(c_index,
+                                          jnp.minimum(adj.col, n_cap - 1),
+                                          mode="fill", fill_value=0), f_cap)
+        p_scale = jnp.take(inv_deg_f, jnp.minimum(p_row, f_cap - 1),
+                           mode="fill", fill_value=0)
+        p_val = jnp.where(row_f, adj.val * p_scale, 0)
+
+        # --- coarse adjacency: A_CC + Schur fill cliques ----------------
+        cc = (~jnp.take(elim, adj.row, mode="fill", fill_value=True)) & \
+             (~jnp.take(elim, adj.col, mode="fill", fill_value=True)) & \
+             adj.valid
+        cc_row = jnp.where(cc, jnp.take(c_index,
+                                        jnp.minimum(adj.row, n_cap - 1),
+                                        mode="fill", fill_value=0), n_cap)
+        cc_col = jnp.where(cc, jnp.take(c_index,
+                                        jnp.minimum(adj.col, n_cap - 1),
+                                        mode="fill", fill_value=0), n_cap)
+        cc_val = jnp.where(cc, adj.val, 0)
+
+        nb_col, nb_val = _neighbour_table(adj, w)
+        f_nb_col = jnp.take(nb_col, f_vertices, axis=0, mode="fill",
+                            fill_value=n_cap)
+        f_nb_val = jnp.take(nb_val, f_vertices, axis=0, mode="fill",
+                            fill_value=0)
+        pair_val = f_nb_val[:, :, None] * f_nb_val[:, None, :] * \
+            inv_deg_f[:, None, None]
+        u = jnp.broadcast_to(f_nb_col[:, :, None], pair_val.shape)
+        v = jnp.broadcast_to(f_nb_col[:, None, :], pair_val.shape)
+        off_diag = (u != v) & (u < n) & (v < n)
+        fill_row = jnp.where(off_diag,
+                             jnp.take(c_index, jnp.minimum(u, n_cap - 1),
+                                      mode="fill", fill_value=0),
+                             n_cap).reshape(-1)
+        fill_col = jnp.where(off_diag,
+                             jnp.take(c_index, jnp.minimum(v, n_cap - 1),
+                                      mode="fill", fill_value=0),
+                             n_cap).reshape(-1)
+        fill_val = jnp.where(off_diag, pair_val, 0).reshape(-1)
+
+        all_row = jnp.concatenate([cc_row, fill_row]).astype(jnp.int32)
+        all_col = jnp.concatenate([cc_col, fill_col]).astype(jnp.int32)
+        all_val = jnp.concatenate([cc_val, fill_val])
+        co_row, co_col, co_val, co_nnz = coalesce_arrays(
+            all_row, all_col, all_val, n_c, e_cap + f_cap * w * w,
+            sentinel=n_cap)
+        co_deg = jax.ops.segment_sum(co_val, co_row, num_segments=n_cap)
+        return dict(c_index=c_index, f_index=f_index, f_vertices=f_vertices,
+                    inv_deg_f=inv_deg_f, p_row=p_row, p_col=p_col,
+                    p_val=p_val, co_row=co_row, co_col=co_col,
+                    co_val=co_val, co_deg=co_deg, co_nnz=co_nnz)
+
+    return jax.jit(step)
+
+
+def _build_agg(n_cap: int, e_cap: int, cfg):
+    strength_fn = STRENGTH_METRICS[cfg.strength_metric]
+
+    def step(row, col, val, deg, n):
+        level = _plevel(row, col, val, deg)
+        strength = strength_fn(level, n_vectors=cfg.strength_vectors,
+                               n_sweeps=cfg.strength_sweeps, seed=cfg.seed,
+                               n_valid=n)
+        aggs, _state = aggregate(level, strength, cfg.aggregation, n_valid=n)
+        coarse_id, n_c, ok = renumber_device(aggs, n_valid=n)
+        co_row, co_col, co_val, co_nnz = contract_arrays(
+            level.adj, coarse_id, n_c, sentinel=n_cap)
+        co_deg = jax.ops.segment_sum(co_val, co_row, num_segments=n_cap)
+        lam = estimate_lambda_max(level, n_valid=n)
+        return dict(coarse_id=coarse_id, n_c=n_c, ok=ok, co_row=co_row,
+                    co_col=co_col, co_val=co_val, co_deg=co_deg,
+                    co_nnz=co_nnz, lam=lam)
+
+    return jax.jit(step)
+
+
+def _build_rebucket(n_from: int, e_from: int, n_to: int, e_to: int):
+    def step(row, col, val, deg):
+        if e_to <= e_from:
+            r, c, v = row[:e_to], col[:e_to], val[:e_to]
+        else:
+            pad = e_to - e_from
+            r = jnp.concatenate([row, jnp.full((pad,), n_from, jnp.int32)])
+            c = jnp.concatenate([col, jnp.full((pad,), n_from, jnp.int32)])
+            v = jnp.concatenate([val, jnp.zeros((pad,), val.dtype)])
+        r = jnp.where(r >= n_to, n_to, r).astype(jnp.int32)
+        c = jnp.where(c >= n_to, n_to, c).astype(jnp.int32)
+        return r, c, v, deg[:n_to]
+
+    return jax.jit(step)
+
+
+# ----------------------------------------------------------------------------
+# Exact-shape wrapping (end of setup): plain slices, no super-step compiles.
+# ----------------------------------------------------------------------------
+
+def _exact_coarse(spec: dict) -> GraphLevel:
+    n_c, nnz_c = spec["n_c"], spec["nnz_c"]
+    out = spec["out"]
+    # NO floor here: the bucket floor exists for super-step compile reuse
+    # during setup; the wrapped solve-phase levels always get exact
+    # power-of-two capacities (same as the eager path's _shrink) so the
+    # per-level SpMV cost decays geometrically down the hierarchy and
+    # solve-phase jit programs share bucket-shaped keys. Slice when the
+    # carry is larger, pad with sentinels when bucket(nnz) exceeds the
+    # carry (possible for elim levels, whose coalesce output length
+    # e_cap + 16*f_cap is not itself a power of two).
+    cap = bucket(max(nnz_c, 1))
+    avail = int(out["co_row"].shape[0])
+    take = min(cap, avail)          # coalesce output is padding-last
+    r = jnp.minimum(out["co_row"][:take], n_c).astype(jnp.int32)
+    c = jnp.minimum(out["co_col"][:take], n_c).astype(jnp.int32)
+    v = out["co_val"][:take]
+    if cap > avail:
+        pad = cap - avail
+        r = jnp.concatenate([r, jnp.full((pad,), n_c, jnp.int32)])
+        c = jnp.concatenate([c, jnp.full((pad,), n_c, jnp.int32)])
+        v = jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+    return GraphLevel(adj=COO(r, c, v, max(n_c, 1), max(n_c, 1)),
+                      deg=out["co_deg"][:max(n_c, 1)])
+
+
+def _wrap_elim(fine: GraphLevel, spec: dict) -> EliminationLevel:
+    n, n_f, n_c = spec["n"], spec["n_f"], spec["n_c"]
+    out = spec["out"]
+    coarse = _exact_coarse(spec)
+    pad = out["p_row"] >= n_f
+    p_f = COO(jnp.where(pad, n_f, out["p_row"]).astype(jnp.int32),
+              jnp.where(pad, n_f, out["p_col"]).astype(jnp.int32),
+              out["p_val"], max(n_f, 1), max(n_c, 1))
+    return EliminationLevel(
+        fine=fine, coarse=coarse, elim_mask=spec["elim"][:n],
+        c_index=out["c_index"][:n], f_index=out["f_index"][:n],
+        f_vertices=out["f_vertices"][:max(n_f, 1)].astype(jnp.int32),
+        p_f=p_f, inv_deg_f=out["inv_deg_f"][:max(n_f, 1)])
+
+
+def _wrap_agg(fine: GraphLevel, spec: dict) -> AggregationLevel:
+    coarse = _exact_coarse(spec)
+    return AggregationLevel(fine=fine, coarse=coarse,
+                            coarse_id=spec["out"]["coarse_id"][:spec["n"]])
+
+
+# ----------------------------------------------------------------------------
+# The setup loop.
+# ----------------------------------------------------------------------------
+
+def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None):
+    """Compile-once device-resident setup. Same contract (and an
+    equivalent hierarchy: level sizes, kinds, PCG iteration counts) as
+    ``core.hierarchy.build_hierarchy_eager``.
+
+    ``profile``: optional list; when given, each constructed level appends
+    ``(kind, n_fine, seconds)`` — the bench's per-level wall time. Timing
+    forces a block per level, so leave it ``None`` outside benchmarks.
+    """
+    from repro.core.hierarchy import Hierarchy, attach_ell_transfers
+
+    floor = cfg.setup_bucket_floor
+    if floor < 0 or (floor & (floor - 1)):
+        # A non-power floor would produce mixed buckets (no reuse) and
+        # hidden re-padding in the strength/λmax RNG shapes.
+        raise ValueError(f"setup_bucket_floor must be 0 or a power of two, "
+                         f"got {floor!r}")
+    n0 = adj.n_rows
+    # Entry ingest: the one full-array host round-trip of the build. The
+    # input edge list arrives at an arbitrary (non-bucket) capacity, so
+    # compacting/padding it on host keeps the compiled-step registry free
+    # of per-raw-capacity entries; it is counted in the sync ledger.
+    row_h, col_h, val_h = (np.asarray(a) for a in
+                           _fetch(adj.row, adj.col, adj.val))
+    mask = row_h < n0
+    nnz0 = int(mask.sum())
+    n_cap, e_cap = bucket(n0, floor), bucket(nnz0, floor)
+    row_p = np.full(e_cap, n_cap, np.int32)
+    col_p = np.full(e_cap, n_cap, np.int32)
+    val_p = np.zeros(e_cap, val_h.dtype)
+    row_p[:nnz0] = row_h[mask]
+    col_p[:nnz0] = col_h[mask]
+    val_p[:nnz0] = val_h[mask]
+    row_d, col_d = jnp.asarray(row_p), jnp.asarray(col_p)
+    val_d = jnp.asarray(val_p)
+    deg_d = _step("ingest", (n_cap, e_cap),
+                  lambda: _build_ingest(n_cap, e_cap))(row_d, col_d, val_d)
+
+    cur_n = n0
+    n_d = jnp.asarray(cur_n, jnp.int32)
+    specs: list = []
+
+    def advance(out_row, out_col, out_val, out_deg, n_c, nnz_c):
+        nonlocal row_d, col_d, val_d, deg_d, n_cap, e_cap, cur_n, n_d
+        n_to, e_to = bucket(n_c, floor), bucket(max(nnz_c, 1), floor)
+        e_from = int(out_row.shape[0])
+        if (n_to, e_to) != (n_cap, e_from):
+            rb = _step("rebucket", (n_cap, e_from, n_to, e_to),
+                       lambda: _build_rebucket(n_cap, e_from, n_to, e_to))
+            out_row, out_col, out_val, out_deg = rb(out_row, out_col,
+                                                    out_val, out_deg)
+        row_d, col_d, val_d, deg_d = out_row, out_col, out_val, out_deg
+        n_cap, e_cap, cur_n = n_to, e_to, n_c
+        n_d = jnp.asarray(cur_n, jnp.int32)
+
+    def tick():
+        if profile is None:
+            return None
+        import time
+
+        jax.block_until_ready(deg_d)
+        return time.perf_counter()
+
+    while cur_n > cfg.coarsest_size and len(specs) < cfg.max_levels:
+        progressed = False
+
+        # --- low-degree elimination pass(es) ---------------------------
+        for _ in range(cfg.elim_rounds_per_level):
+            if cur_n <= cfg.coarsest_size:
+                break
+            t0 = tick()
+            sel = _step("elim_select", (n_cap, e_cap, cfg.elim_max_degree),
+                        lambda: _build_elim_select(n_cap, e_cap,
+                                                   cfg.elim_max_degree))
+            elim, n_elim_d = sel(row_d, col_d, val_d, deg_d, n_d)
+            (n_elim,) = _fetch(n_elim_d)          # decision fetch
+            n_elim = int(n_elim)
+            if n_elim < max(cfg.elim_min_fraction * cur_n, 1) \
+                    or n_elim == cur_n:
+                break
+            f_cap = bucket(n_elim, floor)
+            bld = _step("elim_build",
+                        (n_cap, e_cap, f_cap, cfg.elim_max_degree),
+                        lambda: _build_elim_build(n_cap, e_cap, f_cap,
+                                                  cfg.elim_max_degree))
+            out = bld(row_d, col_d, val_d, deg_d, n_d, elim)
+            (nnz_c,) = _fetch(out["co_nnz"])      # sizing fetch
+            nnz_c = int(nnz_c)
+            specs.append(("elim", dict(n=cur_n, n_f=n_elim,
+                                       n_c=cur_n - n_elim, nnz_c=nnz_c,
+                                       elim=elim, out=out)))
+            advance(out["co_row"], out["co_col"], out["co_val"],
+                    out["co_deg"], cur_n - n_elim, nnz_c)
+            progressed = True
+            if profile is not None:
+                profile.append(("elim", specs[-1][1]["n"],
+                                tick() - t0))
+
+        if cur_n <= cfg.coarsest_size:
+            break
+
+        # --- aggregation level -----------------------------------------
+        t0 = tick()
+        agg_key = (n_cap, e_cap, cfg.strength_metric, cfg.strength_vectors,
+                   cfg.strength_sweeps, cfg.seed, cfg.aggregation)
+        stp = _step("agg", agg_key, lambda: _build_agg(n_cap, e_cap, cfg))
+        out = stp(row_d, col_d, val_d, deg_d, n_d)
+        # decision fetch: coarse size (ratio check), coarse nnz (the old
+        # _shrink sync) and the renumbering invariant, in ONE device_get.
+        n_c, nnz_c, ok = _fetch(out["n_c"], out["co_nnz"], out["ok"])
+        assert bool(ok), "aggregate pointers must hit roots"
+        n_c, nnz_c = int(n_c), int(nnz_c)
+        if n_c >= cur_n * cfg.min_coarsen_ratio:
+            if not progressed:
+                break                 # stuck: neither mechanism coarsens
+            continue
+        specs.append(("agg", dict(n=cur_n, n_c=n_c, nnz_c=nnz_c, out=out)))
+        advance(out["co_row"], out["co_col"], out["co_val"],
+                out["co_deg"], n_c, nnz_c)
+        if profile is not None:
+            profile.append(("agg", specs[-1][1]["n"], tick() - t0))
+
+    # --- exact-shape wrap + dense bottom solve --------------------------
+    level = graph_from_adjacency(adj)
+    transfers = []
+    lam_maxes = []
+    for kind, spec in specs:
+        if kind == "elim":
+            t = _wrap_elim(level, spec)
+            lam_maxes.append(jnp.asarray(0.0))
+        else:
+            t = _wrap_agg(level, spec)
+            lam_maxes.append(spec["out"]["lam"])
+        transfers.append(t)
+        level = t.coarse
+
+    from repro.core.graph import laplacian_dense
+
+    L = laplacian_dense(level)
+    n_c = level.n
+    (alpha,) = _fetch(jnp.mean(level.deg))
+    alpha = float(alpha) or 1.0
+    coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
+    return Hierarchy(transfers=attach_ell_transfers(transfers, cfg),
+                     lam_maxes=tuple(lam_maxes), coarse_inv=coarse_inv)

@@ -59,16 +59,29 @@ def _jacobi_ell(level, b: jax.Array, x: jax.Array, n_sweeps: int,
 
 
 def estimate_lambda_max(level: GraphLevel, n_iters: int = 15,
-                        seed: int = 0) -> jax.Array:
-    """Power iteration on D⁻¹L (setup-time; coarse estimate is fine)."""
+                        seed: int = 0, n_valid=None) -> jax.Array:
+    """Power iteration on D⁻¹L (setup-time; coarse estimate is fine).
+
+    Like ``strength.relaxed_test_vectors``, the iteration state is padded
+    to the power-of-two bucket of ``n`` internally (shape-dependent RNG
+    and reduction order), so the eager setup path and the bucket-padded
+    super-steps produce the same estimate. ``n_valid``: real-vertex count
+    (possibly traced) when ``level`` is itself already bucket-padded.
+    """
+    from repro.core.graph import pow2_bucket
+
     n = level.n
-    inv_d = 1.0 / jnp.maximum(level.deg, 1e-30)
-    v = jax.random.normal(jax.random.PRNGKey(seed), (n,))
-    v = v - jnp.mean(v)
+    n_pad = pow2_bucket(n)          # == n for already-padded levels
+    n_real = n if n_valid is None else n_valid
+    row_ok = jnp.arange(n_pad) < n_real
+    inv_d = jnp.pad(1.0 / jnp.maximum(level.deg, 1e-30), (0, n_pad - n))
+    v = jax.random.normal(jax.random.PRNGKey(seed), (n_pad,))
+    v = jnp.where(row_ok, v, 0)
+    v = jnp.where(row_ok, v - jnp.sum(v) / n_real, 0)
 
     def body(v, _):
-        w = inv_d * level.laplacian_matvec(v)
-        w = w - jnp.mean(w)
+        w = inv_d * jnp.pad(level.laplacian_matvec(v[:n]), (0, n_pad - n))
+        w = jnp.where(row_ok, w - jnp.sum(w) / n_real, 0)
         lam = jnp.linalg.norm(w)
         return w / jnp.maximum(lam, 1e-30), lam
 

@@ -14,50 +14,77 @@ normalised to (0, 1] so the aggregation voting ⊕ can pack
 
 from __future__ import annotations
 
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.graph import GraphLevel
-from repro.sparse.coo import spmv
+from repro.sparse import matvec as matvec_ops
 
 
 def relaxed_test_vectors(level: GraphLevel, n_vectors: int = 8,
                          n_sweeps: int = 20, omega: float = 0.5,
-                         seed: int = 0) -> jax.Array:
-    """[n, R] test vectors: K damped-Jacobi sweeps on L x = 0."""
+                         seed: int = 0, n_valid=None) -> jax.Array:
+    """[n, R] test vectors: K damped-Jacobi sweeps on L x = 0.
+
+    The sweep's SpMV dispatches through ``repro.sparse.matvec.level_spmm``
+    — each relaxation is the fused-Jacobi update with b = 0, so a level
+    carrying a hybrid ELL twin runs it in fixed-width layout.
+
+    The vector state is padded to the power-of-two bucket of ``n``
+    internally: random draws and the mean/rescale reductions run at the
+    bucket shape regardless of the caller's exact ``n`` (JAX's
+    counter-based RNG and XLA's reduction order are both shape-dependent,
+    so this is what makes the eager setup path and the bucket-padded
+    super-steps of ``repro.core.setup_step`` produce bit-identical
+    strengths). ``n_valid``: real-vertex count (possibly traced) when
+    ``level`` is itself already bucket-padded; padding rows are pinned to
+    zero and never contribute.
+    """
+    from repro.core.graph import pow2_bucket
+
     n = level.n
+    n_pad = pow2_bucket(n)          # == n for already-padded levels
+    n_real = n if n_valid is None else n_valid
     key = jax.random.PRNGKey(seed)
-    x = jax.random.uniform(key, (n, n_vectors), minval=-0.5, maxval=0.5)
-    inv_d = 1.0 / jnp.maximum(level.deg, 1e-30)
+    x = jax.random.uniform(key, (n_pad, n_vectors), minval=-0.5, maxval=0.5)
+    row_ok = (jnp.arange(n_pad) < n_real)[:, None]
+    x = jnp.where(row_ok, x, 0)
+    inv_d = jnp.pad(1.0 / jnp.maximum(level.deg, 1e-30), (0, n_pad - n))
 
     def sweep(x, _):
         # Jacobi on Lx=0:  x <- (1-ω) x + ω D⁻¹ A x
-        ax = jax.vmap(lambda col: spmv(level.adj, col), in_axes=1, out_axes=1)(x)
+        ax = jnp.pad(matvec_ops.level_spmm(level, x[:n]),
+                     ((0, n_pad - n), (0, 0)))
         x = (1 - omega) * x + omega * inv_d[:, None] * ax
         # keep components mean-free (project off the exact nullspace)
-        x = x - jnp.mean(x, axis=0, keepdims=True)
+        x = x - jnp.sum(x, axis=0, keepdims=True) / n_real
+        x = jnp.where(row_ok, x, 0)
         # rescale to avoid under/overflow over many sweeps
         x = x / jnp.maximum(jnp.max(jnp.abs(x), axis=0, keepdims=True), 1e-30)
         return x, None
 
     x, _ = jax.lax.scan(sweep, x, None, length=n_sweeps)
-    return x
+    return x[:n]
 
 
 def algebraic_distance_strength(level: GraphLevel, n_vectors: int = 8,
                                 n_sweeps: int = 20, seed: int = 0,
-                                p_norm: float = jnp.inf) -> jax.Array:
+                                p_norm: float = jnp.inf,
+                                n_valid=None) -> jax.Array:
     """Per-edge strength = 1 / algebraic distance (Ron–Safro–Brandt eq. 4.1)."""
-    x = relaxed_test_vectors(level, n_vectors, n_sweeps, seed=seed)
+    x = relaxed_test_vectors(level, n_vectors, n_sweeps, seed=seed,
+                             n_valid=n_valid)
     adj = level.adj
     xi = jnp.take(x, jnp.minimum(adj.row, level.n - 1), axis=0,
                   mode="fill", fill_value=0)
     xj = jnp.take(x, jnp.minimum(adj.col, level.n - 1), axis=0,
                   mode="fill", fill_value=0)
     d = jnp.abs(xi - xj)
-    if jnp.isinf(p_norm):
+    # p_norm is a static Python float: decide the branch at trace time.
+    if math.isinf(float(p_norm)):
         dist = jnp.max(d, axis=1)
     else:
         dist = jnp.sum(d ** p_norm, axis=1) ** (1.0 / p_norm)
@@ -68,9 +95,11 @@ def algebraic_distance_strength(level: GraphLevel, n_vectors: int = 8,
 
 
 def affinity_strength(level: GraphLevel, n_vectors: int = 8,
-                      n_sweeps: int = 20, seed: int = 0) -> jax.Array:
+                      n_sweeps: int = 20, seed: int = 0,
+                      n_valid=None) -> jax.Array:
     """LAMG affinity c_uv = |⟨x_u, x_v⟩|² / (⟨x_u,x_u⟩⟨x_v,x_v⟩) per edge."""
-    x = relaxed_test_vectors(level, n_vectors, n_sweeps, seed=seed)
+    x = relaxed_test_vectors(level, n_vectors, n_sweeps, seed=seed,
+                             n_valid=n_valid)
     adj = level.adj
     xi = jnp.take(x, jnp.minimum(adj.row, level.n - 1), axis=0,
                   mode="fill", fill_value=0)

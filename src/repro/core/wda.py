@@ -39,20 +39,28 @@ def finest_matvec_cost(h: Hierarchy) -> float:
 
 
 def cycle_work_units(h: Hierarchy, cfg: CycleConfig) -> float:
-    """Work of ONE multigrid cycle in finest-matvec equivalents."""
-    base = finest_matvec_cost(h)
+    """Work of ONE multigrid cycle in finest-matvec equivalents.
+
+    All per-level nnz scalars are fetched in ONE batched ``device_get``
+    (WDA accounting runs at setup time; no per-level host round-trips).
+    """
+    scalars = [h.transfers[0].fine.adj.nnz]
+    scalars += [t.p_f.nnz if isinstance(t, EliminationLevel)
+                else t.fine.adj.nnz for t in h.transfers]
+    fetched = iter(int(x) for x in jax.device_get(tuple(scalars)))
+    base = next(fetched) + h.transfers[0].fine.n
     work = 0.0
     visits = 1.0
     for t in h.transfers:
         if isinstance(t, EliminationLevel):
-            p_nnz = _nnz(t.p_f)
+            p_nnz = next(fetched)
             work += visits * (2 * p_nnz + t.fine.n) / base
         else:
             sm = cfg.smoother
             sweeps = sm.pre_sweeps + sm.post_sweeps
             if sm.kind == "chebyshev":
                 sweeps = 2 * sm.cheby_degree  # degree matvecs per pre/post
-            lvl_mv = _nnz(t.fine.adj) + t.fine.n
+            lvl_mv = next(fetched) + t.fine.n
             work += visits * ((sweeps + 1) * lvl_mv + 2 * t.fine.n) / base
             if cfg.kind == "K":
                 # each FCG step below this level adds one matvec at the

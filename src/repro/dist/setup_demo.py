@@ -28,8 +28,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core.aggregation import (DECIDED, AggregationConfig,
-                                    apply_vote_update)
+from repro.core.aggregation import (DECIDED, SEED, UNDECIDED,
+                                    AggregationConfig, apply_vote_update)
 from repro.core.graph import hash32
 from repro.dist.partition import (Partition2D, check_mesh_matches, edge_spec,
                                   mesh_geometry)
@@ -182,3 +182,40 @@ def distributed_vote_round(mesh, part: Partition2D, n: int,
     # allreduce is needed on the vote tallies.
     return apply_vote_update(state, votes, aggregates, best_key, best_id, cfg,
                              vote_allreduce=None)
+
+
+def distributed_aggregate(mesh, part: Partition2D, n: int,
+                          strength_q: jax.Array,
+                          cfg: AggregationConfig = AggregationConfig()):
+    """All of Alg 2 as one device-resident super-step over the partition.
+
+    The distributed analogue of ``core.aggregation.aggregate`` and the
+    dist-side face of the compile-once setup restructuring
+    (``repro.core.setup_step``): the ``n_rounds`` voting rounds run inside
+    a single ``lax.scan`` whose carry (state, votes, aggregates) never
+    leaves the device, followed by the replicated singleton/seed
+    finalisation — one jittable program instead of a host-driven Python
+    loop of rounds. The first ``n`` outputs bit-match the serial
+    ``aggregate`` (same argument as for the single rounds: every reduction
+    is an order-independent integer ⊕).
+    """
+    n_pad = part.n_pad
+    iota = jnp.arange(n_pad, dtype=jnp.int32)
+    state = jnp.where(iota < n, UNDECIDED, DECIDED).astype(jnp.int32)
+    votes = jnp.zeros((n_pad,), jnp.int32)
+    aggregates = iota
+
+    def body(carry, _):
+        s, v, a = carry
+        s, v, a = distributed_vote_round(mesh, part, n, strength_q,
+                                         s, v, a, cfg)
+        return (s, v, a), None
+
+    (state, votes, aggregates), _ = jax.lax.scan(
+        body, (state, votes, aggregates), None, length=cfg.n_rounds)
+
+    # Leftover Undecided vertices become singletons; seeds anchor
+    # themselves — the same finalisation as the serial aggregate.
+    aggregates = jnp.where(state == UNDECIDED, iota, aggregates)
+    aggregates = jnp.where(state == SEED, iota, aggregates)
+    return aggregates, state

@@ -391,10 +391,13 @@ class DistLaplacianSolver:
         dist_transfers = []
         lam_maxes = []
         level_meta = []
-        for t, lam in zip(h.transfers, h.lam_maxes):
+        # One batched device_get for every candidate level's nnz (the
+        # split decision), instead of a host round-trip per level.
+        nnzs = [int(x) for x in jax.device_get(
+            tuple(t.fine.adj.nnz for t in h.transfers))]
+        for t, lam, nnz in zip(h.transfers, h.lam_maxes, nnzs):
             if len(dist_transfers) >= max_dist_levels:
                 break
-            nnz = int(jax.device_get(t.fine.adj.nnz))
             if nnz < dist_nnz_threshold:
                 break
             dfine, fill, blocks = _partition_level(

@@ -164,6 +164,49 @@ def degrees(a: COO) -> jax.Array:
     return jax.ops.segment_sum(ones, a.row, num_segments=a.n_rows)
 
 
+def coalesce_arrays(row, col, val, n_rows, capacity: int, sentinel=None):
+    """The shape-generic core of :func:`coalesce`.
+
+    ``n_rows`` may be a *traced* scalar: only ``capacity`` (the static array
+    length) enters the compiled program's shapes, so one compilation serves
+    every logical size that fits the bucket — this is what lets the setup
+    super-steps (``repro.core.setup_step``) reuse one compiled
+    sort+segment-sum across hierarchy levels and across graphs. ``sentinel``
+    is the padding id written into empty output slots (default ``n_rows``;
+    the bucketed setup path passes its static vertex-capacity so the output
+    keeps the padded-level convention). Returns ``(row, col, val, nnz)``
+    arrays of length ``capacity``, sorted by (row, col) with padding last.
+
+    Input padding must already sort after every real entry (ids >=
+    ``n_rows``); real duplicate (row, col) pairs are summed in sorted
+    position order, so the result is deterministic and independent of the
+    amount of trailing padding.
+    """
+    if sentinel is None:
+        sentinel = n_rows
+    valid = row < n_rows
+    row = jnp.where(valid, row, sentinel)
+    col = jnp.where(valid, col, sentinel)
+    order = jnp.lexsort((col, row))
+    r = row[order]
+    c = col[order]
+    v = jnp.where(valid, val, 0)[order]
+    # Unique (r, c) pairs via "is this the first occurrence" flags.
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (r[1:] != r[:-1]) | (c[1:] != c[:-1])])
+    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+    summed = jax.ops.segment_sum(v, seg, num_segments=capacity)
+    # r, c are constant within a segment, so max is a cheap representative.
+    rep_row = jax.ops.segment_max(r, seg, num_segments=capacity)
+    rep_col = jax.ops.segment_max(c, seg, num_segments=capacity)
+    is_pad = (rep_row < 0) | (rep_row >= n_rows)  # empty segs give iinfo.min
+    out_row = jnp.where(is_pad, sentinel, rep_row).astype(jnp.int32)
+    out_col = jnp.where(is_pad, sentinel, rep_col).astype(jnp.int32)
+    out_val = jnp.where(is_pad, 0.0, summed)
+    nnz = jnp.sum((~is_pad).astype(jnp.int32))
+    return out_row, out_col, out_val, nnz
+
+
 @partial(jax.jit, static_argnames=("n_rows", "n_cols", "capacity"))
 def coalesce(row, col, val, n_rows: int, n_cols: int, capacity: int) -> COO:
     """Sum duplicate (row, col) entries; drop padding; return a padded COO.
@@ -178,24 +221,9 @@ def coalesce(row, col, val, n_rows: int, n_cols: int, capacity: int) -> COO:
 
     Two-key ``lexsort`` is used instead of a fused integer key so the routine
     never overflows int32 on large graphs (row * n_cols does at ~46k rows).
+    The math lives in :func:`coalesce_arrays`; this wrapper pins the static
+    logical shape and packages the result as a :class:`COO`.
     """
-    valid = row < n_rows
-    row = jnp.where(valid, row, n_rows)
-    col = jnp.where(valid, col, n_rows)
-    order = jnp.lexsort((col, row))
-    r = row[order]
-    c = col[order]
-    v = jnp.where(valid, val, 0)[order]
-    # Unique (r, c) pairs via "is this the first occurrence" flags.
-    first = jnp.concatenate(
-        [jnp.ones((1,), bool), (r[1:] != r[:-1]) | (c[1:] != c[:-1])])
-    seg = jnp.cumsum(first.astype(jnp.int32)) - 1
-    summed = jax.ops.segment_sum(v, seg, num_segments=capacity)
-    # r, c are constant within a segment, so max is a cheap representative.
-    rep_row = jax.ops.segment_max(r, seg, num_segments=capacity)
-    rep_col = jax.ops.segment_max(c, seg, num_segments=capacity)
-    is_pad = (rep_row < 0) | (rep_row >= n_rows)  # empty segs give iinfo.min
-    out_row = jnp.where(is_pad, n_rows, rep_row).astype(jnp.int32)
-    out_col = jnp.where(is_pad, n_rows, rep_col).astype(jnp.int32)
-    out_val = jnp.where(is_pad, 0.0, summed)
+    out_row, out_col, out_val, _ = coalesce_arrays(
+        row, col, val, n_rows, capacity)
     return COO(out_row, out_col, out_val, n_rows, n_cols)

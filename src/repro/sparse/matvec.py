@@ -182,3 +182,23 @@ def level_spmv(level, x: jax.Array) -> jax.Array:
 def laplacian_matvec(level, x: jax.Array) -> jax.Array:
     """L @ x = deg * x - A @ x through the selected execution format."""
     return level.deg * x - level_spmv(level, x)
+
+
+def level_spmm(level, x: jax.Array) -> jax.Array:
+    """Y = A @ X for [n, d] multi-vector blocks, dispatching on layout.
+
+    The setup phase's strength-of-connection sweeps (K damped-Jacobi
+    relaxations of L x = 0 on R random vectors) go through here, so setup's
+    dominant SpMV work uses the same execution-format dispatch as the solve
+    phase: a level carrying a hybrid ELL twin runs the fixed-width layout
+    per column (each sweep is exactly the fused Jacobi update with b = 0),
+    plain levels take the COO ``spmm`` segment-sum.
+    """
+    ell = getattr(level, "ell", None)
+    if ell is None:
+        from repro.sparse.coo import spmm
+
+        return spmm(level.adj, x)
+    mode = getattr(level, "ell_mode", "pallas")
+    return jax.vmap(lambda c: hybrid_spmv(ell, level.ell_rem, c, mode),
+                    in_axes=1, out_axes=1)(x)
