@@ -163,6 +163,17 @@ def main(argv=None) -> None:
         print(f"  second same-bucket graph: "
               f"{rc['second_build_compiles']} new super-step compiles "
               f"(zero_recompiles={rc['zero_recompiles']})")
+        for r in out["dist"]["graphs"]:
+            print(f"  dist {r['graph']:>13s}: eager={r['eager_cold_s']:6.1f}"
+                  f"/{r['eager_warm_s']:6.1f}s superstep="
+                  f"{r['superstep_cold_s']:6.1f}/"
+                  f"{r['superstep_warm_s']:6.1f}s "
+                  f"speedup={r['speedup_warm']:.1f}x(warm) "
+                  f"fetches/level={r['decision_fetches_per_level']} "
+                  f"contract={r['sync_contract_met']}")
+            _emit_csv(f"setup_dist_{r['graph']}_superstep_warm",
+                      r["superstep_warm_s"] * 1e6,
+                      r["decision_fetches_per_level"])
         print(f"  (schema {out['schema']} -> {path})")
 
     if want("kernels"):

@@ -36,8 +36,23 @@ class SolverOptions:
       super-steps compiled once per capacity bucket and reused across
       levels and graphs (``repro.core.setup_step``); ``"eager"``: the
       host-driven reference loop. Both produce equivalent hierarchies.
+      Honored by every backend: on ``dist`` the super-steps run their
+      Alg 1/Alg 2 semiring reductions sharded over the 2D edge partition
+      of the mesh (``repro.dist.setup``) with one batched scalar fetch
+      per level-advance decision.
     * ``setup_bucket_floor`` — power-of-two floor on the super-step
       padding buckets (0 = exact power-of-two buckets).
+    * ``elim_sizing`` — ``"conservative"`` (default): the super-step
+      elimination pass fuses Alg 1 selection and the Schur build into one
+      program by sizing F-slot arrays at the vertex bucket
+      (count-independent — one decision fetch per elim level);
+      ``"exact"`` keeps the two-fetch split with F-slots at
+      ``bucket(n_elim)``. Identical hierarchies either way.
+    * ``setup_ell_sweeps`` — attach a fixed-width ELL twin before the
+      setup-time strength sweeps so setup's dominant SpMV runs the fused
+      kernel path too. Opt-in: changes the float summation order, so
+      setup numerics then depend on ``matvec_backend``. No effect with
+      ``matvec_backend="coo"``.
 
     Solve-phase SpMV execution format:
 
@@ -80,10 +95,16 @@ class SolverOptions:
     # solve-phase SpMV execution format ("coo" | "ell" | "auto")
     matvec_backend: str = "coo"
     # setup execution mode ("superstep" = bucketed compile-once jitted
-    # super-steps, "eager" = host-driven reference loop) and the optional
-    # power-of-two floor on the super-step padding buckets
+    # super-steps — sharded over the 2D edge partition on the dist
+    # backend; "eager" = host-driven reference loop), the optional
+    # power-of-two floor on the super-step padding buckets, the
+    # elimination Schur-sizing policy ("conservative" fuses select+build
+    # into one fetch; "exact" keeps the two-fetch split), and the opt-in
+    # setup-time ELL strength sweeps
     setup_mode: str = "superstep"
     setup_bucket_floor: int = 0
+    elim_sizing: str = "conservative"
+    setup_ell_sweeps: bool = False
     # cycle / smoother
     cycle: str = "V"
     smoother: str = "jacobi"
@@ -105,6 +126,9 @@ class SolverOptions:
         if self.setup_mode not in ("superstep", "eager"):
             raise ValueError(f"setup_mode must be 'superstep' or 'eager', "
                              f"got {self.setup_mode!r}")
+        if self.elim_sizing not in ("conservative", "exact"):
+            raise ValueError(f"elim_sizing must be 'conservative' or "
+                             f"'exact', got {self.elim_sizing!r}")
         floor = self.setup_bucket_floor
         if floor < 0 or (floor & (floor - 1)):
             raise ValueError(f"setup_bucket_floor must be 0 or a power of "
@@ -121,7 +145,9 @@ class SolverOptions:
             seed=self.seed,
             matvec_backend=self.matvec_backend,
             setup_mode=self.setup_mode,
-            setup_bucket_floor=self.setup_bucket_floor)
+            setup_bucket_floor=self.setup_bucket_floor,
+            elim_sizing=self.elim_sizing,
+            setup_ell_sweeps=self.setup_ell_sweeps)
 
     def cycle_config(self) -> CycleConfig:
         """The core-layer cycle/smoother configuration this maps to."""

@@ -49,6 +49,61 @@ def _pack_state_strength(state: jax.Array, strength_q: jax.Array,
     return state.astype(jnp.int32) * (levels + 2) + strength_q.astype(jnp.int32)
 
 
+def quantise_strength(strength: jax.Array,
+                      cfg: AggregationConfig) -> jax.Array:
+    """Per-edge strengths in (0, 1] -> int32 levels for the packed vote key
+    (the one quantisation rule, shared by ``aggregate`` and the setup
+    super-steps that precompute ELL vote tables)."""
+    return jnp.clip((strength * cfg.strength_levels).astype(jnp.int32),
+                    0, cfg.strength_levels)
+
+
+def lex_combine(k1: jax.Array, i1: jax.Array, k2: jax.Array, i2: jax.Array):
+    """⊕-merge two partial vote reductions: max key, then min id among the
+    attaining sides. Exact for the integer lexicographic ⊕ (associative,
+    commutative), so any entry partition — ELL tile vs COO spill, or
+    per-device blocks — recombines bitwise."""
+    k = jnp.maximum(k1, k2)
+    big = jnp.iinfo(jnp.int32).max
+    i = jnp.minimum(jnp.where(k1 == k, i1, big), jnp.where(k2 == k, i2, big))
+    return k, i
+
+
+def vote_edge_reduce(layout, sq_table: jax.Array, spill_sq: jax.Array,
+                     state: jax.Array, cfg: AggregationConfig,
+                     mode: str = "jnp"):
+    """One round's edge ⊕ through the fused vote kernel + staged spill.
+
+    ``layout`` is a ``repro.sparse.ell.EllLayout`` of the level's
+    adjacency, ``sq_table``/``spill_sq`` the quantised strengths in that
+    layout (built once per aggregation super-step, reused across the
+    scanned rounds). The ELL tile reduces row-locally in one pass
+    (``repro.kernels.agg_vote``; ``mode="pallas"`` runs the Pallas kernel,
+    ``"jnp"`` the vectorised reference); rows spilling past the tile width
+    go through the staged segment reduction, and the two halves lex-merge
+    exactly. Bit-matches ``segment_argmax_lex`` over the raw edge list.
+    """
+    from repro.kernels.agg_vote import vote_reduce, vote_reduce_ref
+
+    n = layout.n_rows
+    if mode == "pallas":
+        best_k, best_i = vote_reduce(layout.col_table, sq_table, state,
+                                     levels=cfg.strength_levels,
+                                     decided=DECIDED)
+    else:
+        best_k, best_i = vote_reduce_ref(layout.col_table, sq_table, state,
+                                         levels=cfg.strength_levels,
+                                         decided=DECIDED)
+    nbr_state = jnp.take(state, layout.spill_col, mode="fill",
+                         fill_value=DECIDED)
+    emit_ok = (layout.spill_row < n) & (nbr_state != DECIDED)
+    key = _pack_state_strength(nbr_state, spill_sq, cfg.strength_levels)
+    sp_k, _, sp_i = segment_argmax_lex(
+        key, jnp.zeros_like(key), layout.spill_col, layout.spill_row,
+        num_segments=n, valid=emit_ok)
+    return lex_combine(best_k, best_i, sp_k, sp_i)
+
+
 def apply_vote_update(state: jax.Array, votes: jax.Array,
                       aggregates: jax.Array, best_key: jax.Array,
                       best_id: jax.Array, cfg: AggregationConfig,
@@ -57,7 +112,7 @@ def apply_vote_update(state: jax.Array, votes: jax.Array,
     ⊕ reduction results ``(best_key, best_id)``.
 
     Shared verbatim by the single-device round below and
-    ``repro.dist.setup_demo.distributed_vote_round`` — the two must
+    ``repro.dist.setup.distributed_vote_round`` — the two must
     bit-match, so the update logic lives in exactly one place. Vector
     length is taken from ``state`` (n single-device, n_pad distributed).
 
@@ -115,13 +170,22 @@ def aggregation_round(level: GraphLevel, strength_q: jax.Array,
 
 def aggregate(level: GraphLevel, strength: jax.Array,
               cfg: AggregationConfig = AggregationConfig(),
-              vote_allreduce=None, n_valid=None):
+              vote_allreduce=None, n_valid=None, edge_reduce=None):
     """Run Alg 2. Returns (aggregates [n] int32 root-vertex ids, state).
 
     ``n_valid``: optional (possibly traced) count of real vertices when
     ``level`` is a bucket-padded level (``repro.core.setup_step``). Padding
     vertices start Decided, so they never vote, join, or seed — the first
     ``n_valid`` outputs bit-match the unpadded run.
+
+    ``edge_reduce``: optional ``state -> (best_key, best_id)`` override of
+    the per-round edge ⊕ (the semiring SpMV). The setup super-steps pass
+    the fused ELL vote reduction (:func:`vote_edge_reduce`); the
+    distributed super-steps a ``shard_map`` over the 2D edge partition.
+    With an override, ``strength`` may be ``None`` — the caller already
+    folded the quantised strengths into its reduction. The ⊕ is an
+    order-independent integer reduction, so every implementation
+    bit-matches the staged default.
     """
     n = level.n
     state = jnp.full((n,), UNDECIDED, jnp.int32)
@@ -129,13 +193,20 @@ def aggregate(level: GraphLevel, strength: jax.Array,
         state = jnp.where(jnp.arange(n) < n_valid, state, DECIDED)
     votes = jnp.zeros((n,), jnp.int32)
     aggregates = jnp.arange(n, dtype=jnp.int32)
-    strength_q = jnp.clip((strength * cfg.strength_levels).astype(jnp.int32),
-                          0, cfg.strength_levels)
+    if edge_reduce is None:
+        strength_q = quantise_strength(strength, cfg)
 
     def body(carry, _):
         state, votes, aggregates = carry
-        state, votes, aggregates = aggregation_round(
-            level, strength_q, state, votes, aggregates, cfg, vote_allreduce)
+        if edge_reduce is None:
+            state, votes, aggregates = aggregation_round(
+                level, strength_q, state, votes, aggregates, cfg,
+                vote_allreduce)
+        else:
+            best_key, best_id = edge_reduce(state)
+            state, votes, aggregates = apply_vote_update(
+                state, votes, aggregates, best_key, best_id, cfg,
+                vote_allreduce)
         return (state, votes, aggregates), None
 
     (state, votes, aggregates), _ = jax.lax.scan(

@@ -10,8 +10,8 @@ Two phases:
    (``segment_argmin_lex``), which is exactly the CombBLAS computation in
    data-parallel JAX form — the same staged reduction runs under
    ``shard_map`` on the 2D edge partition as
-   ``repro.dist.setup_demo.distributed_select_eliminated``, which
-   bit-matches this function.
+   ``repro.dist.setup.distributed_select_eliminated`` (and inside the
+   distributed super-step setup), which bit-matches this function.
 
    The eliminated set is an *independent set* (two adjacent candidates can't
    both attain the strict minimum), so L_FF is diagonal and elimination is an
@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import GraphLevel, graph_from_adjacency, hash32
-from repro.sparse.coo import COO, coalesce
+from repro.sparse.coo import COO, coalesce, coalesce_arrays
 from repro.sparse.segment import segment_argmin_lex
 
 MAX_ELIM_DEGREE = 4  # paper: "like LAMG, we eliminate vertices of degree 4 or less"
@@ -157,6 +157,114 @@ def _neighbour_table(adj: COO, max_width: int):
     return nb_col, nb_val
 
 
+def schur_arrays(adj: COO, deg: jax.Array, elim: jax.Array, n, *,
+                 f_cap: int, max_degree: int = MAX_ELIM_DEGREE,
+                 out_capacity: int | None = None, sentinel=None,
+                 with_coarse_deg: bool = True) -> dict:
+    """The ONE Schur-complement formula, traced-size core.
+
+    Shared by the eager constructor (:func:`build_elimination_level`:
+    exact shapes, ``n`` static, ``f_cap = n_f``) and the bucketed setup
+    super-step (``setup_step``: bucket shapes, ``n`` traced, ``f_cap`` a
+    static capacity >= the eliminated count) — previously two
+    formula-identical twins kept in sync by the equivalence test, the way
+    ``coalesce_arrays``/``contract_arrays`` already share their cores.
+
+    ``adj``/``deg`` describe the fine level at capacity ``n_cap =
+    adj.n_rows`` (== ``n`` on the eager path); ``elim`` is the bool
+    [n_cap] elimination mask; ``f_cap`` sizes every F-slot array (the
+    Schur fill cliques come from an [n_cap, max_degree] neighbour table,
+    so ``max_degree`` must cover the selection rule's bound).
+    ``sentinel`` (default ``n_cap``) is the padding id of the coalesced
+    coarse edge list. Only capacities enter compiled shapes; ``n`` (and
+    hence ``n_f``/``n_c``) may be traced scalars.
+
+    Returns a dict of padded arrays: the P_F triple (sentinel ``f_cap``),
+    F-slot maps, and the coalesced coarse adjacency + degrees (padding
+    last), plus the traced ``n_f``/``n_c``/``co_nnz`` scalars.
+    """
+    n_cap = adj.n_rows
+    w = max_degree
+    if sentinel is None:
+        sentinel = n_cap
+    elim = jnp.asarray(elim)
+    n_f = jnp.sum(elim.astype(jnp.int32))
+    n_c = n - n_f
+    iota = jnp.arange(n_cap, dtype=jnp.int32)
+
+    keep = ~elim
+    c_index = (jnp.cumsum(keep.astype(jnp.int32)) - 1).astype(jnp.int32)
+    f_index = (jnp.cumsum(elim.astype(jnp.int32)) - 1).astype(jnp.int32)
+    # F-slot -> fine id (the scatter is the fixed-shape nonzero()).
+    f_slot = jnp.where(elim, f_index, f_cap)
+    f_vertices = jnp.full((f_cap,), n_cap, jnp.int32).at[f_slot].set(
+        iota, mode="drop")
+
+    row_f = jnp.take(elim, adj.row, mode="fill", fill_value=False) & adj.valid
+    # F -> C edges become P_F (scaled); C -> C edges survive into A_CC.
+    inv_deg_f = 1.0 / jnp.take(deg, f_vertices, mode="fill", fill_value=1.0)
+    p_row = jnp.where(row_f, jnp.take(f_index,
+                                      jnp.minimum(adj.row, n_cap - 1),
+                                      mode="fill", fill_value=0), f_cap)
+    p_col = jnp.where(row_f, jnp.take(c_index,
+                                      jnp.minimum(adj.col, n_cap - 1),
+                                      mode="fill", fill_value=0), f_cap)
+    p_scale = jnp.take(inv_deg_f, jnp.minimum(p_row, f_cap - 1),
+                       mode="fill", fill_value=0)
+    p_val = jnp.where(row_f, adj.val * p_scale, 0)
+
+    # --- coarse adjacency: A_CC + Schur fill cliques --------------------
+    cc = (~jnp.take(elim, adj.row, mode="fill", fill_value=True)) & \
+         (~jnp.take(elim, adj.col, mode="fill", fill_value=True)) & \
+         adj.valid
+    cc_row = jnp.where(cc, jnp.take(c_index,
+                                    jnp.minimum(adj.row, n_cap - 1),
+                                    mode="fill", fill_value=0), n_cap)
+    cc_col = jnp.where(cc, jnp.take(c_index,
+                                    jnp.minimum(adj.col, n_cap - 1),
+                                    mode="fill", fill_value=0), n_cap)
+    cc_val = jnp.where(cc, adj.val, 0)
+
+    # Fill edges: for every eliminated f with neighbours u≠v (all in C):
+    #   w_uv += w_uf * w_fv / deg_f
+    nb_col, nb_val = _neighbour_table(adj, w)
+    f_nb_col = jnp.take(nb_col, f_vertices, axis=0, mode="fill",
+                        fill_value=n_cap)                        # [f_cap, w]
+    f_nb_val = jnp.take(nb_val, f_vertices, axis=0, mode="fill",
+                        fill_value=0)
+    pair_val = f_nb_val[:, :, None] * f_nb_val[:, None, :] * \
+        inv_deg_f[:, None, None]                                 # [f_cap,w,w]
+    u = jnp.broadcast_to(f_nb_col[:, :, None], pair_val.shape)
+    v = jnp.broadcast_to(f_nb_col[:, None, :], pair_val.shape)
+    off_diag = (u != v) & (u < n) & (v < n)
+    fill_row = jnp.where(off_diag,
+                         jnp.take(c_index, jnp.minimum(u, n_cap - 1),
+                                  mode="fill", fill_value=0),
+                         n_cap).reshape(-1)
+    fill_col = jnp.where(off_diag,
+                         jnp.take(c_index, jnp.minimum(v, n_cap - 1),
+                                  mode="fill", fill_value=0),
+                         n_cap).reshape(-1)
+    fill_val = jnp.where(off_diag, pair_val, 0).reshape(-1)
+
+    all_row = jnp.concatenate([cc_row, fill_row]).astype(jnp.int32)
+    all_col = jnp.concatenate([cc_col, fill_col]).astype(jnp.int32)
+    all_val = jnp.concatenate([cc_val, fill_val])
+    co_row, co_col, co_val, co_nnz = coalesce_arrays(
+        all_row, all_col, all_val, n_c,
+        out_capacity or int(all_row.shape[0]), sentinel=sentinel)
+    out = dict(c_index=c_index, f_index=f_index, f_vertices=f_vertices,
+               inv_deg_f=inv_deg_f, p_row=p_row, p_col=p_col, p_val=p_val,
+               co_row=co_row, co_col=co_col, co_val=co_val,
+               co_nnz=co_nnz, n_f=n_f)
+    if with_coarse_deg:
+        # The bucketed super-step carries degrees between levels; the
+        # eager wrapper recomputes them at exact shape and skips this.
+        out["co_deg"] = jax.ops.segment_sum(co_val, co_row,
+                                            num_segments=n_cap)
+    return out
+
+
 def build_elimination_level(level: GraphLevel, elim: jax.Array,
                             coarse_capacity: int | None = None,
                             n_f: int | None = None,
@@ -171,9 +279,9 @@ def build_elimination_level(level: GraphLevel, elim: jax.Array,
     neighbour table, so a narrower table than the selection bound would
     silently drop fill edges.
 
-    ``setup_step._build_elim_build`` is this constructor's bucketed twin
-    (traced sizes, bucket sentinels); any change to the Schur algebra here
-    must be mirrored there — the equivalence test pins the two.
+    The Schur algebra lives in :func:`schur_arrays` (shared with the
+    bucketed setup super-step); this wrapper pins the exact shapes and
+    packages the result as an :class:`EliminationLevel`.
     """
     n = level.n
     elim_j = jnp.asarray(elim)
@@ -181,63 +289,20 @@ def build_elimination_level(level: GraphLevel, elim: jax.Array,
         n_f = int(jax.device_get(elim_j.sum()))
     n_c = n - n_f
 
-    keep = ~elim_j
-    c_index = (jnp.cumsum(keep.astype(jnp.int32)) - 1).astype(jnp.int32)
-    f_index = (jnp.cumsum(elim_j.astype(jnp.int32)) - 1).astype(jnp.int32)
-    f_vertices = jnp.nonzero(elim_j, size=max(n_f, 1), fill_value=n)[0].astype(jnp.int32)
-
     adj = level.adj
-    row_f = jnp.take(elim_j, adj.row, mode="fill", fill_value=False) & adj.valid
-    # F -> C edges become P_F (scaled); C -> C edges survive into A_CC.
-    inv_deg_f = 1.0 / jnp.take(level.deg, f_vertices, mode="fill", fill_value=1.0)
-
-    p_row = jnp.where(row_f, jnp.take(f_index, jnp.minimum(adj.row, n - 1),
-                                      mode="fill", fill_value=0), n_f if n_f else 1)
-    p_col = jnp.where(row_f, jnp.take(c_index, jnp.minimum(adj.col, n - 1),
-                                      mode="fill", fill_value=0), n_f if n_f else 1)
-    p_scale = jnp.take(inv_deg_f, jnp.minimum(p_row, max(n_f - 1, 0)),
-                       mode="fill", fill_value=0)
-    p_val = jnp.where(row_f, adj.val * p_scale, 0)
-    p_f = COO(p_row.astype(jnp.int32), p_col.astype(jnp.int32), p_val,
-              max(n_f, 1), max(n_c, 1))
-
-    # --- coarse adjacency: A_CC + Schur fill cliques --------------------
-    cc = (~jnp.take(elim_j, adj.row, mode="fill", fill_value=True)) & \
-         (~jnp.take(elim_j, adj.col, mode="fill", fill_value=True)) & adj.valid
-    cc_row = jnp.where(cc, jnp.take(c_index, jnp.minimum(adj.row, n - 1),
-                                    mode="fill", fill_value=0), n_c)
-    cc_col = jnp.where(cc, jnp.take(c_index, jnp.minimum(adj.col, n - 1),
-                                    mode="fill", fill_value=0), n_c)
-    cc_val = jnp.where(cc, adj.val, 0)
-
-    # Fill edges: for every eliminated f with neighbours u≠v (all in C):
-    #   w_uv += w_uf * w_fv / deg_f
-    w = max_degree
-    nb_col, nb_val = _neighbour_table(adj, w)
-    f_nb_col = jnp.take(nb_col, f_vertices, axis=0, mode="fill", fill_value=n)    # [n_f, w]
-    f_nb_val = jnp.take(nb_val, f_vertices, axis=0, mode="fill", fill_value=0)
-    scale = inv_deg_f[:, None, None]                                              # [n_f,1,1]
-    pair_val = f_nb_val[:, :, None] * f_nb_val[:, None, :] * scale                # [n_f,w,w]
-    u = jnp.broadcast_to(f_nb_col[:, :, None], pair_val.shape)
-    v = jnp.broadcast_to(f_nb_col[:, None, :], pair_val.shape)
-    off_diag = (u != v) & (u < n) & (v < n)
-    fill_row = jnp.where(off_diag, jnp.take(c_index, jnp.minimum(u, n - 1),
-                                            mode="fill", fill_value=0), n_c).reshape(-1)
-    fill_col = jnp.where(off_diag, jnp.take(c_index, jnp.minimum(v, n - 1),
-                                            mode="fill", fill_value=0), n_c).reshape(-1)
-    fill_val = jnp.where(off_diag, pair_val, 0).reshape(-1)
-
-    all_row = jnp.concatenate([cc_row, fill_row]).astype(jnp.int32)
-    all_col = jnp.concatenate([cc_col, fill_col]).astype(jnp.int32)
-    all_val = jnp.concatenate([cc_val, fill_val])
-    cap = coarse_capacity or int(all_row.shape[0])
-    coarse_adj = coalesce(all_row, all_col, all_val, max(n_c, 1), max(n_c, 1), cap)
+    out = schur_arrays(adj, level.deg, elim_j, n, f_cap=max(n_f, 1),
+                       max_degree=max_degree, out_capacity=coarse_capacity,
+                       with_coarse_deg=False)
+    p_f = COO(out["p_row"].astype(jnp.int32), out["p_col"].astype(jnp.int32),
+              out["p_val"], max(n_f, 1), max(n_c, 1))
+    coarse_adj = COO(out["co_row"], out["co_col"], out["co_val"],
+                     max(n_c, 1), max(n_c, 1))
     coarse = graph_from_adjacency(coarse_adj)
 
     return EliminationLevel(
         fine=level, coarse=coarse, elim_mask=elim_j,
-        c_index=c_index, f_index=f_index, f_vertices=f_vertices,
-        p_f=p_f, inv_deg_f=inv_deg_f)
+        c_index=out["c_index"], f_index=out["f_index"],
+        f_vertices=out["f_vertices"], p_f=p_f, inv_deg_f=out["inv_deg_f"])
 
 
 def eliminate_low_degree(level: GraphLevel, max_degree: int = MAX_ELIM_DEGREE,

@@ -18,10 +18,13 @@ Two execution modes (``SetupConfig.setup_mode``):
   time vs the eager path is ~2x lower cold and ~8-17x lower warm
   (grid_2d 28x28: eager 15.2s cold / 2.2s warm -> superstep 7.7s / 0.13s;
   barabasi_albert n=1400: 18.6s / 2.1s -> 8.1s / 0.3s), with host
-  contact down to ~8 batched fetches per build (<= 2 per constructed
-  level plus the entry edge-list ingest and the coarse-solve alpha); the
-  eager loop's per-level full-array transfers (elimination mask,
-  aggregate renumbering) are gone.
+  contact down to ~6 batched fetches per build (ONE per constructed
+  level — the conservative elim sizing fuses selection and Schur build —
+  plus the entry ingest probe and the coarse-solve alpha); the eager
+  loop's per-level full-array transfers (elimination mask, aggregate
+  renumbering) are gone. On the dist backend the same loop runs with its
+  Alg 1/Alg 2 reductions sharded over the 2D edge partition
+  (``repro.dist.setup``).
 * ``"eager"`` — the original host-driven loop, kept as the reference
   implementation; the super-step path must produce an equivalent hierarchy
   (same level sizes and kinds, same PCG iteration counts —
@@ -81,6 +84,25 @@ class SetupConfig:
     # than the floor share the floor-sized compiled programs instead of
     # compiling per-size variants. 0 = exact power-of-two buckets.
     setup_bucket_floor: int = 0
+    # Schur sizing policy of the super-step elimination pass:
+    # "conservative" (default) sizes the F-slot arrays at the vertex
+    # bucket — count-independent, so Alg 1 selection and the Schur build
+    # fuse into ONE program with ONE batched decision fetch per elim
+    # level; "exact" keeps the two-fetch split (F-slots at
+    # bucket(n_elim)). Both produce bit-identical hierarchies.
+    elim_sizing: str = "conservative"
+    # Attach a fixed-width ELL twin to each level BEFORE the strength
+    # sweeps, so setup's dominant SpMV (the K damped-Jacobi relaxations)
+    # runs the fused kernel path during setup. Opt-in: ELL execution
+    # changes the float summation order, so setup numerics then depend on
+    # matvec_backend (eager and super-step remain equivalent to each
+    # other). No effect with matvec_backend="coo".
+    setup_ell_sweeps: bool = False
+    # Static width of the setup-time hybrid layout: the fused Alg 2 vote
+    # reduction's ELL tables (always) and the setup_ell_sweeps twin
+    # (when enabled). Rows beyond the width spill to the staged/COO path,
+    # so any width is exact for the integer vote reduction.
+    setup_ell_width: int = 8
 
 
 @jax.tree_util.register_dataclass
@@ -168,6 +190,23 @@ def build_hierarchy(adj: COO, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
     return build_hierarchy_eager(adj, cfg)
 
 
+def _attach_setup_twin(level: GraphLevel, cfg: SetupConfig) -> GraphLevel:
+    """Fixed-width ELL twin for the setup-time strength sweeps
+    (``setup_ell_sweeps``): the eager-path mirror of the super-step's
+    in-jit hybrid layout, same static width, so the two setup modes stay
+    equivalent with the knob on."""
+    from repro.sparse.ell import ELL, ell_layout_traced
+    from repro.sparse.matvec import resolve_ell_mode
+
+    lay = ell_layout_traced(level.adj.row, level.adj.col, level.n,
+                            cfg.setup_ell_width)
+    ell = ELL(lay.col_table, lay.table(level.adj.val), level.n)
+    rem = COO(lay.spill_row, lay.spill_col, lay.spill(level.adj.val),
+              level.n, level.n)
+    return dataclasses.replace(level, ell=ell, ell_rem=rem,
+                               ell_mode=resolve_ell_mode(cfg.matvec_backend))
+
+
 def build_hierarchy_eager(adj: COO, cfg: SetupConfig = SetupConfig()
                           ) -> Hierarchy:
     """The host-driven reference setup loop (``setup_mode="eager"``)."""
@@ -175,6 +214,7 @@ def build_hierarchy_eager(adj: COO, cfg: SetupConfig = SetupConfig()
     transfers: List[Transfer] = []
     lam_maxes: List[float] = []
     strength_fn = STRENGTH_METRICS[cfg.strength_metric]
+    ell_sweeps = cfg.setup_ell_sweeps and cfg.matvec_backend != "coo"
 
     while level.n > cfg.coarsest_size and len(transfers) < cfg.max_levels:
         progressed = False
@@ -199,7 +239,8 @@ def build_hierarchy_eager(adj: COO, cfg: SetupConfig = SetupConfig()
             break
 
         # --- aggregation level -----------------------------------------
-        strength = strength_fn(level, n_vectors=cfg.strength_vectors,
+        s_level = _attach_setup_twin(level, cfg) if ell_sweeps else level
+        strength = strength_fn(s_level, n_vectors=cfg.strength_vectors,
                                n_sweeps=cfg.strength_sweeps, seed=cfg.seed)
         aggs, _state = aggregate(level, strength, cfg.aggregation)
         coarse_id, n_c = renumber_aggregates(aggs, level.n)
@@ -209,7 +250,7 @@ def build_hierarchy_eager(adj: COO, cfg: SetupConfig = SetupConfig()
             continue
         t = contract(level, coarse_id, n_c)
         t = dataclasses.replace(t, coarse=_shrink(t.coarse))
-        lam_maxes.append(estimate_lambda_max(t.fine))
+        lam_maxes.append(estimate_lambda_max(s_level))
         transfers.append(t)
         level = t.coarse
 

@@ -11,12 +11,19 @@ This module restructures the per-level work into a handful of jitted
 **super-steps** whose compiled programs are keyed only on power-of-two
 *capacity buckets*, never on exact level sizes:
 
-* ``elim_select`` — Alg 1 candidate selection + eliminated count,
-* ``elim_build``  — Schur-complement level construction (P_F, fill
-  cliques, coalesced coarse adjacency + degrees),
-* ``agg``         — strength sweeps, Alg 2 voting rounds, device-side
-  ``cumsum`` renumbering, edge-contraction coalesce, and the λmax power
-  iteration, fused into one program,
+* ``elim``        — Alg 1 candidate selection fused with the
+  Schur-complement level construction (the default
+  ``elim_sizing="conservative"`` path: F-slot arrays sized at the vertex
+  bucket instead of the fetched count, so selection and construction run
+  as ONE program with ONE batched decision fetch),
+* ``elim_select`` / ``elim_build`` — the two-fetch split of the same work
+  (``elim_sizing="exact"``: F-slots sized at ``bucket(n_elim)``, which
+  needs the count on host before construction),
+* ``agg``         — strength sweeps, Alg 2 voting rounds through the
+  fused ELL vote reduction (``repro.kernels.agg_vote``; overlong rows
+  spill to the staged segment reduction and lex-merge exactly),
+  device-side ``cumsum`` renumbering, edge-contraction coalesce, and the
+  λmax power iteration, fused into one program,
 * ``rebucket``    — shrink the carry to the next level's buckets,
 * ``ingest``      — degree computation for the padded finest level.
 
@@ -31,30 +38,43 @@ compiled-function registry below records hits/misses, and a second
 same-bucket graph triggers **zero** new super-step compiles
 (``tests/test_setup_superstep.py`` pins this).
 
-Host contact is reduced to the level-advance decisions: one batched
-scalar ``device_get`` after ``elim_select`` (the eliminated count), one
-after ``elim_build`` / ``agg`` (coarse nnz, coarse size, ratio check) —
-everything else, including renumbering and contraction, stays on device.
-The produced hierarchy is equivalent to the eager path's (same level
-sizes and kinds, same PCG iteration counts); exact-shape wrapping into
+Host contact is reduced to the level-advance decisions: ONE batched
+scalar ``device_get`` per constructed level (eliminated count + coarse
+nnz after the fused ``elim`` step; coarse size + nnz + renumbering
+invariant after ``agg``), plus the entry ingest probe — everything else,
+including renumbering and contraction, stays on device. Inputs already in
+padding-last layout (any coalesce output qualifies) take a jitted
+device-side compaction instead of the old host-NumPy pass. The produced
+hierarchy is equivalent to the eager path's (same level sizes and kinds,
+same PCG iteration counts); exact-shape wrapping into
 ``GraphLevel``/``Transfer`` objects happens once at the end with plain
 slices.
+
+The per-level programs are created through a :class:`SuperstepBuilders`
+factory; ``repro.dist.setup`` subclasses it to run the semiring
+reductions of Alg 1 and Alg 2 as ``shard_map`` programs over the 2D edge
+partition — the loop, the bucketing policy and the sync contract are
+shared verbatim between the serial and distributed setups.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import aggregate, renumber_device
+from repro.core.aggregation import (aggregate, quantise_strength,
+                                    renumber_device, vote_edge_reduce)
 from repro.core.coarsen import AggregationLevel, contract_arrays
-from repro.core.elimination import (EliminationLevel, _neighbour_table,
+from repro.core.elimination import (EliminationLevel, schur_arrays,
                                     select_eliminated)
 from repro.core.graph import GraphLevel, graph_from_adjacency, pow2_bucket
 from repro.core.smoothers import estimate_lambda_max
 from repro.core.strength import STRENGTH_METRICS
 from repro.sparse.coo import COO, coalesce_arrays
+from repro.sparse.ell import ELL, ell_layout_traced
 
 
 # ----------------------------------------------------------------------------
@@ -118,6 +138,15 @@ def bucket(n: int, floor: int = 0) -> int:
     return pow2_bucket(n, floor)
 
 
+def resolve_vote_mode() -> str:
+    """Execution mode for the fused vote reduction: the Pallas kernel on
+    TPU, the vectorised jnp reference elsewhere (interpret-mode Pallas is
+    a correctness tool, not an execution engine — the same policy as the
+    solve-phase SpMV kernels). Either mode bit-matches the staged segment
+    reduction: the vote ⊕ is pure integer."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
 # ----------------------------------------------------------------------------
 # Super-step builders. Each returns a jitted function whose shapes are fully
 # determined by the bucket key; logical sizes ride as traced scalars.
@@ -139,109 +168,141 @@ def _build_ingest(n_cap: int, e_cap: int):
     return jax.jit(step)
 
 
-def _build_elim_select(n_cap: int, e_cap: int, max_degree: int):
+def _build_ingest_fast(raw_cap: int, n_cap: int, e_cap: int):
+    """Device-side compaction for inputs already in padding-last layout
+    (any coalesce output qualifies): renormalise sentinels to the carry
+    convention and resize ``raw_cap -> e_cap`` with a slice/pad — no
+    host-NumPy pass, no full-array transfer."""
+    def step(row, col, val, n0):
+        valid = row < n0
+        r = jnp.where(valid, row, n_cap).astype(jnp.int32)
+        c = jnp.where(valid, col, n_cap).astype(jnp.int32)
+        v = jnp.where(valid, val, 0)
+        if e_cap <= raw_cap:
+            # sound only for padding-last inputs (the probe checked).
+            r, c, v = r[:e_cap], c[:e_cap], v[:e_cap]
+        else:
+            pad = e_cap - raw_cap
+            r = jnp.concatenate([r, jnp.full((pad,), n_cap, jnp.int32)])
+            c = jnp.concatenate([c, jnp.full((pad,), n_cap, jnp.int32)])
+            v = jnp.concatenate([v, jnp.zeros((pad,), v.dtype)])
+        deg = jax.ops.segment_sum(v, r, num_segments=n_cap)
+        return r, c, v, deg
+
+    return jax.jit(step)
+
+
+@jax.jit
+def _ingest_probe(row, n0):
+    """(nnz, padding-last?) of a raw edge list — the one-scalar-pair probe
+    that decides between the device compaction fast path and the host
+    fallback. Plain jit (keyed on the raw capacity), not a registry step."""
+    valid = row < n0
+    nnz = jnp.sum(valid.astype(jnp.int32))
+    plast = jnp.all(valid == (jnp.arange(row.shape[0]) < nnz))
+    return nnz, plast
+
+
+def _build_elim_select(n_cap: int, e_cap: int, max_degree: int,
+                       select_fn=None):
     def step(row, col, val, deg, n):
-        level = _plevel(row, col, val, deg)
-        elim = select_eliminated(level, max_degree, n_valid=n)
+        if select_fn is None:
+            level = _plevel(row, col, val, deg)
+            elim = select_eliminated(level, max_degree, n_valid=n)
+        else:
+            elim = select_fn(row, col, val, deg, n)
         return elim, jnp.sum(elim.astype(jnp.int32))
 
     return jax.jit(step)
 
 
 def _build_elim_build(n_cap: int, e_cap: int, f_cap: int, max_degree: int):
-    # The bucketed twin of elimination.build_elimination_level (traced
-    # n/n_f/n_c, sentinel n_cap/f_cap instead of n/n_f). The two MUST stay
-    # formula-identical — the hierarchy-equivalence test pins them on two
-    # graph families; apply any Schur-algebra change to both.
-    # Schur fill cliques come from an [n, max_degree] neighbour table —
-    # the width must cover the selection rule's degree bound.
+    # Schur fill cliques come from an [n_cap, max_degree] neighbour table —
+    # the width must cover the selection rule's degree bound. The algebra
+    # itself is elimination.schur_arrays, shared with the eager path.
     w = max_degree
 
     def step(row, col, val, deg, n, elim):
         level = _plevel(row, col, val, deg)
-        adj = level.adj
-        n_f = jnp.sum(elim.astype(jnp.int32))
-        n_c = n - n_f
-        iota = jnp.arange(n_cap, dtype=jnp.int32)
-
-        keep = ~elim
-        c_index = (jnp.cumsum(keep.astype(jnp.int32)) - 1).astype(jnp.int32)
-        f_index = (jnp.cumsum(elim.astype(jnp.int32)) - 1).astype(jnp.int32)
-        # F-slot -> fine id (the scatter is the fixed-shape nonzero()).
-        f_slot = jnp.where(elim, f_index, f_cap)
-        f_vertices = jnp.full((f_cap,), n_cap, jnp.int32).at[f_slot].set(
-            iota, mode="drop")
-
-        row_f = jnp.take(elim, adj.row, mode="fill",
-                         fill_value=False) & adj.valid
-        inv_deg_f = 1.0 / jnp.take(level.deg, f_vertices, mode="fill",
-                                   fill_value=1.0)
-        p_row = jnp.where(row_f, jnp.take(f_index,
-                                          jnp.minimum(adj.row, n_cap - 1),
-                                          mode="fill", fill_value=0), f_cap)
-        p_col = jnp.where(row_f, jnp.take(c_index,
-                                          jnp.minimum(adj.col, n_cap - 1),
-                                          mode="fill", fill_value=0), f_cap)
-        p_scale = jnp.take(inv_deg_f, jnp.minimum(p_row, f_cap - 1),
-                           mode="fill", fill_value=0)
-        p_val = jnp.where(row_f, adj.val * p_scale, 0)
-
-        # --- coarse adjacency: A_CC + Schur fill cliques ----------------
-        cc = (~jnp.take(elim, adj.row, mode="fill", fill_value=True)) & \
-             (~jnp.take(elim, adj.col, mode="fill", fill_value=True)) & \
-             adj.valid
-        cc_row = jnp.where(cc, jnp.take(c_index,
-                                        jnp.minimum(adj.row, n_cap - 1),
-                                        mode="fill", fill_value=0), n_cap)
-        cc_col = jnp.where(cc, jnp.take(c_index,
-                                        jnp.minimum(adj.col, n_cap - 1),
-                                        mode="fill", fill_value=0), n_cap)
-        cc_val = jnp.where(cc, adj.val, 0)
-
-        nb_col, nb_val = _neighbour_table(adj, w)
-        f_nb_col = jnp.take(nb_col, f_vertices, axis=0, mode="fill",
-                            fill_value=n_cap)
-        f_nb_val = jnp.take(nb_val, f_vertices, axis=0, mode="fill",
-                            fill_value=0)
-        pair_val = f_nb_val[:, :, None] * f_nb_val[:, None, :] * \
-            inv_deg_f[:, None, None]
-        u = jnp.broadcast_to(f_nb_col[:, :, None], pair_val.shape)
-        v = jnp.broadcast_to(f_nb_col[:, None, :], pair_val.shape)
-        off_diag = (u != v) & (u < n) & (v < n)
-        fill_row = jnp.where(off_diag,
-                             jnp.take(c_index, jnp.minimum(u, n_cap - 1),
-                                      mode="fill", fill_value=0),
-                             n_cap).reshape(-1)
-        fill_col = jnp.where(off_diag,
-                             jnp.take(c_index, jnp.minimum(v, n_cap - 1),
-                                      mode="fill", fill_value=0),
-                             n_cap).reshape(-1)
-        fill_val = jnp.where(off_diag, pair_val, 0).reshape(-1)
-
-        all_row = jnp.concatenate([cc_row, fill_row]).astype(jnp.int32)
-        all_col = jnp.concatenate([cc_col, fill_col]).astype(jnp.int32)
-        all_val = jnp.concatenate([cc_val, fill_val])
-        co_row, co_col, co_val, co_nnz = coalesce_arrays(
-            all_row, all_col, all_val, n_c, e_cap + f_cap * w * w,
-            sentinel=n_cap)
-        co_deg = jax.ops.segment_sum(co_val, co_row, num_segments=n_cap)
-        return dict(c_index=c_index, f_index=f_index, f_vertices=f_vertices,
-                    inv_deg_f=inv_deg_f, p_row=p_row, p_col=p_col,
-                    p_val=p_val, co_row=co_row, co_col=co_col,
-                    co_val=co_val, co_deg=co_deg, co_nnz=co_nnz)
+        return schur_arrays(level.adj, level.deg, elim, n, f_cap=f_cap,
+                            max_degree=max_degree,
+                            out_capacity=e_cap + f_cap * w * w,
+                            sentinel=n_cap)
 
     return jax.jit(step)
 
 
-def _build_agg(n_cap: int, e_cap: int, cfg):
+def _build_elim_fused(n_cap: int, e_cap: int, max_degree: int,
+                      select_fn=None):
+    """Selection + Schur construction as ONE program (the default
+    ``elim_sizing="conservative"`` path): F-slot arrays are sized at the
+    vertex bucket ``n_cap`` — a conservative capacity that never depends
+    on the eliminated count, so no host fetch separates the two phases
+    and the whole elimination level costs one batched decision fetch
+    (count + coarse nnz, after the fact). The count-independent sizing
+    also erases ``f_cap`` from the compile key: every elim level of a
+    bucket shares one program."""
+    w = max_degree
+
+    def step(row, col, val, deg, n):
+        if select_fn is None:
+            level = _plevel(row, col, val, deg)
+            elim = select_eliminated(level, max_degree, n_valid=n)
+        else:
+            elim = select_fn(row, col, val, deg, n)
+        out = schur_arrays(COO(row, col, val, n_cap, n_cap), deg, elim, n,
+                           f_cap=n_cap, max_degree=max_degree,
+                           out_capacity=e_cap + n_cap * w * w,
+                           sentinel=n_cap)
+        return elim, out
+
+    return jax.jit(step)
+
+
+def _build_agg(n_cap: int, e_cap: int, cfg, vote_factory=None):
     strength_fn = STRENGTH_METRICS[cfg.strength_metric]
+    acfg = cfg.aggregation
+    vote_w = cfg.setup_ell_width
+    ell_sweeps = cfg.setup_ell_sweeps and cfg.matvec_backend != "coo"
+    vote_mode = resolve_vote_mode()
 
     def step(row, col, val, deg, n):
         level = _plevel(row, col, val, deg)
+        # ONE traced hybrid layout serves the whole step: the fused vote
+        # reduction always, and (opt-in) the strength sweeps' SpMM.
+        lay = ell_layout_traced(row, col, n_cap, vote_w)
+        if ell_sweeps:
+            # Attach the ELL twin BEFORE the strength sweeps, so setup's
+            # dominant SpMV (the K damped-Jacobi relaxations) runs the
+            # fused fixed-width path via matvec.level_spmm — not just the
+            # post-setup solve. Execution-format change: summation order
+            # differs from the COO segment-sum, hence the opt-in knob
+            # (SetupConfig.setup_ell_sweeps).
+            from repro.sparse.matvec import resolve_ell_mode
+
+            ell = ELL(lay.col_table, lay.table(val), n_cap)
+            rem = COO(lay.spill_row, lay.spill_col, lay.spill(val),
+                      n_cap, n_cap)
+            level = dataclasses.replace(
+                level, ell=ell, ell_rem=rem,
+                ell_mode=resolve_ell_mode(cfg.matvec_backend))
         strength = strength_fn(level, n_vectors=cfg.strength_vectors,
                                n_sweeps=cfg.strength_sweeps, seed=cfg.seed,
                                n_valid=n)
-        aggs, _state = aggregate(level, strength, cfg.aggregation, n_valid=n)
+        # Quantised strengths in the hybrid layout, built once and reused
+        # across every scanned vote round (the sq tables are round
+        # invariants; only the state vector changes).
+        sq = quantise_strength(strength, acfg)
+        sq_table = lay.table(sq)
+        sq_spill = lay.spill(sq)
+        if vote_factory is None:
+            def edge_reduce(state):
+                return vote_edge_reduce(lay, sq_table, sq_spill, state,
+                                        acfg, mode=vote_mode)
+        else:
+            edge_reduce = vote_factory(lay, sq_table, sq_spill)
+        aggs, _state = aggregate(level, None, acfg, n_valid=n,
+                                 edge_reduce=edge_reduce)
         coarse_id, n_c, ok = renumber_device(aggs, n_valid=n)
         co_row, co_col, co_val, co_nnz = contract_arrays(
             level.adj, coarse_id, n_c, sentinel=n_cap)
@@ -271,6 +332,82 @@ def _build_rebucket(n_from: int, e_from: int, n_to: int, e_to: int):
 
 
 # ----------------------------------------------------------------------------
+# Builder factory: the extension seam between the serial and distributed
+# setups. The distributed subclass (repro.dist.setup.DistSuperstepBuilders)
+# tags every registry key with its mesh and swaps the two semiring-SpMV
+# hooks for shard_map programs over the 2D edge partition; everything else
+# — the loop, bucketing, sync contract, wrap — is shared.
+# ----------------------------------------------------------------------------
+
+class SuperstepBuilders:
+    """Per-bucket jitted super-step programs, registry-cached."""
+
+    tag: tuple = ()          # extra registry-key components (dist: the mesh)
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- hooks the distributed subclass overrides ----------------------
+    def select_fn(self, n_cap: int, e_cap: int):
+        """Optional override of the Alg 1 selection reduction:
+        ``(row, col, val, deg, n) -> elim`` or None for the serial
+        ``select_eliminated``."""
+        return None
+
+    def vote_factory(self, n_cap: int, e_cap: int):
+        """Optional override of the Alg 2 per-round edge ⊕:
+        ``(layout, sq_table, sq_spill) -> (state -> (key, id))`` or None
+        for the serial fused vote reduction."""
+        return None
+
+    # -- steps ----------------------------------------------------------
+    def _agg_key(self, n_cap: int, e_cap: int):
+        cfg = self.cfg
+        ell_sweeps = cfg.setup_ell_sweeps and cfg.matvec_backend != "coo"
+        return self.tag + (n_cap, e_cap, cfg.strength_metric,
+                           cfg.strength_vectors, cfg.strength_sweeps,
+                           cfg.seed, cfg.aggregation, cfg.setup_ell_width,
+                           ell_sweeps and cfg.matvec_backend)
+
+    def ingest(self, n_cap: int, e_cap: int):
+        return _step("ingest", self.tag + (n_cap, e_cap),
+                     lambda: _build_ingest(n_cap, e_cap))
+
+    def ingest_fast(self, raw_cap: int, n_cap: int, e_cap: int):
+        return _step("ingest_fast", self.tag + (raw_cap, n_cap, e_cap),
+                     lambda: _build_ingest_fast(raw_cap, n_cap, e_cap))
+
+    def elim_select(self, n_cap: int, e_cap: int):
+        md = self.cfg.elim_max_degree
+        return _step("elim_select", self.tag + (n_cap, e_cap, md),
+                     lambda: _build_elim_select(
+                         n_cap, e_cap, md,
+                         select_fn=self.select_fn(n_cap, e_cap)))
+
+    def elim_build(self, n_cap: int, e_cap: int, f_cap: int):
+        md = self.cfg.elim_max_degree
+        return _step("elim_build", self.tag + (n_cap, e_cap, f_cap, md),
+                     lambda: _build_elim_build(n_cap, e_cap, f_cap, md))
+
+    def elim_fused(self, n_cap: int, e_cap: int):
+        md = self.cfg.elim_max_degree
+        return _step("elim", self.tag + (n_cap, e_cap, md),
+                     lambda: _build_elim_fused(
+                         n_cap, e_cap, md,
+                         select_fn=self.select_fn(n_cap, e_cap)))
+
+    def agg(self, n_cap: int, e_cap: int):
+        return _step("agg", self._agg_key(n_cap, e_cap),
+                     lambda: _build_agg(
+                         n_cap, e_cap, self.cfg,
+                         vote_factory=self.vote_factory(n_cap, e_cap)))
+
+    def rebucket(self, n_from: int, e_from: int, n_to: int, e_to: int):
+        return _step("rebucket", self.tag + (n_from, e_from, n_to, e_to),
+                     lambda: _build_rebucket(n_from, e_from, n_to, e_to))
+
+
+# ----------------------------------------------------------------------------
 # Exact-shape wrapping (end of setup): plain slices, no super-step compiles.
 # ----------------------------------------------------------------------------
 
@@ -284,7 +421,7 @@ def _exact_coarse(spec: dict) -> GraphLevel:
     # solve-phase jit programs share bucket-shaped keys. Slice when the
     # carry is larger, pad with sentinels when bucket(nnz) exceeds the
     # carry (possible for elim levels, whose coalesce output length
-    # e_cap + 16*f_cap is not itself a power of two).
+    # e_cap + w²·f_cap is not itself a power of two).
     cap = bucket(max(nnz_c, 1))
     avail = int(out["co_row"].shape[0])
     take = min(cap, avail)          # coalesce output is padding-last
@@ -325,7 +462,8 @@ def _wrap_agg(fine: GraphLevel, spec: dict) -> AggregationLevel:
 # The setup loop.
 # ----------------------------------------------------------------------------
 
-def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None):
+def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
+                              steps: SuperstepBuilders | None = None):
     """Compile-once device-resident setup. Same contract (and an
     equivalent hierarchy: level sizes, kinds, PCG iteration counts) as
     ``core.hierarchy.build_hierarchy_eager``.
@@ -333,6 +471,12 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None):
     ``profile``: optional list; when given, each constructed level appends
     ``(kind, n_fine, seconds)`` — the bench's per-level wall time. Timing
     forces a block per level, so leave it ``None`` outside benchmarks.
+
+    ``steps``: the super-step program factory; defaults to the serial
+    :class:`SuperstepBuilders`. ``repro.dist.setup`` passes its
+    mesh-tagged subclass, which runs the Alg 1/Alg 2 semiring reductions
+    sharded over the 2D edge partition — the loop below (including the
+    per-level sync contract) is shared between the two.
     """
     from repro.core.hierarchy import Hierarchy, attach_ell_transfers
 
@@ -342,26 +486,37 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None):
         # hidden re-padding in the strength/λmax RNG shapes.
         raise ValueError(f"setup_bucket_floor must be 0 or a power of two, "
                          f"got {floor!r}")
+    if cfg.elim_sizing not in ("conservative", "exact"):
+        raise ValueError(f"elim_sizing must be 'conservative' or 'exact', "
+                         f"got {cfg.elim_sizing!r}")
+    if steps is None:
+        steps = SuperstepBuilders(cfg)
     n0 = adj.n_rows
-    # Entry ingest: the one full-array host round-trip of the build. The
-    # input edge list arrives at an arbitrary (non-bucket) capacity, so
-    # compacting/padding it on host keeps the compiled-step registry free
-    # of per-raw-capacity entries; it is counted in the sync ledger.
-    row_h, col_h, val_h = (np.asarray(a) for a in
-                           _fetch(adj.row, adj.col, adj.val))
-    mask = row_h < n0
-    nnz0 = int(mask.sum())
-    n_cap, e_cap = bucket(n0, floor), bucket(nnz0, floor)
-    row_p = np.full(e_cap, n_cap, np.int32)
-    col_p = np.full(e_cap, n_cap, np.int32)
-    val_p = np.zeros(e_cap, val_h.dtype)
-    row_p[:nnz0] = row_h[mask]
-    col_p[:nnz0] = col_h[mask]
-    val_p[:nnz0] = val_h[mask]
-    row_d, col_d = jnp.asarray(row_p), jnp.asarray(col_p)
-    val_d = jnp.asarray(val_p)
-    deg_d = _step("ingest", (n_cap, e_cap),
-                  lambda: _build_ingest(n_cap, e_cap))(row_d, col_d, val_d)
+    # Entry ingest. The probe (one batched scalar fetch) detects inputs
+    # already in padding-last layout — any coalesce output qualifies —
+    # and routes them through a jitted device-side compaction; only
+    # arbitrary-order inputs fall back to the host-NumPy pass (one
+    # full-array round-trip, counted in the sync ledger).
+    nnz0, plast = _fetch(*_ingest_probe(adj.row, n0))
+    nnz0 = int(nnz0)
+    n_cap, e_cap = bucket(n0, floor), bucket(max(nnz0, 1), floor)
+    if bool(plast):
+        fast = steps.ingest_fast(int(adj.capacity), n_cap, e_cap)
+        row_d, col_d, val_d, deg_d = fast(adj.row, adj.col, adj.val,
+                                          jnp.asarray(n0, jnp.int32))
+    else:
+        row_h, col_h, val_h = (np.asarray(a) for a in
+                               _fetch(adj.row, adj.col, adj.val))
+        mask = row_h < n0
+        row_p = np.full(e_cap, n_cap, np.int32)
+        col_p = np.full(e_cap, n_cap, np.int32)
+        val_p = np.zeros(e_cap, val_h.dtype)
+        row_p[:nnz0] = row_h[mask]
+        col_p[:nnz0] = col_h[mask]
+        val_p[:nnz0] = val_h[mask]
+        row_d, col_d = jnp.asarray(row_p), jnp.asarray(col_p)
+        val_d = jnp.asarray(val_p)
+        deg_d = steps.ingest(n_cap, e_cap)(row_d, col_d, val_d)
 
     cur_n = n0
     n_d = jnp.asarray(cur_n, jnp.int32)
@@ -372,8 +527,7 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None):
         n_to, e_to = bucket(n_c, floor), bucket(max(nnz_c, 1), floor)
         e_from = int(out_row.shape[0])
         if (n_to, e_to) != (n_cap, e_from):
-            rb = _step("rebucket", (n_cap, e_from, n_to, e_to),
-                       lambda: _build_rebucket(n_cap, e_from, n_to, e_to))
+            rb = steps.rebucket(n_cap, e_from, n_to, e_to)
             out_row, out_col, out_val, out_deg = rb(out_row, out_col,
                                                     out_val, out_deg)
         row_d, col_d, val_d, deg_d = out_row, out_col, out_val, out_deg
@@ -396,23 +550,30 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None):
             if cur_n <= cfg.coarsest_size:
                 break
             t0 = tick()
-            sel = _step("elim_select", (n_cap, e_cap, cfg.elim_max_degree),
-                        lambda: _build_elim_select(n_cap, e_cap,
-                                                   cfg.elim_max_degree))
-            elim, n_elim_d = sel(row_d, col_d, val_d, deg_d, n_d)
-            (n_elim,) = _fetch(n_elim_d)          # decision fetch
-            n_elim = int(n_elim)
-            if n_elim < max(cfg.elim_min_fraction * cur_n, 1) \
-                    or n_elim == cur_n:
-                break
-            f_cap = bucket(n_elim, floor)
-            bld = _step("elim_build",
-                        (n_cap, e_cap, f_cap, cfg.elim_max_degree),
-                        lambda: _build_elim_build(n_cap, e_cap, f_cap,
-                                                  cfg.elim_max_degree))
-            out = bld(row_d, col_d, val_d, deg_d, n_d, elim)
-            (nnz_c,) = _fetch(out["co_nnz"])      # sizing fetch
-            nnz_c = int(nnz_c)
+            if cfg.elim_sizing == "conservative":
+                # Fused select+build; ONE batched decision fetch per elim
+                # level. A rejected pass wastes one speculative build —
+                # rejections are terminal in practice (the loop breaks).
+                stp = steps.elim_fused(n_cap, e_cap)
+                elim, out = stp(row_d, col_d, val_d, deg_d, n_d)
+                n_elim, nnz_c = _fetch(out["n_f"], out["co_nnz"])
+                n_elim, nnz_c = int(n_elim), int(nnz_c)
+                if n_elim < max(cfg.elim_min_fraction * cur_n, 1) \
+                        or n_elim == cur_n:
+                    break
+            else:
+                sel = steps.elim_select(n_cap, e_cap)
+                elim, n_elim_d = sel(row_d, col_d, val_d, deg_d, n_d)
+                (n_elim,) = _fetch(n_elim_d)          # decision fetch
+                n_elim = int(n_elim)
+                if n_elim < max(cfg.elim_min_fraction * cur_n, 1) \
+                        or n_elim == cur_n:
+                    break
+                f_cap = bucket(n_elim, floor)
+                bld = steps.elim_build(n_cap, e_cap, f_cap)
+                out = bld(row_d, col_d, val_d, deg_d, n_d, elim)
+                (nnz_c,) = _fetch(out["co_nnz"])      # sizing fetch
+                nnz_c = int(nnz_c)
             specs.append(("elim", dict(n=cur_n, n_f=n_elim,
                                        n_c=cur_n - n_elim, nnz_c=nnz_c,
                                        elim=elim, out=out)))
@@ -428,9 +589,7 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None):
 
         # --- aggregation level -----------------------------------------
         t0 = tick()
-        agg_key = (n_cap, e_cap, cfg.strength_metric, cfg.strength_vectors,
-                   cfg.strength_sweeps, cfg.seed, cfg.aggregation)
-        stp = _step("agg", agg_key, lambda: _build_agg(n_cap, e_cap, cfg))
+        stp = steps.agg(n_cap, e_cap)
         out = stp(row_d, col_d, val_d, deg_d, n_d)
         # decision fetch: coarse size (ratio check), coarse nnz (the old
         # _shrink sync) and the renumbering invariant, in ONE device_get.

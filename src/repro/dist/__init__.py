@@ -2,9 +2,13 @@
 
 * ``repro.dist.partition``  — host-side 2D block partition of an edge list
   (paper §2.1–§2.2), including the random-ordering load balancing.
-* ``repro.dist.setup_demo`` — the setup-phase semiring SpMVs (Alg 1
+* ``repro.dist.setup``      — the setup-phase semiring SpMVs (Alg 1
   selection, Alg 2 voting) as ``shard_map`` segment reductions that
-  bit-match the single-device reference implementations.
+  bit-match the single-device reference implementations, plus the
+  device-resident distributed super-step setup
+  (``build_hierarchy_superstep_dist``) that plugs them into the
+  compile-once bucketed loop of ``repro.core.setup_step``.
 * ``repro.dist.solver``     — ``DistLaplacianSolver``: PCG + V-cycle with
-  the SpMV of the top hierarchy levels 2D-sharded across the mesh.
+  the SpMV of the top hierarchy levels 2D-sharded across the mesh; its
+  setup runs the distributed super-steps by default.
 """

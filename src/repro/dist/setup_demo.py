@@ -1,221 +1,19 @@
-"""Distributed SETUP phase: the paper's Alg 1 / Alg 2 over the 2D partition.
+"""Back-compat shim: the distributed setup grew out of its demo.
 
-Both setup algorithms are semiring SpMVs, so their distributed form is the
-same shape as the distributed solve SpMV:
-
-* each device segment-reduces its block-local edges (the ⊗ products) by
-  *global* row id,
-* the cross-block ⊕ is a ``pmin``/``pmax`` over the mesh axes — the
-  paper's column-communicator reduce followed by row broadcast, collapsed
-  into one all-reduce (exact for idempotent ⊕),
-* the elementwise state updates are replicated, like the paper's
-  vector-duplicated MPI ranks after the allreduce.
-
-The lexicographic ⊕ operators are staged exactly like
-``repro.sparse.segment.segment_argmin_lex`` / ``segment_argmax_lex``
-(reduce primary key, mask non-attaining entries, reduce the id tie-break),
-so ``distributed_select_eliminated`` and ``distributed_vote_round``
-bit-match ``core.elimination.select_eliminated`` and
-``core.aggregation.aggregation_round`` — the integer reductions are
-order-independent, hence identical across any mesh shape, including the
-1×1 degenerate mesh.
+The Alg 1 / Alg 2 partition-level primitives that used to live here were
+promoted into ``repro.dist.setup`` when the full distributed super-step
+setup (``build_hierarchy_superstep_dist``) landed; import from there.
+This module re-exports the old surface verbatim.
 """
 
-from __future__ import annotations
+from repro.dist.setup import (distributed_aggregate,
+                              distributed_select_eliminated,
+                              distributed_unweighted_degrees,
+                              distributed_vote_round)
 
-import jax
-import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
-
-from repro.core.aggregation import (DECIDED, SEED, UNDECIDED,
-                                    AggregationConfig, apply_vote_update)
-from repro.core.graph import hash32
-from repro.dist.partition import (Partition2D, check_mesh_matches, edge_spec,
-                                  mesh_geometry)
-
-_I32_MAX = jnp.iinfo(jnp.int32).max
-_I32_MIN = jnp.iinfo(jnp.int32).min
-
-
-def _globalize(part: Partition2D, row_axis, col_axis, row_l, col_l):
-    """Device-local block arrays -> (valid, global row ids, global col ids).
-
-    Padding slots map to the out-of-range id ``n_pad``: segment reductions
-    with ``num_segments = n_pad`` drop them and ``take(mode="fill")``
-    reads the ⊕/⊗ identity — the COO padding convention, blockwise.
-    """
-    i = jax.lax.axis_index(row_axis)
-    j = jax.lax.axis_index(col_axis)
-    row_l = row_l.reshape(-1)
-    col_l = col_l.reshape(-1)
-    valid = row_l < part.nb
-    row_g = jnp.where(valid, i * part.nb + row_l, part.n_pad)
-    col_g = jnp.where(valid, j * part.nb_col + col_l, part.n_pad)
-    return valid, row_g, col_g
-
-
-def distributed_unweighted_degrees(mesh, part: Partition2D) -> jax.Array:
-    """[n_pad] unweighted degrees, replicated (psum over every mesh axis)."""
-    check_mesh_matches(part, mesh)
-    _, row_axis, col_axis, *_ = mesh_geometry(mesh)
-    axes = tuple(mesh.axis_names)
-    espec = edge_spec(mesh)
-
-    def local(row_l, col_l):
-        valid, row_g, _ = _globalize(part, row_axis, col_axis, row_l, col_l)
-        d = jax.ops.segment_sum(valid.astype(jnp.int32), row_g,
-                                num_segments=part.n_pad)
-        return jax.lax.psum(d, axes)
-
-    return shard_map(local, mesh=mesh, in_specs=(espec, espec),
-                     out_specs=P())(jnp.asarray(part.row_local),
-                                    jnp.asarray(part.col_local))
-
-
-def distributed_select_eliminated(mesh, part: Partition2D, n: int,
-                                  max_degree: int = 4) -> jax.Array:
-    """Alg 1 selection over the 2D partition. Returns bool [n_pad].
-
-    Matches ``core.elimination.select_eliminated`` on the first n entries;
-    padding vertices (degree 0) are never candidates.
-    """
-    check_mesh_matches(part, mesh)
-    _, row_axis, col_axis, *_ = mesh_geometry(mesh)
-    axes = tuple(mesh.axis_names)
-    espec = edge_spec(mesh)
-    n_pad = part.n_pad
-
-    deg = distributed_unweighted_degrees(mesh, part)
-    cand = (deg <= max_degree) & (jnp.arange(n_pad) < n)
-    h = hash32(jnp.arange(n_pad, dtype=jnp.uint32))
-    keys = (h ^ jnp.uint32(0x80000000)).astype(jnp.int32)  # uint32 order as int32
-
-    def local(row_l, col_l, cand, keys):
-        valid, row_g, col_g = _globalize(part, row_axis, col_axis, row_l, col_l)
-        # ⊗: only candidate neighbours emit; carry their hash key.
-        ok = valid & jnp.take(cand, col_g, mode="fill", fill_value=False)
-        k = jnp.where(ok, jnp.take(keys, col_g, mode="fill",
-                                   fill_value=_I32_MAX), _I32_MAX)
-        best_k = jax.lax.pmin(
-            jax.ops.segment_min(k, row_g, num_segments=n_pad), axes)
-        # Tie-break ⊕ stage: min col id among entries attaining the min key.
-        attain = ok & (k == jnp.take(best_k, row_g, mode="fill",
-                                     fill_value=_I32_MIN))
-        ids = jnp.where(attain, col_g.astype(jnp.int32), _I32_MAX)
-        best_id = jax.lax.pmin(
-            jax.ops.segment_min(ids, row_g, num_segments=n_pad), axes)
-        return best_k, best_id
-
-    best_key, best_id = shard_map(
-        local, mesh=mesh, in_specs=(espec, espec, P(), P()),
-        out_specs=(P(), P()))(jnp.asarray(part.row_local),
-                              jnp.asarray(part.col_local), cand, keys)
-
-    self_key = keys
-    lt = (self_key < best_key) | ((self_key == best_key)
-                                  & (jnp.arange(n_pad) < best_id))
-    return cand & lt
-
-
-def _pad_to(x: jax.Array, n_pad: int, fill) -> jax.Array:
-    extra = n_pad - x.shape[0]
-    if extra == 0:
-        return x
-    if jnp.ndim(fill) == 0:
-        tail = jnp.full((extra,), fill, x.dtype)
-    else:
-        tail = fill.astype(x.dtype)
-    return jnp.concatenate([x, tail])
-
-
-def distributed_vote_round(mesh, part: Partition2D, n: int,
-                           strength_q: jax.Array, state: jax.Array,
-                           votes: jax.Array, aggregates: jax.Array,
-                           cfg: AggregationConfig = AggregationConfig()):
-    """One Alg 2 voting round over the 2D partition.
-
-    ``strength_q`` is the per-edge quantised strength in the partition's
-    [pods, pr, pc, cap] layout; ``state``/``votes``/``aggregates`` are
-    length-n (or n_pad) vertex vectors. Returns the updated [n_pad]
-    triple; the first n entries bit-match
-    ``core.aggregation.aggregation_round``.
-    """
-    check_mesh_matches(part, mesh)
-    _, row_axis, col_axis, *_ = mesh_geometry(mesh)
-    axes = tuple(mesh.axis_names)
-    espec = edge_spec(mesh)
-    n_pad = part.n_pad
-
-    # Padding vertices are Decided with no votes: they never emit (⊗ drops
-    # Decided), never join, and never get voted for (no incident edges).
-    state = _pad_to(jnp.asarray(state, jnp.int32), n_pad, DECIDED)
-    votes = _pad_to(jnp.asarray(votes, jnp.int32), n_pad, 0)
-    aggregates = _pad_to(jnp.asarray(aggregates, jnp.int32), n_pad,
-                         jnp.arange(aggregates.shape[0], n_pad, dtype=jnp.int32))
-
-    def local(row_l, col_l, sq, state):
-        valid, row_g, col_g = _globalize(part, row_axis, col_axis, row_l, col_l)
-        sq = sq.reshape(-1).astype(jnp.int32)
-        nbr_state = jnp.take(state, col_g, mode="fill", fill_value=DECIDED)
-        # ⊗: Decided neighbours emit the ⊕ identity.
-        ok = valid & (nbr_state != DECIDED)
-        key = nbr_state * (cfg.strength_levels + 2) + sq  # _pack_state_strength
-        k = jnp.where(ok, key, _I32_MIN)
-        best_k = jax.lax.pmax(
-            jax.ops.segment_max(k, row_g, num_segments=n_pad), axes)
-        attain = ok & (k == jnp.take(best_k, row_g, mode="fill",
-                                     fill_value=_I32_MAX))
-        ids = jnp.where(attain, col_g.astype(jnp.int32), _I32_MAX)
-        best_id = jax.lax.pmin(
-            jax.ops.segment_min(ids, row_g, num_segments=n_pad), axes)
-        return best_k, best_id
-
-    best_key, best_id = shard_map(
-        local, mesh=mesh, in_specs=(espec, espec, espec, P()),
-        out_specs=(P(), P()))(jnp.asarray(part.row_local),
-                              jnp.asarray(part.col_local),
-                              jnp.asarray(strength_q), state)
-
-    # Replicated state update — the exact code the serial round runs. The
-    # pmax/pmin above already made the reductions global, so no further
-    # allreduce is needed on the vote tallies.
-    return apply_vote_update(state, votes, aggregates, best_key, best_id, cfg,
-                             vote_allreduce=None)
-
-
-def distributed_aggregate(mesh, part: Partition2D, n: int,
-                          strength_q: jax.Array,
-                          cfg: AggregationConfig = AggregationConfig()):
-    """All of Alg 2 as one device-resident super-step over the partition.
-
-    The distributed analogue of ``core.aggregation.aggregate`` and the
-    dist-side face of the compile-once setup restructuring
-    (``repro.core.setup_step``): the ``n_rounds`` voting rounds run inside
-    a single ``lax.scan`` whose carry (state, votes, aggregates) never
-    leaves the device, followed by the replicated singleton/seed
-    finalisation — one jittable program instead of a host-driven Python
-    loop of rounds. The first ``n`` outputs bit-match the serial
-    ``aggregate`` (same argument as for the single rounds: every reduction
-    is an order-independent integer ⊕).
-    """
-    n_pad = part.n_pad
-    iota = jnp.arange(n_pad, dtype=jnp.int32)
-    state = jnp.where(iota < n, UNDECIDED, DECIDED).astype(jnp.int32)
-    votes = jnp.zeros((n_pad,), jnp.int32)
-    aggregates = iota
-
-    def body(carry, _):
-        s, v, a = carry
-        s, v, a = distributed_vote_round(mesh, part, n, strength_q,
-                                         s, v, a, cfg)
-        return (s, v, a), None
-
-    (state, votes, aggregates), _ = jax.lax.scan(
-        body, (state, votes, aggregates), None, length=cfg.n_rounds)
-
-    # Leftover Undecided vertices become singletons; seeds anchor
-    # themselves — the same finalisation as the serial aggregate.
-    aggregates = jnp.where(state == UNDECIDED, iota, aggregates)
-    aggregates = jnp.where(state == SEED, iota, aggregates)
-    return aggregates, state
+__all__ = [
+    "distributed_aggregate",
+    "distributed_select_eliminated",
+    "distributed_unweighted_degrees",
+    "distributed_vote_round",
+]

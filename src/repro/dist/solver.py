@@ -385,8 +385,23 @@ class DistLaplacianSolver:
         # levels are about to get *per-block* ELL layouts instead, so
         # attaching serial twins there would be discarded setup work. The
         # replicated coarse tail gets its twins after the split below.
-        h = build_hierarchy(
-            adj, dataclasses.replace(setup_config, matvec_backend="coo"))
+        #
+        # setup_mode="superstep" (the default) runs the DISTRIBUTED
+        # bucketed super-step loop: Alg 1 selection and the Alg 2 vote
+        # rounds execute as shard_map programs over the 2D edge partition
+        # of the mesh, with device-side re-partitioning between levels and
+        # one batched scalar fetch per level-advance decision. The
+        # produced hierarchy is equivalent to the serial paths — same
+        # level structure and integer decisions, floats to rounding
+        # (repro.dist.setup) — so the split/partition logic below is
+        # unchanged. "eager" keeps the host-driven reference loop.
+        setup_cfg = dataclasses.replace(setup_config, matvec_backend="coo")
+        if setup_config.setup_mode == "superstep":
+            from repro.dist.setup import build_hierarchy_superstep_dist
+
+            h = build_hierarchy_superstep_dist(adj, setup_cfg, mesh)
+        else:
+            h = build_hierarchy(adj, setup_cfg)
 
         dist_transfers = []
         lam_maxes = []

@@ -1,0 +1,4 @@
+from repro.kernels.agg_vote.ops import vote_reduce
+from repro.kernels.agg_vote.ref import vote_reduce_ref
+
+__all__ = ["vote_reduce", "vote_reduce_ref"]

@@ -1,0 +1,51 @@
+"""jit'd public wrapper for the fused vote reduction.
+
+``interpret=None`` (the default) auto-selects the Pallas execution mode
+from ``jax.default_backend()``: compiled on TPU, interpret-mode everywhere
+else. ``vote_reduce`` is the kernel entry point; callers that want the
+vectorised jnp execution off-TPU (interpret-mode Pallas is a correctness
+tool, not an execution engine — same policy as the SpMV kernels) dispatch
+through ``repro.core.aggregation.vote_edge_reduce`` instead.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.agg_vote.agg_vote import vote_reduce_pallas
+from repro.kernels.agg_vote.ref import _I32_MAX, _I32_MIN
+from repro.kernels.spmv_ell.ops import resolve_interpret
+
+
+@partial(jax.jit, static_argnames=("levels", "decided", "block_rows",
+                                   "interpret"))
+def vote_reduce(col, sq, state, levels: int, decided: int = 0,
+                block_rows: int = 256, interpret: bool | None = None):
+    """(best_key [n_rows], best_id [n_rows]) int32 per-row vote ⊕.
+
+    ``col``/``sq`` are the [n_rows, width] ELL tables (column sentinel =
+    ``state.shape[0]``); ``state`` the replicated per-vertex vote state.
+    Rows are padded to the kernel block size with sentinel columns, so
+    padding rows return the empty-segment identity (int32-min, int32-max)
+    — the same convention as ``segment_argmax_lex``.
+    """
+    interpret = resolve_interpret(interpret)
+    n_rows, width = col.shape
+    if width == 0:
+        return (jnp.full((n_rows,), _I32_MIN, jnp.int32),
+                jnp.full((n_rows,), _I32_MAX, jnp.int32))
+    n_cols = state.shape[0]
+    pad = (-n_rows) % block_rows
+    if pad:
+        col = jnp.concatenate(
+            [col, jnp.full((pad, width), n_cols, col.dtype)])
+        sq = jnp.concatenate([sq, jnp.zeros((pad, width), sq.dtype)])
+    state_pad = jnp.concatenate(
+        [state, jnp.full((1,), decided, state.dtype)])
+    best_k, best_i = vote_reduce_pallas(
+        col, sq, state_pad, levels=levels, decided=decided, n_cols=n_cols,
+        block_rows=block_rows, interpret=interpret)
+    return best_k[:n_rows], best_i[:n_rows]

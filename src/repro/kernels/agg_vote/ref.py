@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused vote-reduction kernel."""
+
+import jax.numpy as jnp
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def vote_reduce_ref(col, sq, state, *, levels: int, decided: int = 0):
+    """(best_key, best_id) per ELL row: lexicographic max of
+    (state[col], sq) with min-col tie-break; Decided/padding emit the ⊕
+    identity. Integer ⊕ — bit-identical to the staged segment reduction
+    on any entry order."""
+    n_rows, width = col.shape
+    if width == 0:
+        return (jnp.full((n_rows,), _I32_MIN, jnp.int32),
+                jnp.full((n_rows,), _I32_MAX, jnp.int32))
+    s = jnp.take(state, col, mode="fill", fill_value=decided)
+    ok = (col < state.shape[0]) & (s != decided)
+    k = jnp.where(ok, s * (levels + 2) + sq, _I32_MIN).astype(jnp.int32)
+    best_k = jnp.max(k, axis=1)
+    ids = jnp.where(ok & (k == best_k[:, None]), col, _I32_MAX)
+    return best_k, jnp.min(ids, axis=1).astype(jnp.int32)

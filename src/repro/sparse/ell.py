@@ -128,3 +128,88 @@ def ell_spmv_ref(ell: ELL, x: jax.Array) -> jax.Array:
     """Pure-jnp oracle for the Pallas ELL SpMV kernel."""
     xg = jnp.take(x, ell.col, mode="fill", fill_value=0)
     return jnp.sum(ell.val * xg, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Traced (in-jit) ELL layout: the setup super-steps' twin of coo_to_ell.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllLayout:
+    """In-jit ELL layout plan of one padded edge list.
+
+    The traced-shape twin of :func:`coo_to_ell`: only static capacities
+    enter the compiled shapes, so one compiled layout serves every logical
+    size in a capacity bucket — this is what lets the setup super-steps
+    (``repro.core.setup_step``) run their strength sweeps and the fused
+    vote reduction in ELL layout without a host round-trip. ``table``
+    scatters any per-edge payload (edge weights, quantised strengths) into
+    the fixed ``[n_rows, width]`` tile; entries of rank >= width per row
+    stay in ``spill_row``/``spill_col`` COO order (sentinel ``n_rows``),
+    exactly the hybrid ELL+COO split of the solve phase.
+    """
+
+    order: jax.Array       # int32 [cap]: permutation into (row, col) order
+    rr: jax.Array          # int32 [cap]: scatter row (sentinel n_rows)
+    kk: jax.Array          # int32 [cap]: scatter slot in [0, width)
+    in_ell: jax.Array      # bool [cap], aligned with the sorted order
+    col_table: jax.Array   # int32 [n_rows, width], sentinel n_rows
+    spill_row: jax.Array   # int32 [cap], sentinel n_rows
+    spill_col: jax.Array   # int32 [cap], sentinel n_rows
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+    width: int = dataclasses.field(metadata=dict(static=True))
+
+    def table(self, values: jax.Array, fill=0) -> jax.Array:
+        """Scatter a per-edge payload (original entry order) into the
+        [n_rows, width] ELL tile."""
+        v = jnp.asarray(values)[self.order]
+        if self.width == 0:
+            return jnp.zeros((self.n_rows, 0), v.dtype)
+        return jnp.full((self.n_rows + 1, self.width), fill, v.dtype).at[
+            self.rr, self.kk].set(jnp.where(self.in_ell, v, fill),
+                                  mode="drop")[: self.n_rows]
+
+    def spill(self, values: jax.Array, fill=0) -> jax.Array:
+        """The spilled entries of a per-edge payload, aligned with
+        ``spill_row``/``spill_col``."""
+        v = jnp.asarray(values)[self.order]
+        spilled = (self.spill_row < self.n_rows)
+        return jnp.where(spilled, v, fill)
+
+
+def ell_layout_traced(row: jax.Array, col: jax.Array, n_rows: int,
+                      width: int) -> EllLayout:
+    """Plan the hybrid split of a padded edge list inside jit.
+
+    ``row``/``col`` follow the padded-COO convention (sentinel >=
+    ``n_rows``); ``n_rows`` and ``width`` are static, everything else is
+    traced. The per-row slot ranks come from one ``lexsort`` — the same
+    computation as ``row_ranks_sorted`` / ``elimination._neighbour_table``
+    in traced form.
+    """
+    cap = row.shape[0]
+    valid = row < n_rows
+    row = jnp.where(valid, row, n_rows).astype(jnp.int32)
+    col = jnp.where(valid, col, n_rows).astype(jnp.int32)
+    order = jnp.lexsort((col, row))
+    r = row[order]
+    c = col[order]
+    pos = jnp.arange(cap)
+    row_start = jax.ops.segment_min(pos, r, num_segments=n_rows)
+    rank = pos - jnp.take(row_start, jnp.minimum(r, n_rows - 1),
+                          mode="fill", fill_value=0)
+    ok = (r < n_rows) & (rank < width)
+    rr = jnp.where(ok, r, n_rows).astype(jnp.int32)
+    kk = jnp.where(ok, rank, 0).astype(jnp.int32)
+    if width:
+        col_table = jnp.full((n_rows + 1, width), n_rows, jnp.int32).at[
+            rr, kk].set(jnp.where(ok, c, n_rows), mode="drop")[: n_rows]
+    else:
+        col_table = jnp.zeros((n_rows, 0), jnp.int32)
+    spilled = (r < n_rows) & (rank >= width)
+    return EllLayout(order=order, rr=rr, kk=kk, in_ell=ok,
+                     col_table=col_table,
+                     spill_row=jnp.where(spilled, r, n_rows),
+                     spill_col=jnp.where(spilled, c, n_rows),
+                     n_rows=n_rows, width=width)

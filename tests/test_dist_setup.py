@@ -70,3 +70,70 @@ def test_distributed_setup_matches_reference():
     assert out["elim_match"], out
     assert out["vote_match"], out
     assert out["n_elim"] > 0
+
+
+SUPERSTEP_DRIVER = textwrap.dedent("""
+    import os, json, dataclasses
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    import jax.sharding as shd
+    from repro.graphs.generators import barabasi_albert, ensure_connected
+    from repro.dist.solver import DistLaplacianSolver
+    from repro.core.hierarchy import SetupConfig
+    from repro.core import setup_step as ss
+
+    n, r, c, v = ensure_connected(*barabasi_albert(800, m=3, seed=2,
+                                                   weighted=True))
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(shd.AxisType.Auto,) * 2)
+    cfg = SetupConfig(coarsest_size=32)
+    cfg_eager = dataclasses.replace(cfg, setup_mode="eager")
+    kw = dict(dist_nnz_threshold=200, max_dist_levels=2)
+    s_eager = DistLaplacianSolver.setup(n, r, c, v, mesh,
+                                        setup_config=cfg_eager, **kw)
+    ss.reset_counters()
+    s_super = DistLaplacianSolver.setup(n, r, c, v, mesh,
+                                        setup_config=cfg, **kw)
+    cnt = ss.counters()
+    n_levels = len(s_super.arrays.transfers) + len(s_super.coarse_h.transfers)
+
+    b = np.random.default_rng(3).normal(size=n).astype(np.float32)
+    b -= b.mean()
+    X1, n1, i1 = s_eager.solve_block(b[:, None], n_iters=40, tol=1e-8)
+    X2, n2, i2 = s_super.solve_block(b[:, None], n_iters=40, tol=1e-8)
+    print("RESULT " + json.dumps(dict(
+        meta_match=[(m.kind, m.n, m.nnz) for m in s_eager.level_meta] ==
+                   [(m.kind, m.n, m.nnz) for m in s_super.level_meta],
+        n_dist_levels=len(s_super.level_meta),
+        iters_eager=int(np.asarray(i1)[0]), iters_super=int(np.asarray(i2)[0]),
+        maxdiff=float(np.abs(np.asarray(X1) - np.asarray(X2)).max()),
+        host_syncs=cnt["host_syncs"], n_levels=n_levels,
+        steps={k: dict(v) for k, v in cnt["steps"].items()})))
+""")
+
+
+@pytest.mark.slow  # fresh-process 4-device subprocess
+def test_dist_superstep_setup_2x2_matches_eager():
+    """The tentpole contract on a real 2×2 mesh: the distributed
+    super-step setup produces the same hierarchy structure as the eager
+    dist setup (identical level kinds/sizes/nnz — all integer decisions
+    are sharded idempotent ⊕, hence exact), the same PCG iteration
+    counts, and solutions equal to float rounding; host contact is one
+    batched scalar fetch per level-advance decision."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", SUPERSTEP_DRIVER],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["meta_match"], out
+    assert out["n_dist_levels"] >= 1
+    assert out["iters_eager"] == out["iters_super"], out
+    assert out["maxdiff"] < 1e-5, out
+    # entry probe + ONE fetch per constructed level + coarse alpha
+    # (+1 per ratio-check rejection)
+    assert out["host_syncs"] <= out["n_levels"] + 3, out
+    # the fused one-fetch elim step ran (no split select/build fetches)
+    assert "elim" in out["steps"] and "elim_select" not in out["steps"], out

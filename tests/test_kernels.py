@@ -14,6 +14,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from repro.kernels.agg_vote import vote_reduce, vote_reduce_ref
 from repro.kernels.embedding_bag import embedding_bag_kernel, embedding_bag_ref
 from repro.kernels.jacobi import jacobi_step, jacobi_step_ref
 from repro.kernels.spmv_ell import spmv_ell, spmv_ell_ref
@@ -109,6 +110,52 @@ class TestJacobiKernel:
         want = core_jacobi(level, b, x, n_sweeps=1)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-4, atol=1e-5)
+
+
+class TestAggVoteKernel:
+    """Fused Alg 2 vote reduction: the Pallas kernel (interpret mode)
+    must bit-match the jnp reference. The hybrid (ELL + spill) execution
+    vs the staged segment-reduction oracle is pinned in
+    tests/test_setup_superstep.py::TestVoteReduce, which runs without
+    hypothesis — this class only covers the kernel/ref pair."""
+
+    def test_kernel_matches_ref_directly(self):
+        """vote_reduce (Pallas interpret) vs vote_reduce_ref on dense ELL
+        tables, incl. non-block-multiple row counts and empty rows."""
+        rng = np.random.default_rng(1)
+        for n_rows, width in [(1, 1), (300, 4), (256, 3), (77, 0), (513, 6)]:
+            n_cols = max(n_rows, 2)
+            col = rng.integers(0, n_cols + 1, (n_rows, max(width, 1)))
+            col = col[:, :width].astype(np.int32)
+            sq = rng.integers(0, 50, (n_rows, width)).astype(np.int32)
+            state = rng.integers(0, 3, n_cols).astype(np.int32)
+            got = vote_reduce(jnp.asarray(col), jnp.asarray(sq),
+                              jnp.asarray(state), levels=64)
+            want = vote_reduce_ref(jnp.asarray(col), jnp.asarray(sq),
+                                   jnp.asarray(state), levels=64)
+            np.testing.assert_array_equal(np.asarray(got[0]),
+                                          np.asarray(want[0]))
+            np.testing.assert_array_equal(np.asarray(got[1]),
+                                          np.asarray(want[1]))
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_property_kernel_vs_ref(self, seed):
+        rng = np.random.default_rng(seed)
+        n_rows = int(rng.integers(1, 400))
+        width = int(rng.integers(0, 7))
+        n_cols = int(rng.integers(2, 300))
+        levels = int(rng.integers(1, 1 << 16))
+        col = rng.integers(0, n_cols + 2, (n_rows, max(width, 1)))
+        col = col[:, :width].astype(np.int32)
+        sq = rng.integers(0, levels, (n_rows, width)).astype(np.int32)
+        state = rng.integers(0, 3, n_cols).astype(np.int32)
+        got = vote_reduce(jnp.asarray(col), jnp.asarray(sq),
+                          jnp.asarray(state), levels=levels)
+        want = vote_reduce_ref(jnp.asarray(col), jnp.asarray(sq),
+                               jnp.asarray(state), levels=levels)
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
 
 
 class TestEmbeddingBag:
