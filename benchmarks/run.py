@@ -176,6 +176,41 @@ def main(argv=None) -> None:
                       r["decision_fetches_per_level"])
         print(f"  (schema {out['schema']} -> {path})")
 
+    if want("service"):
+        from benchmarks.service_bench import bench_service, write_root_json
+
+        out = bench_service(scale=scale)
+        _save("service", out)
+        path = write_root_json(out)
+        su = out["setup_throughput"]
+        sv = out["serving"]
+        print("\n== serving layer: batched setups + hierarchy "
+              "cache + blocked solves ==")
+        da = su["dispatch_amortization"]
+        mp = su["modeled_parallel"]
+        print(f"  setups ({su['n_graphs']} same-bucket graphs, warm): "
+              f"looped={su['looped_setups_per_s']:6.2f}/s "
+              f"batched={su['batched_setups_per_s']:6.2f}/s "
+              f"(wall {su['measured_wall_speedup']:.2f}x, "
+              f"modeled-parallel {mp['batched_speedup']:.1f}x; "
+              f"target >=2x: {out['contracts']['batched_speedup_met']})")
+        print(f"  amortization: program calls {da['looped_program_calls']}"
+              f"->{da['batched_program_calls']} "
+              f"({da['calls_ratio']:.1f}x), host syncs "
+              f"{da['looped_host_syncs']}->{da['batched_host_syncs']} "
+              f"({da['syncs_ratio']:.1f}x)")
+        lat = sv["latency_seconds"]
+        print(f"  serving: hit_rate(warm)={sv['warm_cache_hit_rate']:.2f} "
+              f"occupancy={sv['batch_occupancy']:.1f} "
+              f"latency p50/p99={lat['p50']*1e3:.0f}/"
+              f"{lat['p99']*1e3:.0f}ms "
+              f"columns/s(warm)={sv['warm_columns_per_s']:.1f}")
+        _emit_csv("service_batched_setups_per_s", 0,
+                  su["modeled_parallel"]["batched_setups_per_s"])
+        _emit_csv("service_warm_columns_per_s", 0,
+                  sv["warm_columns_per_s"])
+        print(f"  (schema {out['schema']} -> {path})")
+
     if want("kernels"):
         from benchmarks.kernels_bench import bench_kernels
 

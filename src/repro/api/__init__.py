@@ -17,7 +17,8 @@ the backend implementations — but new code should go through this module;
 see MIGRATION.md at the repo root for the old-name -> new-name map.
 """
 
-from repro.api.facade import Solver, setup, solve
+from repro.api.cache import HierarchyCache
+from repro.api.facade import Solver, default_cache, setup, solve
 from repro.api.options import SolverOptions
 from repro.api.problem import Problem, ProblemValidationError
 from repro.api.registry import (available_backends, get_backend,
@@ -25,12 +26,14 @@ from repro.api.registry import (available_backends, get_backend,
 from repro.api.result import SolveResult
 
 __all__ = [
+    "HierarchyCache",
     "Problem",
     "ProblemValidationError",
     "SolveResult",
     "Solver",
     "SolverOptions",
     "available_backends",
+    "default_cache",
     "get_backend",
     "register_backend",
     "resolve_backend",

@@ -19,6 +19,7 @@ import time
 
 import numpy as np
 
+from repro.api.cache import HierarchyCache
 from repro.api.options import SolverOptions
 from repro.api.problem import Problem
 from repro.api.registry import get_backend, resolve_backend
@@ -78,15 +79,33 @@ class Solver:
 
 
 # ----------------------------------------------------------------------
+_DEFAULT_CACHE = HierarchyCache()
+
+
+def default_cache() -> HierarchyCache:
+    """The process-wide :class:`HierarchyCache` every ``setup()``/
+    ``solve()`` call threads through unless told otherwise."""
+    return _DEFAULT_CACHE
+
+
 def setup(problem: Problem, options: SolverOptions | None = None,
-          backend: str = "auto", mesh=None) -> Solver:
-    """Build the multigrid hierarchy for ``problem`` on a backend.
+          backend: str = "auto", mesh=None,
+          cache: HierarchyCache | bool | None = None) -> Solver:
+    """Build (or reuse) the multigrid hierarchy for ``problem``.
 
     ``backend`` is a registry name (``"single"``, ``"serial_ref"``,
     ``"dist"``) or ``"auto"``, which picks ``"dist"`` when a distributed
     context is available (a ``mesh`` was passed or more than one JAX device
     is visible) and ``"single"`` otherwise. ``mesh`` is only consumed by
     the dist backend; passing one forces it.
+
+    ``cache`` — hierarchies are content-addressed: by default the lookup
+    goes through :func:`default_cache`, so a second ``setup()`` on an
+    equal Problem (same :meth:`Problem.fingerprint`, options, backend,
+    mesh) reuses the stored backend handle and does zero setup work
+    (``setup_seconds == 0.0`` on the returned Solver). Pass a
+    :class:`HierarchyCache` to use a private cache, or ``False`` to
+    always rebuild.
     """
     if not isinstance(problem, Problem):
         raise TypeError(
@@ -98,19 +117,34 @@ def setup(problem: Problem, options: SolverOptions | None = None,
         raise ValueError(
             f"a mesh is only consumed by the dist backend, but "
             f"backend={name!r} was requested")
+    # NB: identity checks, not truthiness — an *empty* HierarchyCache is
+    # len() == 0 and must still be consulted/filled.
+    if cache is None or cache is True:
+        cache = _DEFAULT_CACHE
+    elif cache is False:
+        cache = None
+    if cache is not None:
+        key = HierarchyCache.key(problem, options, name, mesh)
+        handle = cache.get(key)
+        if handle is not None:
+            return Solver(problem, options, name, handle, 0.0)
     t0 = time.perf_counter()
     handle = get_backend(name)(problem, options, mesh)
-    return Solver(problem, options, name, handle,
-                  time.perf_counter() - t0)
+    seconds = time.perf_counter() - t0
+    if cache is not None:
+        cache.put(key, handle)
+    return Solver(problem, options, name, handle, seconds)
 
 
 def solve(problem: Problem, b, options: SolverOptions | None = None,
-          backend: str = "auto", mesh=None
+          backend: str = "auto", mesh=None,
+          cache: HierarchyCache | bool | None = None
           ) -> tuple[np.ndarray, SolveResult]:
     """One-shot convenience: ``setup(...)`` then ``solve(b)``.
 
+    Threads the hierarchy cache like :func:`setup`, so repeated one-shot
+    ``solve()`` calls on an equal Problem only build the hierarchy once.
     For repeated right-hand sides prefer keeping the :class:`Solver` from
-    :func:`setup` (the hierarchy build dominates one solve) or batching
-    them as the columns of ``b``.
+    :func:`setup` or batching them as the columns of ``b``.
     """
-    return setup(problem, options, backend, mesh).solve(b)
+    return setup(problem, options, backend, mesh, cache=cache).solve(b)

@@ -207,6 +207,54 @@ class Problem:
             raise
 
     # ------------------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable content digest of the system (hex sha256, memoized).
+
+        Two Problems share a fingerprint iff they describe the same
+        Laplacian under the same storage-dtype policy: the digest covers
+        ``n``, the dtype name, and the edge list canonicalized by sorting
+        on (row, col) — so it is insensitive to the order edges were
+        supplied in, and sensitive to any weight change, including the
+        rounding a float64 -> float32 drift would introduce (the dtype
+        name *and* the weight bytes in storage dtype are both hashed).
+
+        This is the content-address the :class:`~repro.api.cache.
+        HierarchyCache` and the serving layer key on.
+        """
+        cached = self.__dict__.get("_fingerprint")
+        if cached is not None:
+            return cached
+        import hashlib
+
+        rows = np.ascontiguousarray(self.rows, np.int64)
+        cols = np.ascontiguousarray(self.cols, np.int64)
+        order = np.lexsort((cols, rows))
+        h = hashlib.sha256()
+        h.update(b"repro.problem/v1\0")
+        h.update(int(self.n).to_bytes(8, "little"))
+        h.update(np.dtype(self.dtype).name.encode() + b"\0")
+        h.update(rows[order].tobytes())
+        h.update(cols[order].tobytes())
+        h.update(np.ascontiguousarray(
+            np.asarray(self.vals, self.dtype)[order]).tobytes())
+        digest = h.hexdigest()
+        object.__setattr__(self, "_fingerprint", digest)
+        return digest
+
+    def bucket_signature(self, floor: int = 0) -> tuple[int, int]:
+        """The capacity buckets this problem's setup pads to.
+
+        ``(pow2_bucket(n, floor), pow2_bucket(2|E|, floor))`` — the
+        padding shapes that decide compiled super-step program reuse, and
+        the grouping key the serving layer batches setups by. ``floor``
+        is ``SolverOptions.setup_bucket_floor``.
+        """
+        from repro.core.graph import pow2_bucket
+
+        return (pow2_bucket(self.n, floor),
+                pow2_bucket(len(self.rows), floor))
+
+    # ------------------------------------------------------------------
     @property
     def n_vertices(self) -> int:
         return self.n

@@ -190,6 +190,33 @@ def build_hierarchy(adj: COO, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
     return build_hierarchy_eager(adj, cfg)
 
 
+def build_hierarchy_batch(adjs: Sequence[COO],
+                          cfg: SetupConfig = SetupConfig()) -> list:
+    """Build N hierarchies as one batched super-step run.
+
+    The setup plans of all graphs advance in lockstep rounds: per-level
+    work for graphs whose levels land in the same capacity buckets runs
+    as ONE ``jax.vmap``-ped super-step program, and all pending
+    level-advance decisions share one batched host fetch per round
+    (``repro.core.setup_step.build_hierarchy_superstep_batch``). Every
+    returned hierarchy is bit-identical to a looped
+    :func:`build_hierarchy` of the same graph; pick a
+    ``setup_bucket_floor`` covering the batch so same-family graphs stay
+    in one group end to end.
+
+    ``setup_mode="eager"`` has no batched form — it falls back to a plain
+    loop over :func:`build_hierarchy_eager` (same results, no batching).
+    """
+    if cfg.setup_mode == "superstep":
+        from repro.core.setup_step import build_hierarchy_superstep_batch
+
+        return build_hierarchy_superstep_batch(adjs, cfg)
+    if cfg.setup_mode != "eager":
+        raise ValueError(f"setup_mode must be 'superstep' or 'eager', "
+                         f"got {cfg.setup_mode!r}")
+    return [build_hierarchy_eager(adj, cfg) for adj in adjs]
+
+
 def _attach_setup_twin(level: GraphLevel, cfg: SetupConfig) -> GraphLevel:
     """Fixed-width ELL twin for the setup-time strength sweeps
     (``setup_ell_sweeps``): the eager-path mirror of the super-step's

@@ -108,6 +108,11 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
     ``tol * ||r0||`` its step size is zeroed (x, r freeze) while the rest
     keep iterating; the loop exits when every column has converged.
 
+    ``tol`` and ``maxiter`` accept a scalar or a per-column ``(k,)`` array
+    (the serving layer batches requests with different tolerances into one
+    block). Scalars keep the exact pre-existing trajectory; with arrays a
+    column also freezes once it has run its own ``maxiter[j]`` rounds.
+
     Returns ``(X, BlockSolveInfo)`` with per-column iteration counts,
     converged flags, and the (T+1, k) residual history (rows beyond a
     column's own convergence hold its frozen residual norm).
@@ -116,6 +121,21 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
     if B.ndim != 2:
         raise ValueError(f"pcg_block expects B of shape (n, k), got {B.shape}")
     k = B.shape[1]
+    # Per-column tol/maxiter: scalars pass through untouched (bitwise-stable
+    # trajectories); arrays must be (k,) and act elementwise below.
+    if np.ndim(tol):
+        tol = np.asarray(tol)
+        if tol.shape != (k,):
+            raise ValueError(f"per-column tol must have shape ({k},), "
+                             f"got {tol.shape}")
+    if np.ndim(maxiter):
+        maxiter = np.asarray(maxiter, np.int64)
+        if maxiter.shape != (k,):
+            raise ValueError(f"per-column maxiter must have shape ({k},), "
+                             f"got {maxiter.shape}")
+        n_rounds = int(maxiter.max(initial=0))
+    else:
+        n_rounds = maxiter
     M = precond if precond is not None else (lambda v: v)
     if exact_columns:
         # Eager column loops have no fixed-shape constraint, so frozen
@@ -163,7 +183,8 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
     hist = [r0n]
     active = r0n > 0.0
     iters = np.zeros(k, np.int64)
-    for _ in range(maxiter):
+    for _ in range(n_rounds):
+        active = active & (iters < maxiter)
         if not active.any():
             break
         act = jnp.asarray(active)

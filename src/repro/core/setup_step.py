@@ -55,6 +55,21 @@ factory; ``repro.dist.setup`` subclasses it to run the semiring
 reductions of Alg 1 and Alg 2 as ``shard_map`` programs over the 2D edge
 partition — the loop, the bucketing policy and the sync contract are
 shared verbatim between the serial and distributed setups.
+
+**Batch-rank polymorphism.** The setup loop itself is written once, as a
+*plan*: a generator (:func:`_setup_plan`) that yields step/fetch requests
+and never touches the registry directly. ``build_hierarchy_superstep``
+drives one plan, executing each request immediately — behaviourally
+identical to the pre-plan loop. ``build_hierarchy_superstep_batch``
+drives N plans in lockstep rounds: requests for the same ``(step,
+bucket-key)`` are stacked and executed as ONE ``jax.vmap``-ped registry
+program (amortizing dispatch and compile lookups across graphs), and
+every plan waiting on host scalars shares ONE batched ``device_get`` per
+round. Per-graph level-advance decisions stay per-plan host control
+flow, so each hierarchy in the batch is **bit-identical** to its
+single-graph build (``tests/test_setup_batch.py`` pins this); graphs
+whose decisions diverge simply fall out of the shared group for the
+affected rounds and keep building correctly on their own.
 """
 
 from __future__ import annotations
@@ -203,6 +218,19 @@ def _ingest_probe(row, n0):
     return nnz, plast
 
 
+def _build_probe(raw_cap: int):
+    """Registry form of the ingest probe, for the batched driver (a
+    single-graph build keeps the plain-jit ``_ingest_probe`` and its
+    uncounted status)."""
+    def step(row, n0):
+        valid = row < n0
+        nnz = jnp.sum(valid.astype(jnp.int32))
+        plast = jnp.all(valid == (jnp.arange(raw_cap) < nnz))
+        return nnz, plast
+
+    return jax.jit(step)
+
+
 def _build_elim_select(n_cap: int, e_cap: int, max_degree: int,
                        select_fn=None):
     def step(row, col, val, deg, n):
@@ -266,7 +294,7 @@ def _build_agg(n_cap: int, e_cap: int, cfg, vote_factory=None):
     ell_sweeps = cfg.setup_ell_sweeps and cfg.matvec_backend != "coo"
     vote_mode = resolve_vote_mode()
 
-    def step(row, col, val, deg, n):
+    def step(row, col, val, deg, n, lam_v0):
         level = _plevel(row, col, val, deg)
         # ONE traced hybrid layout serves the whole step: the fused vote
         # reduction always, and (opt-in) the strength sweeps' SpMM.
@@ -307,7 +335,11 @@ def _build_agg(n_cap: int, e_cap: int, cfg, vote_factory=None):
         co_row, co_col, co_val, co_nnz = contract_arrays(
             level.adj, coarse_id, n_c, sentinel=n_cap)
         co_deg = jax.ops.segment_sum(co_val, co_row, num_segments=n_cap)
-        lam = estimate_lambda_max(level, n_valid=n)
+        # The power-iteration start vector rides in as an argument (see
+        # estimate_lambda_max: drawn in-program it would be a trace-time
+        # constant, and the batched vmapped program would fold its masked
+        # reductions differently from this unbatched one).
+        lam = estimate_lambda_max(level, n_valid=n, v0=lam_v0)
         return dict(coarse_id=coarse_id, n_c=n_c, ok=ok, co_row=co_row,
                     co_col=co_col, co_val=co_val, co_deg=co_deg,
                     co_nnz=co_nnz, lam=lam)
@@ -361,6 +393,15 @@ class SuperstepBuilders:
         return None
 
     # -- steps ----------------------------------------------------------
+    # Every per-level program is addressed as ``(method, params)`` where
+    # ``params`` is the bucket tuple. ``step`` resolves that address to a
+    # registry-cached jitted program — unbatched (``batch=1``, the exact
+    # programs the pre-plan loop built, same names and keys) or lifted
+    # over a leading graph axis with ``jax.vmap`` for the batched driver
+    # (registered under ``<name>@batch`` so compile accounting stays
+    # per-rank). The named accessors below are kept as the readable
+    # spelling for single-step callers.
+
     def _agg_key(self, n_cap: int, e_cap: int):
         cfg = self.cfg
         ell_sweeps = cfg.setup_ell_sweeps and cfg.matvec_backend != "coo"
@@ -369,42 +410,73 @@ class SuperstepBuilders:
                            cfg.seed, cfg.aggregation, cfg.setup_ell_width,
                            ell_sweeps and cfg.matvec_backend)
 
+    def _key(self, method: str, params: tuple):
+        if method == "agg":
+            return self._agg_key(*params)
+        if method in ("elim", "elim_select", "elim_build"):
+            return self.tag + params + (self.cfg.elim_max_degree,)
+        return self.tag + params
+
+    def _make(self, method: str, params: tuple):
+        md = self.cfg.elim_max_degree
+        if method == "probe":
+            return _build_probe(*params)
+        if method == "ingest":
+            return _build_ingest(*params)
+        if method == "ingest_fast":
+            return _build_ingest_fast(*params)
+        if method == "elim":
+            n_cap, e_cap = params
+            return _build_elim_fused(n_cap, e_cap, md,
+                                     select_fn=self.select_fn(n_cap, e_cap))
+        if method == "elim_select":
+            n_cap, e_cap = params
+            return _build_elim_select(n_cap, e_cap, md,
+                                      select_fn=self.select_fn(n_cap, e_cap))
+        if method == "elim_build":
+            n_cap, e_cap, f_cap = params
+            return _build_elim_build(n_cap, e_cap, f_cap, md)
+        if method == "agg":
+            n_cap, e_cap = params
+            return _build_agg(n_cap, e_cap, self.cfg,
+                              vote_factory=self.vote_factory(n_cap, e_cap))
+        if method == "rebucket":
+            return _build_rebucket(*params)
+        raise KeyError(f"unknown super-step method {method!r}")
+
+    def step(self, method: str, params: tuple, batch: int = 1):
+        if batch == 1:
+            if method == "probe":
+                # plain jit, keyed on the raw capacity by shape; stays out
+                # of the registry ledger like the pre-plan probe.
+                return _ingest_probe
+            return _step(method, self._key(method, params),
+                         lambda: self._make(method, params))
+        return _step(method + "@batch",
+                     self._key(method, params) + ("batch", batch),
+                     lambda: _batch_program(self._make(method, params),
+                                            batch))
+
     def ingest(self, n_cap: int, e_cap: int):
-        return _step("ingest", self.tag + (n_cap, e_cap),
-                     lambda: _build_ingest(n_cap, e_cap))
+        return self.step("ingest", (n_cap, e_cap))
 
     def ingest_fast(self, raw_cap: int, n_cap: int, e_cap: int):
-        return _step("ingest_fast", self.tag + (raw_cap, n_cap, e_cap),
-                     lambda: _build_ingest_fast(raw_cap, n_cap, e_cap))
+        return self.step("ingest_fast", (raw_cap, n_cap, e_cap))
 
     def elim_select(self, n_cap: int, e_cap: int):
-        md = self.cfg.elim_max_degree
-        return _step("elim_select", self.tag + (n_cap, e_cap, md),
-                     lambda: _build_elim_select(
-                         n_cap, e_cap, md,
-                         select_fn=self.select_fn(n_cap, e_cap)))
+        return self.step("elim_select", (n_cap, e_cap))
 
     def elim_build(self, n_cap: int, e_cap: int, f_cap: int):
-        md = self.cfg.elim_max_degree
-        return _step("elim_build", self.tag + (n_cap, e_cap, f_cap, md),
-                     lambda: _build_elim_build(n_cap, e_cap, f_cap, md))
+        return self.step("elim_build", (n_cap, e_cap, f_cap))
 
     def elim_fused(self, n_cap: int, e_cap: int):
-        md = self.cfg.elim_max_degree
-        return _step("elim", self.tag + (n_cap, e_cap, md),
-                     lambda: _build_elim_fused(
-                         n_cap, e_cap, md,
-                         select_fn=self.select_fn(n_cap, e_cap)))
+        return self.step("elim", (n_cap, e_cap))
 
     def agg(self, n_cap: int, e_cap: int):
-        return _step("agg", self._agg_key(n_cap, e_cap),
-                     lambda: _build_agg(
-                         n_cap, e_cap, self.cfg,
-                         vote_factory=self.vote_factory(n_cap, e_cap)))
+        return self.step("agg", (n_cap, e_cap))
 
     def rebucket(self, n_from: int, e_from: int, n_to: int, e_to: int):
-        return _step("rebucket", self.tag + (n_from, e_from, n_to, e_to),
-                     lambda: _build_rebucket(n_from, e_from, n_to, e_to))
+        return self.step("rebucket", (n_from, e_from, n_to, e_to))
 
 
 # ----------------------------------------------------------------------------
@@ -462,24 +534,47 @@ def _wrap_agg(fine: GraphLevel, spec: dict) -> AggregationLevel:
 # The setup loop.
 # ----------------------------------------------------------------------------
 
-def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
-                              steps: SuperstepBuilders | None = None):
-    """Compile-once device-resident setup. Same contract (and an
-    equivalent hierarchy: level sizes, kinds, PCG iteration counts) as
-    ``core.hierarchy.build_hierarchy_eager``.
+def _batch_program(fn, batch: int):
+    """Lift a single-graph super-step to a stacked batch of ``batch``.
 
-    ``profile``: optional list; when given, each constructed level appends
-    ``(kind, n_fine, seconds)`` — the bench's per-level wall time. Timing
-    forces a block per level, so leave it ``None`` outside benchmarks.
+    Takes/returns the single-graph signature with a leading graph axis on
+    every argument and output. Two lowerings, picked per backend:
 
-    ``steps``: the super-step program factory; defaults to the serial
-    :class:`SuperstepBuilders`. ``repro.dist.setup`` passes its
-    mesh-tagged subclass, which runs the Alg 1/Alg 2 semiring reductions
-    sharded over the 2D edge partition — the loop below (including the
-    per-level sync contract) is shared between the two.
+    * ``unroll`` (CPU) — trace ``fn`` once per member inside ONE jitted
+      program. Each member keeps its exact unbatched HLO (bit-identical
+      outputs by construction) and the members are data-independent
+      subgraphs, so a multi-core host runtime executes them concurrently;
+      the measured vmapped gather/scatter lowerings are ~1.3x slower than
+      N unbatched runs on CPU, which this avoids.
+    * ``vmap`` (accelerators) — one ``jax.vmap``-ped program whose batched
+      ops fill the wide units. Requires the RNG-seeded λmax start vector
+      to enter as a program *argument* (see ``estimate_lambda_max``) to
+      stay bit-identical to the unbatched path.
     """
-    from repro.core.hierarchy import Hierarchy, attach_ell_transfers
+    if jax.default_backend() == "cpu":
+        def run(*stacked):
+            outs = [fn(*(a[i] for a in stacked)) for i in range(batch)]
+            return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
 
+        return jax.jit(run)
+    return jax.jit(jax.vmap(fn))
+
+
+_LAM_V0: dict = {}
+
+
+def _lam_seed_vector(n_cap: int):
+    """The λmax power-iteration start vector for a vertex bucket, drawn
+    once per capacity (deterministic: seed 0 is ``estimate_lambda_max``'s
+    default) and fed to the agg step as a program argument."""
+    v = _LAM_V0.get(n_cap)
+    if v is None:
+        v = _LAM_V0[n_cap] = jax.random.normal(jax.random.PRNGKey(0),
+                                               (n_cap,))
+    return v
+
+
+def _validate_setup_cfg(cfg) -> None:
     floor = cfg.setup_bucket_floor
     if floor < 0 or (floor & (floor - 1)):
         # A non-power floor would produce mixed buckets (no reuse) and
@@ -489,24 +584,44 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
     if cfg.elim_sizing not in ("conservative", "exact"):
         raise ValueError(f"elim_sizing must be 'conservative' or 'exact', "
                          f"got {cfg.elim_sizing!r}")
-    if steps is None:
-        steps = SuperstepBuilders(cfg)
+
+
+def _setup_plan(adj: COO, cfg, profile: list | None = None):
+    """The setup loop as a *plan*: a generator yielding execution
+    requests, returning the finished ``Hierarchy`` via ``StopIteration``.
+
+    Requests are ``("step", method, params, args)`` — run the registry
+    program addressed by ``(method, params)`` on ``args`` — and
+    ``("fetch", device_scalars)`` — one batched host sync. The driver
+    sends the result back in. Keeping ALL device work and host syncs
+    behind requests is what makes the loop batch-rank polymorphic: the
+    single driver executes requests one plan at a time (the pre-plan
+    behaviour, bit for bit), the batch driver stacks same-address step
+    requests from N plans into one vmapped program and merges their
+    fetches into one ``device_get`` per round.
+    """
+    from repro.core.hierarchy import Hierarchy, attach_ell_transfers
+
+    floor = cfg.setup_bucket_floor
     n0 = adj.n_rows
     # Entry ingest. The probe (one batched scalar fetch) detects inputs
     # already in padding-last layout — any coalesce output qualifies —
     # and routes them through a jitted device-side compaction; only
     # arbitrary-order inputs fall back to the host-NumPy pass (one
     # full-array round-trip, counted in the sync ledger).
-    nnz0, plast = _fetch(*_ingest_probe(adj.row, n0))
+    probe = yield ("step", "probe", (int(adj.capacity),),
+                   (adj.row, jnp.asarray(n0, jnp.int32)))
+    nnz0, plast = yield ("fetch", tuple(probe))
     nnz0 = int(nnz0)
     n_cap, e_cap = bucket(n0, floor), bucket(max(nnz0, 1), floor)
     if bool(plast):
-        fast = steps.ingest_fast(int(adj.capacity), n_cap, e_cap)
-        row_d, col_d, val_d, deg_d = fast(adj.row, adj.col, adj.val,
-                                          jnp.asarray(n0, jnp.int32))
+        row_d, col_d, val_d, deg_d = yield (
+            "step", "ingest_fast", (int(adj.capacity), n_cap, e_cap),
+            (adj.row, adj.col, adj.val, jnp.asarray(n0, jnp.int32)))
     else:
-        row_h, col_h, val_h = (np.asarray(a) for a in
-                               _fetch(adj.row, adj.col, adj.val))
+        row_h, col_h, val_h = (
+            np.asarray(a) for a in
+            (yield ("fetch", (adj.row, adj.col, adj.val))))
         mask = row_h < n0
         row_p = np.full(e_cap, n_cap, np.int32)
         col_p = np.full(e_cap, n_cap, np.int32)
@@ -516,20 +631,23 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
         val_p[:nnz0] = val_h[mask]
         row_d, col_d = jnp.asarray(row_p), jnp.asarray(col_p)
         val_d = jnp.asarray(val_p)
-        deg_d = steps.ingest(n_cap, e_cap)(row_d, col_d, val_d)
+        deg_d = yield ("step", "ingest", (n_cap, e_cap),
+                       (row_d, col_d, val_d))
 
     cur_n = n0
     n_d = jnp.asarray(cur_n, jnp.int32)
     specs: list = []
 
     def advance(out_row, out_col, out_val, out_deg, n_c, nnz_c):
+        # A nested generator (entered with ``yield from``) so the
+        # rebucket step routes through the driver like every other one.
         nonlocal row_d, col_d, val_d, deg_d, n_cap, e_cap, cur_n, n_d
         n_to, e_to = bucket(n_c, floor), bucket(max(nnz_c, 1), floor)
         e_from = int(out_row.shape[0])
         if (n_to, e_to) != (n_cap, e_from):
-            rb = steps.rebucket(n_cap, e_from, n_to, e_to)
-            out_row, out_col, out_val, out_deg = rb(out_row, out_col,
-                                                    out_val, out_deg)
+            out_row, out_col, out_val, out_deg = yield (
+                "step", "rebucket", (n_cap, e_from, n_to, e_to),
+                (out_row, out_col, out_val, out_deg))
         row_d, col_d, val_d, deg_d = out_row, out_col, out_val, out_deg
         n_cap, e_cap, cur_n = n_to, e_to, n_c
         n_d = jnp.asarray(cur_n, jnp.int32)
@@ -554,31 +672,32 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
                 # Fused select+build; ONE batched decision fetch per elim
                 # level. A rejected pass wastes one speculative build —
                 # rejections are terminal in practice (the loop breaks).
-                stp = steps.elim_fused(n_cap, e_cap)
-                elim, out = stp(row_d, col_d, val_d, deg_d, n_d)
-                n_elim, nnz_c = _fetch(out["n_f"], out["co_nnz"])
+                elim, out = yield ("step", "elim", (n_cap, e_cap),
+                                   (row_d, col_d, val_d, deg_d, n_d))
+                n_elim, nnz_c = yield ("fetch", (out["n_f"], out["co_nnz"]))
                 n_elim, nnz_c = int(n_elim), int(nnz_c)
                 if n_elim < max(cfg.elim_min_fraction * cur_n, 1) \
                         or n_elim == cur_n:
                     break
             else:
-                sel = steps.elim_select(n_cap, e_cap)
-                elim, n_elim_d = sel(row_d, col_d, val_d, deg_d, n_d)
-                (n_elim,) = _fetch(n_elim_d)          # decision fetch
+                elim, n_elim_d = yield ("step", "elim_select",
+                                        (n_cap, e_cap),
+                                        (row_d, col_d, val_d, deg_d, n_d))
+                (n_elim,) = yield ("fetch", (n_elim_d,))  # decision fetch
                 n_elim = int(n_elim)
                 if n_elim < max(cfg.elim_min_fraction * cur_n, 1) \
                         or n_elim == cur_n:
                     break
                 f_cap = bucket(n_elim, floor)
-                bld = steps.elim_build(n_cap, e_cap, f_cap)
-                out = bld(row_d, col_d, val_d, deg_d, n_d, elim)
-                (nnz_c,) = _fetch(out["co_nnz"])      # sizing fetch
+                out = yield ("step", "elim_build", (n_cap, e_cap, f_cap),
+                             (row_d, col_d, val_d, deg_d, n_d, elim))
+                (nnz_c,) = yield ("fetch", (out["co_nnz"],))  # sizing fetch
                 nnz_c = int(nnz_c)
             specs.append(("elim", dict(n=cur_n, n_f=n_elim,
                                        n_c=cur_n - n_elim, nnz_c=nnz_c,
                                        elim=elim, out=out)))
-            advance(out["co_row"], out["co_col"], out["co_val"],
-                    out["co_deg"], cur_n - n_elim, nnz_c)
+            yield from advance(out["co_row"], out["co_col"], out["co_val"],
+                               out["co_deg"], cur_n - n_elim, nnz_c)
             progressed = True
             if profile is not None:
                 profile.append(("elim", specs[-1][1]["n"],
@@ -589,11 +708,13 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
 
         # --- aggregation level -----------------------------------------
         t0 = tick()
-        stp = steps.agg(n_cap, e_cap)
-        out = stp(row_d, col_d, val_d, deg_d, n_d)
+        out = yield ("step", "agg", (n_cap, e_cap),
+                     (row_d, col_d, val_d, deg_d, n_d,
+                      _lam_seed_vector(n_cap)))
         # decision fetch: coarse size (ratio check), coarse nnz (the old
         # _shrink sync) and the renumbering invariant, in ONE device_get.
-        n_c, nnz_c, ok = _fetch(out["n_c"], out["co_nnz"], out["ok"])
+        n_c, nnz_c, ok = yield ("fetch", (out["n_c"], out["co_nnz"],
+                                          out["ok"]))
         assert bool(ok), "aggregate pointers must hit roots"
         n_c, nnz_c = int(n_c), int(nnz_c)
         if n_c >= cur_n * cfg.min_coarsen_ratio:
@@ -601,8 +722,8 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
                 break                 # stuck: neither mechanism coarsens
             continue
         specs.append(("agg", dict(n=cur_n, n_c=n_c, nnz_c=nnz_c, out=out)))
-        advance(out["co_row"], out["co_col"], out["co_val"],
-                out["co_deg"], n_c, nnz_c)
+        yield from advance(out["co_row"], out["co_col"], out["co_val"],
+                           out["co_deg"], n_c, nnz_c)
         if profile is not None:
             profile.append(("agg", specs[-1][1]["n"], tick() - t0))
 
@@ -624,8 +745,114 @@ def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
 
     L = laplacian_dense(level)
     n_c = level.n
-    (alpha,) = _fetch(jnp.mean(level.deg))
+    (alpha,) = yield ("fetch", (jnp.mean(level.deg),))
     alpha = float(alpha) or 1.0
     coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
     return Hierarchy(transfers=attach_ell_transfers(transfers, cfg),
                      lam_maxes=tuple(lam_maxes), coarse_inv=coarse_inv)
+
+
+def _exec_request(steps: SuperstepBuilders, req):
+    """Execute one plan request unbatched (the single-graph semantics)."""
+    if req[0] == "fetch":
+        return _fetch(*req[1])
+    _, method, params, args = req
+    return steps.step(method, params)(*args)
+
+
+def build_hierarchy_superstep(adj: COO, cfg, profile: list | None = None,
+                              steps: SuperstepBuilders | None = None):
+    """Compile-once device-resident setup. Same contract (and an
+    equivalent hierarchy: level sizes, kinds, PCG iteration counts) as
+    ``core.hierarchy.build_hierarchy_eager``.
+
+    ``profile``: optional list; when given, each constructed level appends
+    ``(kind, n_fine, seconds)`` — the bench's per-level wall time. Timing
+    forces a block per level, so leave it ``None`` outside benchmarks.
+
+    ``steps``: the super-step program factory; defaults to the serial
+    :class:`SuperstepBuilders`. ``repro.dist.setup`` passes its
+    mesh-tagged subclass, which runs the Alg 1/Alg 2 semiring reductions
+    sharded over the 2D edge partition — the plan (including the
+    per-level sync contract) is shared between the two.
+    """
+    _validate_setup_cfg(cfg)
+    if steps is None:
+        steps = SuperstepBuilders(cfg)
+    plan = _setup_plan(adj, cfg, profile)
+    payload = None
+    while True:
+        try:
+            req = plan.send(payload)
+        except StopIteration as stop:
+            return stop.value
+        payload = _exec_request(steps, req)
+
+
+def build_hierarchy_superstep_batch(adjs, cfg,
+                                    steps: SuperstepBuilders | None = None
+                                    ) -> list:
+    """Drive N setup plans in lockstep rounds: one program, N hierarchies.
+
+    Each round, requests for the same ``(step, bucket-key)`` address are
+    stacked along a new leading graph axis and executed as ONE
+    ``jax.vmap``-ped registry program, and every plan waiting on host
+    scalars joins ONE batched ``device_get``. Per-graph level-advance
+    decisions remain ordinary host control flow inside each plan, so
+    every returned hierarchy is **bit-identical** to its single-graph
+    ``build_hierarchy_superstep`` build. Graphs whose decisions diverge
+    (extra elimination round, different bucket trajectory) drop out of
+    the shared group for the affected rounds — they still build
+    correctly, just without the batching win; same-family batches under
+    a ``setup_bucket_floor`` stay grouped end to end.
+    """
+    adjs = list(adjs)
+    _validate_setup_cfg(cfg)
+    if steps is None:
+        steps = SuperstepBuilders(cfg)
+    plans = [_setup_plan(adj, cfg) for adj in adjs]
+    out: list = [None] * len(plans)
+    payload: list = [None] * len(plans)
+    live = list(range(len(plans)))
+    while live:
+        reqs = {}
+        nxt = []
+        for i in live:
+            try:
+                reqs[i] = plans[i].send(payload[i])
+                payload[i] = None
+                nxt.append(i)
+            except StopIteration as stop:
+                out[i] = stop.value
+        live = nxt
+
+        # Every plan waiting on host scalars shares ONE batched fetch.
+        fetchers = [i for i in live if reqs[i][0] == "fetch"]
+        if fetchers:
+            flat = [v for i in fetchers for v in reqs[i][1]]
+            vals = _fetch(*flat)
+            pos = 0
+            for i in fetchers:
+                k = len(reqs[i][1])
+                payload[i] = tuple(vals[pos:pos + k])
+                pos += k
+
+        # Same-(method, params) step requests run as one vmapped program.
+        groups: dict = {}
+        for i in live:
+            if reqs[i][0] == "step":
+                _, method, params, _args = reqs[i]
+                groups.setdefault((method, params), []).append(i)
+        for (method, params), members in groups.items():
+            if len(members) == 1:
+                i = members[0]
+                payload[i] = steps.step(method, params)(*reqs[i][3])
+                continue
+            n_args = len(reqs[members[0]][3])
+            stacked = tuple(jnp.stack([reqs[i][3][a] for i in members])
+                            for a in range(n_args))
+            outs = steps.step(method, params, batch=len(members))(*stacked)
+            for slot, i in enumerate(members):
+                payload[i] = jax.tree_util.tree_map(
+                    lambda x, s=slot: x[s], outs)
+    return out

@@ -59,7 +59,8 @@ def _jacobi_ell(level, b: jax.Array, x: jax.Array, n_sweeps: int,
 
 
 def estimate_lambda_max(level: GraphLevel, n_iters: int = 15,
-                        seed: int = 0, n_valid=None) -> jax.Array:
+                        seed: int = 0, n_valid=None,
+                        v0: jax.Array | None = None) -> jax.Array:
     """Power iteration on D⁻¹L (setup-time; coarse estimate is fine).
 
     Like ``strength.relaxed_test_vectors``, the iteration state is padded
@@ -67,6 +68,15 @@ def estimate_lambda_max(level: GraphLevel, n_iters: int = 15,
     and reduction order), so the eager setup path and the bucket-padded
     super-steps produce the same estimate. ``n_valid``: real-vertex count
     (possibly traced) when ``level`` is itself already bucket-padded.
+
+    ``v0``: optional pre-drawn start vector of shape ``(pow2_bucket(n),)``
+    (must equal ``random.normal(PRNGKey(seed), ...)`` for the estimate to
+    be reproducible). The batched setup driver passes the vector in as a
+    program *argument*: drawn inside the program it is a trace-time
+    constant, and XLA folds/fuses the downstream masked reductions
+    differently in the unbatched and vmapped programs — the one spot
+    where batched setup was observed to drift from the looped path by an
+    ulp. As an argument both programs run the same runtime reduction.
     """
     from repro.core.graph import pow2_bucket
 
@@ -75,7 +85,8 @@ def estimate_lambda_max(level: GraphLevel, n_iters: int = 15,
     n_real = n if n_valid is None else n_valid
     row_ok = jnp.arange(n_pad) < n_real
     inv_d = jnp.pad(1.0 / jnp.maximum(level.deg, 1e-30), (0, n_pad - n))
-    v = jax.random.normal(jax.random.PRNGKey(seed), (n_pad,))
+    v = v0 if v0 is not None else jax.random.normal(
+        jax.random.PRNGKey(seed), (n_pad,))
     v = jnp.where(row_ok, v, 0)
     v = jnp.where(row_ok, v - jnp.sum(v) / n_real, 0)
 

@@ -25,7 +25,8 @@ import numpy as np
 
 from repro.core.cycles import CycleConfig
 from repro.core.hierarchy import (Hierarchy, SetupConfig, apply_cycle,
-                                  build_hierarchy, hierarchy_stats)
+                                  build_hierarchy, build_hierarchy_batch,
+                                  hierarchy_stats)
 from repro.core.krylov import (BlockSolveInfo, SolveInfo, pcg, pcg_block,
                                pcg_scanned)
 from repro.core.wda import pcg_iteration_work, wda
@@ -68,6 +69,36 @@ class LaplacianSolver:
         h = build_hierarchy(adj, setup_config)
         return LaplacianSolver(hierarchy=h, cycle_config=cycle_config, n=n,
                                perm=perm, inv_perm=inv_perm)
+
+    @staticmethod
+    def setup_batch(problems,
+                    setup_config: SetupConfig = SetupConfig(),
+                    cycle_config: CycleConfig = CycleConfig(),
+                    random_ordering: bool = True) -> "list[LaplacianSolver]":
+        """Batched :meth:`setup`: one vmapped super-step run, N solvers.
+
+        ``problems`` is a sequence of ``(n, rows, cols, vals)`` tuples.
+        Hierarchies are built through ``build_hierarchy_batch`` — graphs
+        whose levels land in the same capacity buckets share one compiled
+        program per level round — and each returned solver is
+        bit-identical to a looped :meth:`setup` of the same problem
+        (same relabeling seed, same hierarchy arrays).
+        """
+        preps, adjs = [], []
+        for n, rows, cols, vals in problems:
+            rows = np.asarray(rows)
+            cols = np.asarray(cols)
+            vals = np.asarray(vals, np.float32)
+            perm = inv_perm = None
+            if random_ordering:
+                rows, cols, perm, inv_perm = random_relabel(
+                    n, rows, cols, setup_config.seed)
+            preps.append((n, perm, inv_perm))
+            adjs.append(to_laplacian_coo(n, rows, cols, vals))
+        hs = build_hierarchy_batch(adjs, setup_config)
+        return [LaplacianSolver(hierarchy=h, cycle_config=cycle_config,
+                                n=n, perm=perm, inv_perm=inv_perm)
+                for h, (n, perm, inv_perm) in zip(hs, preps)]
 
     # ------------------------------------------------------------------
     def _to_internal(self, b):

@@ -1,0 +1,26 @@
+"""``repro.service`` — solver-as-a-service over the ``repro.api`` facade.
+
+The paper's setup phase is the expensive part of unsmoothed aggregation;
+this layer amortizes it across a *stream* of problems the way LAMG
+amortizes one hierarchy across many right-hand sides: pending setups are
+grouped by capacity-bucket signature into vmapped batches (one compiled
+super-step program builds N hierarchies), finished hierarchies live in a
+content-addressed :class:`~repro.api.cache.HierarchyCache`, and
+same-hierarchy requests ride one blocked multi-RHS PCG solve.
+
+    from repro.service import SolverService
+
+    svc = SolverService()
+    t1 = svc.submit(problem_a, b1)
+    t2 = svc.submit(problem_a, b2, tol=1e-6)     # same hierarchy as t1
+    t3 = svc.submit(problem_b, b3)               # same bucket: batched setup
+    svc.flush()                                  # deterministic, synchronous
+    x1, result1 = t1.result()
+
+See ``examples/solve_service.py`` for a runnable tour and
+``benchmarks/service_bench.py`` for the throughput numbers.
+"""
+
+from repro.service.service import ServiceError, SolverService, Ticket
+
+__all__ = ["ServiceError", "SolverService", "Ticket"]

@@ -1,0 +1,270 @@
+"""``SolverService``: admission, batching, and dispatch for solve requests.
+
+A request is ``(Problem, RHS block)`` plus optional per-request stopping
+overrides. The service is a **deterministic synchronous driver** — no
+threads, no executors: ``submit()`` only enqueues and returns a
+:class:`Ticket`; ``flush()`` does all the work in a fixed order
+(setup-by-bucket, then solve-by-fingerprint, both sorted), so a given
+request stream always produces the same batches, the same compiled
+programs, and the same answers.
+
+``flush()`` runs two passes:
+
+1. **Setup pass** — requests whose hierarchy is not in the cache are
+   grouped by ``Problem.bucket_signature()``; groups of two or more
+   same-bucket problems on the ``single`` superstep backend build through
+   ``LaplacianSolver.setup_batch`` (one vmapped super-step run, N
+   hierarchies — bit-identical to looped setups), capped at
+   ``max_batch`` per program; everything else builds looped. All results
+   land in the cache, so a re-submitted problem never sets up again.
+2. **Solve pass** — requests are grouped by hierarchy (cache key); each
+   group's RHS columns concatenate into one ``solve_block`` call with
+   per-column tol/max-iters arrays (``pcg_block`` accepts both), and the
+   lockstep history is sliced back into per-request uniform
+   :class:`~repro.api.result.SolveResult`\\ s.
+
+``stats()`` surfaces the serving counters: queue depth, setup batch
+occupancy, cache hit rate, and end-to-end request latency percentiles.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api.backends import _EagerHandle
+from repro.api.cache import HierarchyCache
+from repro.api.options import SolverOptions
+from repro.api.problem import Problem
+from repro.api.registry import get_backend, resolve_backend
+from repro.api.result import SolveResult, result_from_history
+
+# Backends whose solve_block accepts per-column (k,) tol / max-iters
+# arrays; other backends get one solve_block call per request.
+_BLOCKABLE = ("single", "serial_ref")
+
+
+class ServiceError(RuntimeError):
+    """A service request was used before it was served."""
+
+
+class Ticket:
+    """A submitted request; resolved by the next ``flush()``.
+
+    ``done()`` says whether the request has been served; ``result()``
+    returns ``(x, SolveResult)`` with ``x`` shaped like the submitted
+    ``b`` (a 1-D RHS comes back 1-D).
+    """
+
+    def __init__(self, seq: int, problem: Problem, B: np.ndarray,
+                 single: bool, tol: float, max_iters: int, key: tuple):
+        self.seq = seq
+        self.problem = problem
+        self._B = B
+        self._single = single
+        self.tol = tol
+        self.max_iters = max_iters
+        self._key = key
+        self._submitted = time.perf_counter()
+        self._x: np.ndarray | None = None
+        self._result: SolveResult | None = None
+
+    @property
+    def n_rhs(self) -> int:
+        return self._B.shape[1]
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def result(self) -> tuple[np.ndarray, SolveResult]:
+        if self._result is None:
+            raise ServiceError(
+                "request not served yet — call SolverService.flush() first")
+        return self._x, self._result
+
+
+class SolverService:
+    """Admit ``(Problem, RHS)`` requests; batch setups and solves.
+
+    ``options``/``backend``/``mesh`` fix the solver configuration for
+    every request (one service = one configuration; run several services
+    for several configurations — they can share a ``cache``). ``cache``
+    defaults to a private :class:`HierarchyCache`; pass the facade's
+    :func:`~repro.api.facade.default_cache` to share hierarchies with
+    direct ``repro.api.setup()`` callers. ``max_batch`` caps how many
+    same-bucket setups fuse into one vmapped program.
+    """
+
+    def __init__(self, options: SolverOptions | None = None,
+                 backend: str = "auto", mesh=None,
+                 cache: HierarchyCache | None = None, max_batch: int = 8):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.options = options or SolverOptions()
+        self.backend = resolve_backend(backend, mesh, self.options)
+        self.mesh = mesh
+        self.cache = cache if cache is not None else HierarchyCache()
+        self.max_batch = max_batch
+        self._pending: list[Ticket] = []
+        self._seq = 0
+        self._latencies: list[float] = []
+        self._c = dict(requests=0, served=0, flushes=0,
+                       setups_batched=0, setups_looped=0,
+                       setup_batches=0, solve_blocks=0,
+                       rhs_columns=0, solve_seconds=0.0,
+                       setup_seconds=0.0)
+
+    # ------------------------------------------------------------------
+    def submit(self, problem: Problem, b, *, tol: float | None = None,
+               max_iters: int | None = None) -> Ticket:
+        """Enqueue L x = b. ``b``: (n,) or (n, k). Returns a Ticket."""
+        if not isinstance(problem, Problem):
+            raise TypeError(
+                f"submit expects a repro.api.Problem, got "
+                f"{type(problem).__name__}")
+        b = np.asarray(b)
+        single = b.ndim == 1
+        B = b[:, None] if single else b
+        if B.ndim != 2 or B.shape[0] != problem.n:
+            raise ValueError(
+                f"b must have shape ({problem.n},) or ({problem.n}, k), "
+                f"got {b.shape}")
+        t = Ticket(
+            self._seq, problem, B, single,
+            self.options.tol if tol is None else float(tol),
+            self.options.max_iters if max_iters is None else int(max_iters),
+            HierarchyCache.key(problem, self.options, self.backend,
+                               self.mesh))
+        self._seq += 1
+        self._c["requests"] += 1
+        self._pending.append(t)
+        return t
+
+    # ------------------------------------------------------------------
+    def flush(self) -> list[Ticket]:
+        """Serve every pending request; returns the served tickets."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return []
+        self._c["flushes"] += 1
+        self._setup_pass(pending)
+        self._solve_pass(pending)
+        now = time.perf_counter()
+        self._latencies.extend(now - t._submitted for t in pending)
+        self._c["served"] += len(pending)
+        return pending
+
+    # ------------------------------------------------------------------
+    def _setup_pass(self, pending: list[Ticket]) -> None:
+        """Build every missing hierarchy, vmap-batching same-bucket ones."""
+        missing: dict[tuple, Ticket] = {}
+        probed: set = set()
+        for t in pending:
+            if t._key in probed:
+                continue
+            probed.add(t._key)
+            # One counted lookup per unique hierarchy per flush: the
+            # cache's hit/miss stats then read as admission outcomes.
+            if self.cache.get(t._key) is None:
+                missing[t._key] = t
+        if not missing:
+            return
+        t0 = time.perf_counter()
+        can_batch = (self.backend == "single"
+                     and self.options.setup_mode == "superstep")
+        buckets: dict[tuple, list[Ticket]] = {}
+        for key, t in sorted(missing.items(), key=lambda kv: kv[1].seq):
+            sig = t.problem.bucket_signature(self.options.setup_bucket_floor)
+            buckets.setdefault(sig, []).append(t)
+        for sig in sorted(buckets):
+            group = buckets[sig]
+            while group:
+                chunk, group = group[:self.max_batch], group[self.max_batch:]
+                if can_batch and len(chunk) > 1:
+                    self._setup_batched(chunk)
+                else:
+                    for t in chunk:
+                        self.cache.put(t._key, get_backend(self.backend)(
+                            t.problem, self.options, self.mesh))
+                        self._c["setups_looped"] += 1
+        self._c["setup_seconds"] += time.perf_counter() - t0
+
+    def _setup_batched(self, chunk: list[Ticket]) -> None:
+        """One vmapped super-step run -> len(chunk) cached handles."""
+        from repro.core.solver import LaplacianSolver
+
+        solvers = LaplacianSolver.setup_batch(
+            [(t.problem.n, t.problem.rows, t.problem.cols,
+              t.problem.vals.astype(np.float32)) for t in chunk],
+            setup_config=self.options.setup_config(),
+            cycle_config=self.options.cycle_config(),
+            random_ordering=self.options.random_ordering)
+        for t, solver in zip(chunk, solvers):
+            self.cache.put(t._key, _EagerHandle(solver, self.options))
+        self._c["setup_batches"] += 1
+        self._c["setups_batched"] += len(chunk)
+
+    # ------------------------------------------------------------------
+    def _solve_pass(self, pending: list[Ticket]) -> None:
+        """Group same-hierarchy requests into blocked solves."""
+        groups: dict[tuple, list[Ticket]] = {}
+        for t in pending:
+            groups.setdefault(t._key, []).append(t)
+        for key in sorted(groups):
+            tickets = sorted(groups[key], key=lambda t: t.seq)
+            handle = self.cache.peek(key)
+            if self.backend in _BLOCKABLE:
+                self._solve_merged(handle, tickets)
+            else:
+                for t in tickets:
+                    self._solve_merged(handle, [t])
+
+    def _solve_merged(self, handle, tickets: list[Ticket]) -> None:
+        B = np.concatenate([t._B for t in tickets], axis=1)
+        ks = [t.n_rhs for t in tickets]
+        if len(tickets) == 1:
+            tol, max_iters = tickets[0].tol, tickets[0].max_iters
+        else:
+            tol = np.concatenate(
+                [np.full(k, t.tol) for t, k in zip(tickets, ks)])
+            max_iters = np.concatenate(
+                [np.full(k, t.max_iters, np.int64)
+                 for t, k in zip(tickets, ks)])
+        t0 = time.perf_counter()
+        X, norms, iters = handle.solve_block(B, tol, max_iters)
+        seconds = time.perf_counter() - t0
+        self._c["solve_blocks"] += 1
+        self._c["rhs_columns"] += B.shape[1]
+        self._c["solve_seconds"] += seconds
+        lo = 0
+        for t, k in zip(tickets, ks):
+            sl = slice(lo, lo + k)
+            lo += k
+            # Wall-clock attribution: the block ran once; each request
+            # reports its share by column count.
+            t._result = result_from_history(
+                self.backend, norms[:, sl], iters[sl], t.tol,
+                handle.work_per_iteration, 0.0,
+                seconds * (k / B.shape[1]))
+            X_t = np.asarray(X[:, sl])
+            t._x = X_t[:, 0] if t._single else X_t
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Serving counters: queue/batching/cache/latency."""
+        c = dict(self._c)
+        lat = np.asarray(self._latencies, np.float64)
+        c.update(
+            queue_depth=len(self._pending),
+            batch_occupancy=(self._c["setups_batched"]
+                             / self._c["setup_batches"]
+                             if self._c["setup_batches"] else 0.0),
+            cache=self.cache.stats(),
+            latency_seconds={
+                "p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
+                "p90": float(np.percentile(lat, 90)) if lat.size else 0.0,
+                "p99": float(np.percentile(lat, 99)) if lat.size else 0.0,
+                "mean": float(lat.mean()) if lat.size else 0.0,
+            })
+        return c

@@ -1,0 +1,292 @@
+"""Fingerprints, the hierarchy cache, and the serving layer.
+
+Pins the PR's api/service contracts:
+
+* ``Problem.fingerprint()`` is a content address — stable under edge
+  reordering, sensitive to weights, topology, ``n`` and the storage
+  dtype (float-dtype drift must change the digest),
+* ``HierarchyCache`` is an LRU with honest hit/miss/eviction counters,
+* a second ``setup()``/``solve()`` on an equal Problem does ZERO setup
+  work (asserted with the super-step compile/host-sync counters),
+* ``SolverService`` answers match direct facade solves bitwise, rides
+  one ``solve_block`` for same-hierarchy requests (per-column tol), and
+  batches same-bucket setups.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (HierarchyCache, Problem, SolverOptions, setup, solve)
+from repro.core import setup_step as ss
+from repro.graphs.generators import (barabasi_albert, ensure_connected,
+                                     grid_2d)
+from repro.service import ServiceError, SolverService
+
+OPTS = SolverOptions(coarsest_size=32, setup_bucket_floor=2048)
+
+
+def _edges(name, seed=0):
+    if name == "grid_2d":
+        return ensure_connected(*grid_2d(16, 16, weighted=True, seed=seed))
+    return ensure_connected(*barabasi_albert(300, m=3, seed=seed,
+                                             weighted=True))
+
+
+def _problem(name, seed=0):
+    return Problem.from_edges(*_edges(name, seed))
+
+
+# ----------------------------------------------------------------------------
+class TestFingerprint:
+    def test_stable_and_memoized(self):
+        p = _problem("grid_2d")
+        assert p.fingerprint() == p.fingerprint()
+        assert len(p.fingerprint()) == 64
+
+    def test_order_insensitive(self):
+        n, r, c, v = _edges("grid_2d")
+        r, c, v = np.asarray(r), np.asarray(c), np.asarray(v)
+        perm = np.random.default_rng(3).permutation(len(r))
+        assert (Problem.from_edges(n, r, c, v).fingerprint()
+                == Problem.from_edges(n, r[perm], c[perm],
+                                      v[perm]).fingerprint())
+
+    def test_rejects_dtype_drift(self):
+        # The satellite contract: the SAME numeric weights under a
+        # different storage-dtype policy must hash differently — a
+        # float64 pipeline silently feeding float32-rounded weights
+        # would otherwise collide with the true float64 problem.
+        n, r, c, v = _edges("grid_2d")
+        p32 = Problem.from_edges(n, r, c, v, dtype="float32")
+        p64 = Problem.from_edges(n, r, c, np.asarray(v, np.float64),
+                                 dtype="float64")
+        assert p32.fingerprint() != p64.fingerprint()
+
+    def test_sensitive_to_content(self):
+        n, r, c, v = _edges("grid_2d")
+        base = Problem.from_edges(n, r, c, v).fingerprint()
+        assert Problem.from_edges(n + 1, r, c, v).fingerprint() != base
+        assert (Problem.from_edges(n, r, c, 2 * np.asarray(v)).fingerprint()
+                != base)
+        assert _problem("grid_2d", seed=1).fingerprint() != base
+
+    def test_bucket_signature_uses_floor(self):
+        p = _problem("grid_2d")
+        nb, eb = p.bucket_signature()
+        assert nb >= p.n and eb >= len(p.rows)
+        assert p.bucket_signature(2048) == (2048, 2048)
+
+
+# ----------------------------------------------------------------------------
+class TestHierarchyCache:
+    def test_lru_eviction(self):
+        c = HierarchyCache(capacity=2)
+        c.put("a", 1), c.put("b", 2)
+        assert c.get("a") == 1          # refreshes "a": "b" is now LRU
+        c.put("c", 3)
+        assert "b" not in c and "a" in c and "c" in c
+        st = c.stats()
+        assert st["evictions"] == 1 and st["size"] == 2
+
+    def test_counters_and_peek(self):
+        c = HierarchyCache(capacity=4)
+        assert c.get("x") is None
+        c.put("x", 42)
+        assert c.peek("x") == 42 and c.peek("y") is None
+        assert c.get("x") == 42
+        st = c.stats()
+        assert (st["hits"], st["misses"]) == (1, 1) and st["hit_rate"] == 0.5
+        c.clear()
+        assert len(c) == 0 and c.stats()["misses"] == 1
+
+    def test_rejects_bad_capacity(self):
+        with pytest.raises(ValueError):
+            HierarchyCache(capacity=0)
+
+
+# ----------------------------------------------------------------------------
+class TestFacadeCache:
+    def test_second_setup_zero_work(self):
+        cache = HierarchyCache()
+        p = _problem("grid_2d")
+        s1 = setup(p, OPTS, backend="single", cache=cache)
+        assert s1.setup_seconds > 0
+        # an equal Problem built from a reshuffled edge list
+        n, r, c, v = _edges("grid_2d")
+        perm = np.random.default_rng(5).permutation(len(r))
+        p2 = Problem.from_edges(n, np.asarray(r)[perm], np.asarray(c)[perm],
+                                np.asarray(v)[perm])
+        ss.reset_counters()
+        s2 = setup(p2, OPTS, backend="single", cache=cache)
+        c2 = ss.counters()
+        assert s2.setup_seconds == 0.0
+        assert sum(v["calls"] for v in c2["steps"].values()) == 0
+        assert c2["host_syncs"] == 0
+        b = np.random.default_rng(0).standard_normal(p.n).astype(np.float32)
+        x1, _ = s1.solve(b)
+        x2, _ = s2.solve(b)
+        np.testing.assert_array_equal(x1, x2)
+        assert cache.stats()["hits"] == 1
+
+    def test_one_shot_solve_threads_cache(self):
+        cache = HierarchyCache()
+        p = _problem("grid_2d", seed=1)
+        b = np.random.default_rng(1).standard_normal(p.n).astype(np.float32)
+        x1, r1 = solve(p, b, OPTS, backend="single", cache=cache)
+        ss.reset_counters()
+        x2, r2 = solve(p, b, OPTS, backend="single", cache=cache)
+        assert sum(v["calls"] for v in ss.counters()["steps"].values()) == 0
+        assert r2.setup_seconds == 0.0 and r1.setup_seconds > 0
+        np.testing.assert_array_equal(x1, x2)
+
+    def test_cache_false_bypasses(self):
+        p = _problem("grid_2d")
+        cache = HierarchyCache()
+        setup(p, OPTS, backend="single", cache=cache)
+        s = setup(p, OPTS, backend="single", cache=False)
+        assert s.setup_seconds > 0
+        assert cache.stats()["hits"] == 0
+
+    def test_options_change_misses(self):
+        cache = HierarchyCache()
+        p = _problem("grid_2d")
+        setup(p, OPTS, backend="single", cache=cache)
+        import dataclasses
+        setup(p, dataclasses.replace(OPTS, pre_sweeps=1), backend="single",
+              cache=cache)
+        st = cache.stats()
+        assert st["misses"] == 2 and st["size"] == 2
+
+
+# ----------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def served():
+    """One service, a mixed request stream, one flush — shared by tests."""
+    svc = SolverService(options=OPTS, backend="single", max_batch=8)
+    rng = np.random.default_rng(0)
+    pa, pb, pc = (_problem("grid_2d", 0), _problem("grid_2d", 1),
+                  _problem("barabasi_albert", 0))
+    reqs = [
+        (pa, rng.standard_normal(pa.n).astype(np.float32), {}),
+        (pa, rng.standard_normal((pa.n, 3)).astype(np.float32),
+         dict(tol=1e-6)),
+        (pb, rng.standard_normal(pb.n).astype(np.float32), {}),
+        (pc, rng.standard_normal(pc.n).astype(np.float32), {}),
+    ]
+    tickets = [svc.submit(p, b, **kw) for p, b, kw in reqs]
+    svc.flush()
+    return svc, reqs, tickets
+
+
+class TestSolverService:
+    def test_results_match_direct_solves(self, served):
+        svc, reqs, tickets = served
+        for (p, b, kw), t in zip(reqs, tickets):
+            x, res = t.result()
+            s = setup(p, OPTS, backend="single", cache=False)
+            xd, rd = s.solve(b, **kw)
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(xd))
+            assert res.iters == rd.iters
+            assert res.converged and res.backend == "single"
+            assert x.shape == np.asarray(b).shape
+
+    def test_same_problem_rides_one_block(self, served):
+        svc, reqs, tickets = served
+        st = svc.stats()
+        # 4 requests, 3 distinct problems -> 3 solve_block calls (the two
+        # problem-a requests merged, 1 + 3 = 4 of the 6 total columns).
+        assert st["solve_blocks"] == 3
+        assert st["rhs_columns"] == 6
+        assert tickets[0].result()[1].n_rhs == 1
+        assert tickets[1].result()[1].n_rhs == 3
+
+    def test_same_bucket_setups_batched(self, served):
+        svc, _, _ = served
+        st = svc.stats()
+        # the shared floor puts all three problems in one bucket group
+        assert st["setup_batches"] == 1 and st["setups_batched"] == 3
+        assert st["setups_looped"] == 0 and st["batch_occupancy"] == 3.0
+
+    def test_repeat_stream_hits_cache_no_setup_work(self, served):
+        svc, reqs, tickets = served
+        before = svc.cache.stats()
+        ss.reset_counters()
+        t = svc.submit(reqs[0][0], reqs[0][1])
+        svc.flush()
+        c = svc.stats()["cache"]
+        assert sum(v["calls"] for v in ss.counters()["steps"].values()) == 0
+        assert c["hits"] == before["hits"] + 1
+        assert c["misses"] == before["misses"]
+        np.testing.assert_array_equal(t.result()[0], tickets[0].result()[0])
+
+    def test_stats_shape(self, served):
+        svc, _, _ = served
+        st = svc.stats()
+        assert st["queue_depth"] == 0
+        assert st["served"] == st["requests"]
+        lat = st["latency_seconds"]
+        assert lat["p50"] > 0 and lat["p99"] >= lat["p50"] >= 0
+
+    def test_ticket_before_flush_raises(self):
+        svc = SolverService(options=OPTS, backend="single")
+        t = svc.submit(_problem("grid_2d"),
+                       np.zeros(_problem("grid_2d").n, np.float32))
+        assert not t.done()
+        with pytest.raises(ServiceError):
+            t.result()
+
+    def test_submit_validation(self):
+        svc = SolverService(options=OPTS, backend="single")
+        with pytest.raises(TypeError):
+            svc.submit("nope", np.zeros(4))
+        p = _problem("grid_2d")
+        with pytest.raises(ValueError):
+            svc.submit(p, np.zeros(p.n + 1, np.float32))
+        with pytest.raises(ValueError):
+            SolverService(max_batch=0)
+
+    def test_flush_empty_is_noop(self):
+        svc = SolverService(options=OPTS, backend="single")
+        assert svc.flush() == []
+        assert svc.stats()["flushes"] == 0
+
+
+# ----------------------------------------------------------------------------
+class TestPerColumnStopping:
+    def test_scalar_and_array_tols_agree(self, served):
+        svc, reqs, _ = served
+        p, b, _ = reqs[0]
+        s = setup(p, OPTS, backend="single", cache=svc.cache)
+        sv = s._handle._solver
+        B = np.stack([b, 2 * b], axis=1)
+        X0, i0 = sv.solve_block(B, tol=1e-8, maxiter=100)
+        X1, i1 = sv.solve_block(B, tol=np.full(2, 1e-8),
+                                maxiter=np.full(2, 100, np.int64))
+        np.testing.assert_array_equal(np.asarray(X0), np.asarray(X1))
+        np.testing.assert_array_equal(i0.iters, i1.iters)
+
+    def test_mixed_tols_match_per_column_runs(self, served):
+        svc, reqs, _ = served
+        p, b, _ = reqs[0]
+        s = setup(p, OPTS, backend="single", cache=svc.cache)
+        sv = s._handle._solver
+        B = np.stack([b, b], axis=1)
+        X, info = sv.solve_block(B, tol=np.array([1e-3, 1e-8]), maxiter=100)
+        Xl, il = sv.solve_block(b[:, None], tol=1e-3, maxiter=100)
+        Xt, it = sv.solve_block(b[:, None], tol=1e-8, maxiter=100)
+        assert info.iters[0] == il.iters[0] < it.iters[0] == info.iters[1]
+        np.testing.assert_array_equal(np.asarray(X[:, 0]),
+                                      np.asarray(Xl[:, 0]))
+        np.testing.assert_array_equal(np.asarray(X[:, 1]),
+                                      np.asarray(Xt[:, 0]))
+
+    def test_per_column_maxiter_caps(self, served):
+        svc, reqs, _ = served
+        p, b, _ = reqs[0]
+        s = setup(p, OPTS, backend="single", cache=svc.cache)
+        sv = s._handle._solver
+        B = np.stack([b, b], axis=1)
+        X, info = sv.solve_block(B, tol=1e-30,
+                                 maxiter=np.array([2, 5], np.int64))
+        assert info.iters[0] == 2 and info.iters[1] == 5
+        assert not info.converged.any()

@@ -1,0 +1,142 @@
+"""Batched vmapped setup (``build_hierarchy_batch``) equivalence.
+
+Pins the PR's core contract: building N same-bucket hierarchies through
+one vmapped super-step run is **bit-identical** to N looped
+``build_hierarchy`` calls — same level sizes and kinds, same aggregate
+ids, same transfer arrays, same λmax estimates, and therefore the same
+PCG trajectories — and a second same-bucket batch compiles nothing new.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import setup_step as ss
+from repro.core.hierarchy import (SetupConfig, build_hierarchy,
+                                  build_hierarchy_batch, hierarchy_stats)
+from repro.core.solver import LaplacianSolver
+from repro.graphs.generators import (barabasi_albert, ensure_connected,
+                                     grid_2d, to_laplacian_coo)
+
+# A shared power-of-two floor puts every graph's levels in the same
+# capacity buckets — the serving-layer configuration.
+CFG = SetupConfig(coarsest_size=32, setup_bucket_floor=2048)
+
+SPECS = [("grid_2d", 0), ("grid_2d", 1),
+         ("barabasi_albert", 0), ("barabasi_albert", 1)]
+
+
+def _graph(name, seed=0):
+    if name == "grid_2d":
+        return ensure_connected(*grid_2d(16, 16, weighted=True, seed=seed))
+    return ensure_connected(*barabasi_albert(300, m=3, seed=seed,
+                                             weighted=True))
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return [_graph(name, seed) for name, seed in SPECS]
+
+
+@pytest.fixture(scope="module")
+def adjs(graphs):
+    return [to_laplacian_coo(n, r, c, v) for n, r, c, v in graphs]
+
+
+@pytest.fixture(scope="module")
+def solo(adjs):
+    return [build_hierarchy(a, CFG) for a in adjs]
+
+
+@pytest.fixture(scope="module")
+def batch(adjs):
+    return build_hierarchy_batch(adjs, CFG)
+
+
+def _assert_trees_bitwise(ha, hb):
+    la = jax.tree_util.tree_leaves(ha)
+    lb = jax.tree_util.tree_leaves(hb)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        xa, ya = np.atleast_1d(np.asarray(x)), np.atleast_1d(np.asarray(y))
+        assert xa.shape == ya.shape and xa.dtype == ya.dtype
+        if xa.dtype.kind == "f":
+            xa, ya = xa.view(np.uint8), ya.view(np.uint8)
+        np.testing.assert_array_equal(xa, ya)
+
+
+class TestBatchEquivalence:
+    def test_level_signatures_match(self, solo, batch):
+        for hs, hb in zip(solo, batch):
+            assert ([(r["kind"], r["n"], r["nnz"])
+                     for r in hierarchy_stats(hs)["levels"]]
+                    == [(r["kind"], r["n"], r["nnz"])
+                        for r in hierarchy_stats(hb)["levels"]])
+
+    def test_hierarchies_bitwise_identical(self, solo, batch):
+        # Covers aggregate ids, transfer/adjacency arrays, degrees, the
+        # coarse dense inverse and the λmax estimates in one sweep: every
+        # array leaf of the hierarchy pytree must match to the bit.
+        for hs, hb in zip(solo, batch):
+            _assert_trees_bitwise(hs, hb)
+
+    def test_pcg_trajectories_match(self, graphs, solo, batch):
+        from repro.core.cycles import CycleConfig
+
+        for (n, *_), hs, hb in zip(graphs, solo, batch):
+            rng = np.random.default_rng(7)
+            b = rng.standard_normal(n).astype(np.float32)
+            xs, is_ = LaplacianSolver(hs, CycleConfig(), n).solve(b)
+            xb, ib = LaplacianSolver(hb, CycleConfig(), n).solve(b)
+            assert is_.iters == ib.iters
+            np.testing.assert_array_equal(np.asarray(xs), np.asarray(xb))
+
+    def test_batch_of_one_matches(self, adjs, solo):
+        (hb,) = build_hierarchy_batch(adjs[:1], CFG)
+        _assert_trees_bitwise(solo[0], hb)
+
+
+class TestBatchCompileReuse:
+    def test_second_batch_zero_new_compiles(self, adjs, batch):
+        ss.reset_counters()
+        again = build_hierarchy_batch(adjs, CFG)
+        c = ss.counters()
+        compiles = {k: v["compiles"] for k, v in c["steps"].items()
+                    if v["compiles"]}
+        assert compiles == {}, f"second batch recompiled: {compiles}"
+        for hs, hb in zip(batch, again):
+            _assert_trees_bitwise(hs, hb)
+
+    def test_batch_amortizes_host_syncs(self, adjs, batch):
+        # The lockstep driver merges every plan's decision fetch into one
+        # device_get per round: a whole batch costs about as many syncs
+        # as ONE graph's setup, not N of them.
+        ss.reset_counters()
+        build_hierarchy_batch(adjs, CFG)
+        batch_syncs = ss.counters()["host_syncs"]
+        ss.reset_counters()
+        build_hierarchy(adjs[0], CFG)
+        one_solo_syncs = ss.counters()["host_syncs"]
+        assert batch_syncs <= one_solo_syncs + 4
+
+
+class TestBatchFallbacks:
+    def test_eager_mode_loops(self, adjs):
+        cfg = dataclasses.replace(CFG, setup_mode="eager")
+        hs = build_hierarchy_batch(adjs[:2], cfg)
+        for a, hb in zip(adjs[:2], hs):
+            _assert_trees_bitwise(build_hierarchy(a, cfg), hb)
+
+    def test_empty_batch(self):
+        assert build_hierarchy_batch([], CFG) == []
+
+    def test_solver_setup_batch_matches_looped(self, graphs):
+        problems = [(n, r, c, v) for n, r, c, v in graphs[:2]]
+        batched = LaplacianSolver.setup_batch(problems, setup_config=CFG)
+        for (n, r, c, v), sb in zip(problems, batched):
+            s = LaplacianSolver.setup(n, r, c, v, setup_config=CFG)
+            assert s.n == sb.n
+            np.testing.assert_array_equal(s.perm, sb.perm)
+            _assert_trees_bitwise(s.hierarchy, sb.hierarchy)
