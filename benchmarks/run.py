@@ -211,6 +211,32 @@ def main(argv=None) -> None:
                   sv["warm_columns_per_s"])
         print(f"  (schema {out['schema']} -> {path})")
 
+    if want("spectral"):
+        from benchmarks.spectral_bench import bench_spectral, write_root_json
+
+        out = bench_spectral(scale=scale)
+        _save("spectral", out)
+        path = write_root_json(out)
+        print("\n== spectral: preconditioned vs unpreconditioned LOBPCG "
+              "(k smallest nontrivial pairs) ==")
+        for r in out["eigensolve"]:
+            pre, unp = r["preconditioned"], r["unpreconditioned"]
+            print(f"  {r['graph']:>22s} n={r['n']:>6d} k={r['k']}: "
+                  f"precond={pre['iters']:>3d} it "
+                  f"({pre['converged']}/{r['k']} conv, "
+                  f"occ={pre['solve_block_occupancy']:.2f}) "
+                  f"unprec={unp['iters']:>3d} it "
+                  f"ratio={r['iters_ratio']:.1f}x "
+                  f"(target >=3x: {r['contract_met']})")
+            _emit_csv(f"spectral_{r['graph']}_precond_iters",
+                      pre["wall_seconds"] * 1e6, pre["iters"])
+        em = out["embeddings"]
+        print(f"  embeddings (warm hierarchy, {em['graph']}): "
+              f"{em['embeddings_per_s']:.2f}/s "
+              f"({em['nodes_per_s']:.0f} nodes/s)")
+        _emit_csv("spectral_embeddings_per_s", 0, em["embeddings_per_s"])
+        print(f"  (schema {out['schema']} -> {path})")
+
     if want("kernels"):
         from benchmarks.kernels_bench import bench_kernels
 

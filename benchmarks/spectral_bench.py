@@ -1,0 +1,181 @@
+"""Spectral-application benchmark: preconditioned vs unpreconditioned LOBPCG.
+
+PR 7 added ``repro.spectral`` — eigensolves, embeddings, clustering,
+effective resistance — all riding one cached multigrid hierarchy through
+the ``repro.api`` facade. This benchmark records the numbers that justify
+the layer:
+
+* **iteration counts** — outer LOBPCG iterations to ``tol`` with the
+  multigrid preconditioner vs without, on the paper's motivating graph
+  family (2D grid) and a scale-free graph (Barabási–Albert). The contract:
+  preconditioned converges in **<= 1/3** the unpreconditioned iterations.
+* **residual trajectories** — per-iteration max relative residual for both
+  runs, so convergence curves can be plotted straight from the JSON.
+* **embeddings/s** — warm-hierarchy spectral-embedding throughput (the
+  cache makes every solve after the first ride a prebuilt hierarchy).
+* **solve-block occupancy** — average fraction of the k RHS columns still
+  active per blocked preconditioner application (soft locking means late
+  applications carry converged-and-zeroed columns; occupancy quantifies
+  the wasted column bandwidth the fixed block shape costs).
+
+Running this module directly — or via ``benchmarks/run.py --only
+spectral`` — writes the stable-schema ``BENCH_spectral.json`` at the repo
+root. ``--smoke`` shrinks sizes for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+SCHEMA = "repro.bench.spectral/v1"
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_spectral.json")
+
+
+def _graphs(smoke: bool):
+    from repro.api import Problem
+    from repro.graphs.generators import (barabasi_albert, ensure_connected,
+                                         grid_2d)
+
+    side = 24 if smoke else 64
+    nba = 512 if smoke else 4096
+    out = []
+    n, r, c, v = ensure_connected(*grid_2d(side, side))
+    out.append((f"grid_2d_{side}x{side}", Problem.from_edges(n, r, c, v)))
+    n, r, c, v = ensure_connected(*barabasi_albert(nba, m=4, seed=0))
+    out.append((f"barabasi_albert_{nba}", Problem.from_edges(n, r, c, v)))
+    return out
+
+
+def _trajectory(res) -> list:
+    """Per-iteration max relative residual (plottable convergence curve)."""
+    hist = np.asarray(res.residual_norms, np.float64)
+    r0 = np.maximum(hist[0], 1e-300)
+    return [float(x) for x in (hist / r0[None, :]).max(axis=1)]
+
+
+def bench_eigensolve(problem, k: int, tol: float, max_unprec: int,
+                     cache=None) -> dict:
+    """Preconditioned vs unpreconditioned LOBPCG on one graph."""
+    from repro.spectral import lobpcg
+
+    t0 = time.perf_counter()
+    pre = lobpcg(problem, k, tol=tol, max_iters=200, cache=cache)
+    pre_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    unp = lobpcg(problem, k, tol=tol, max_iters=max_unprec,
+                 precondition=False)
+    unp_s = time.perf_counter() - t0
+
+    occupancy = (pre.precond_columns / (pre.precond_solves * k)
+                 if pre.precond_solves else 0.0)
+    return dict(
+        n=int(problem.n),
+        k=k,
+        tol=tol,
+        preconditioned=dict(
+            iters=int(pre.iters),
+            converged=int(pre.converged.sum()),
+            wall_seconds=pre_s,
+            setup_seconds=pre.setup_seconds,
+            backend=pre.backend,
+            eigenvalues=[float(x) for x in pre.eigenvalues],
+            precond_solves=int(pre.precond_solves),
+            precond_columns=int(pre.precond_columns),
+            solve_block_occupancy=occupancy,
+            residual_trajectory=_trajectory(pre),
+        ),
+        unpreconditioned=dict(
+            iters=int(unp.iters),
+            converged=int(unp.converged.sum()),
+            wall_seconds=unp_s,
+            max_iters=max_unprec,
+            residual_trajectory=_trajectory(unp),
+        ),
+        iters_ratio=unp.iters / max(pre.iters, 1),
+        # contract: preconditioned converges in <= 1/3 the iterations
+        # (unpreconditioned runs are capped, so the ratio is a lower bound
+        # whenever unpreconditioned fails to converge by max_iters).
+        contract_met=bool(pre.converged.all()
+                          and pre.iters * 3 <= unp.iters),
+    )
+
+
+def bench_embeddings(problem, k: int, repeats: int, cache=None) -> dict:
+    """Warm-hierarchy spectral-embedding throughput."""
+    from repro.spectral import spectral_embedding
+
+    # cold call builds (or reuses) the hierarchy and compiles the solves
+    spectral_embedding(problem, k, cache=cache, seed=0)
+    t0 = time.perf_counter()
+    for s in range(1, repeats + 1):
+        emb = spectral_embedding(problem, k, cache=cache, seed=s)
+    warm_s = time.perf_counter() - t0
+    return dict(
+        k=k,
+        repeats=repeats,
+        warm_seconds=warm_s,
+        embeddings_per_s=repeats / warm_s if warm_s else 0.0,
+        nodes_per_s=repeats * problem.n / warm_s if warm_s else 0.0,
+        eigenvalues=[float(x) for x in emb.eigenvalues],
+    )
+
+
+def bench_spectral(scale: float = 0.12, smoke: bool = False) -> dict:
+    from repro.api import HierarchyCache
+
+    k = 4 if smoke else 8
+    tol = 1e-5 if smoke else 1e-6
+    max_unprec = 400 if smoke else 600
+    repeats = 2 if smoke else 3
+    cache = HierarchyCache()
+
+    graphs = []
+    embed = None
+    for name, p in _graphs(smoke):
+        row = bench_eigensolve(p, k, tol, max_unprec, cache=cache)
+        row["graph"] = name
+        graphs.append(row)
+        if embed is None:       # embedding throughput on the grid only
+            embed = bench_embeddings(p, k, repeats, cache=cache)
+            embed["graph"] = name
+
+    return dict(
+        schema=SCHEMA,
+        smoke=smoke,
+        eigensolve=graphs,
+        embeddings=embed,
+        contracts=dict(
+            iters_ratio_target=3.0,
+            contract_met=all(g["contract_met"] for g in graphs),
+        ),
+    )
+
+
+def write_root_json(out: dict, path: str = ROOT_JSON) -> str:
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=False)
+        f.write("\n")
+    return path
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI; still writes the JSON")
+    ap.add_argument("--scale", type=float, default=0.12)
+    args = ap.parse_args(argv)
+    out = bench_spectral(scale=args.scale, smoke=args.smoke)
+    print(json.dumps(out, indent=1))
+    print("wrote", write_root_json(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -44,11 +44,11 @@ class _EagerHandle:
         self.work_per_iteration = solver.iteration_work(
             precondition=options.precondition)
 
-    def solve_block(self, B, tol: float, max_iters: int):
+    def solve_block(self, B, tol: float, max_iters: int, x0=None):
         X, info = self._solver.solve_block(
             B, tol=tol, maxiter=max_iters,
             precondition=self._options.precondition,
-            exact_columns=self._options.exact_columns)
+            exact_columns=self._options.exact_columns, x0=x0)
         return (np.asarray(X), info.residual_norms,
                 np.asarray(info.iters, np.int64))
 
@@ -64,7 +64,12 @@ class _DistHandle:
         self._options = options
         self.work_per_iteration = solver.work_per_iteration
 
-    def solve_block(self, B, tol: float, max_iters: int):
+    def solve_block(self, B, tol: float, max_iters: int, x0=None):
+        if x0 is not None:
+            raise NotImplementedError(
+                "the dist backend's scanned solve does not accept per-column "
+                "initial guesses yet; use backend='single' or 'serial_ref' "
+                "for x0 warm starts")
         X, norms, iters = self._solver.solve_block(B, n_iters=max_iters,
                                                    tol=tol)
         return (np.asarray(X), np.asarray(norms),

@@ -48,12 +48,15 @@ class Solver:
 
     # ------------------------------------------------------------------
     def solve(self, b, *, tol: float | None = None,
-              max_iters: int | None = None
+              max_iters: int | None = None, x0=None
               ) -> tuple[np.ndarray, SolveResult]:
         """Solve L x = b. ``b``: (n,) for one RHS or (n, k) for a block.
 
-        ``tol``/``max_iters`` default to the solver's options. Returns
-        ``(x, SolveResult)`` with ``x`` matching the shape of ``b``.
+        ``tol``/``max_iters`` default to the solver's options. ``x0`` is
+        an optional initial guess shaped like ``b`` (eager backends only;
+        the default ``None`` starts from zeros, unchanged behavior).
+        Returns ``(x, SolveResult)`` with ``x`` matching the shape of
+        ``b``.
         """
         tol = self.options.tol if tol is None else tol
         max_iters = self.options.max_iters if max_iters is None else max_iters
@@ -64,13 +67,29 @@ class Solver:
             raise ValueError(
                 f"b must have shape ({self.problem.n},) or "
                 f"({self.problem.n}, k), got {np.asarray(b).shape}")
+        if x0 is not None:
+            x0 = np.asarray(x0)
+            if x0.shape != b.shape:
+                raise ValueError(
+                    f"x0 must match b's shape {b.shape}, got {x0.shape}")
+            x0 = x0[:, None] if single else x0
         t0 = time.perf_counter()
-        X, norms, iters = self._handle.solve_block(B, tol, max_iters)
+        if x0 is None:
+            X, norms, iters = self._handle.solve_block(B, tol, max_iters)
+            ref_norms = None
+        else:
+            X, norms, iters = self._handle.solve_block(B, tol, max_iters,
+                                                       x0=x0)
+            # warm starts converge relative to ||proj b|| (the solver's
+            # own reference), not the guess's possibly-tiny r0
+            Bc = np.asarray(B, np.float64)
+            ref_norms = np.linalg.norm(Bc - Bc.mean(axis=0, keepdims=True),
+                                       axis=0)
         solve_seconds = time.perf_counter() - t0
         result = result_from_history(
             self.backend, norms, iters, tol,
             self._handle.work_per_iteration, self.setup_seconds,
-            solve_seconds)
+            solve_seconds, ref_norms=ref_norms)
         return (X[:, 0] if single else X), result
 
     def stats(self) -> dict:

@@ -49,13 +49,16 @@ class SolveResult:
 def result_from_history(backend: str, norms: np.ndarray,
                         iters_per_rhs: np.ndarray, tol: float,
                         work_per_iteration: float, setup_seconds: float,
-                        solve_seconds: float) -> SolveResult:
+                        solve_seconds: float,
+                        ref_norms: np.ndarray | None = None) -> SolveResult:
     """Assemble a ``SolveResult`` from a (T+1, k) residual history.
 
     Trims the history at the slowest column's convergence point (frozen
     tails would otherwise inflate the WDA iteration count) and derives
     convergence from the tolerance: a column converged iff its final norm
-    is within ``tol`` of its initial norm.
+    is within ``tol`` of its initial norm — or of ``ref_norms`` when
+    given (warm-started solves measure against ``||proj b||``, not the
+    initial guess's own residual).
     """
     norms = np.asarray(norms, np.float64)
     if norms.ndim == 1:
@@ -63,7 +66,9 @@ def result_from_history(backend: str, norms: np.ndarray,
     iters_per_rhs = np.asarray(iters_per_rhs, np.int64)
     it_max = int(iters_per_rhs.max()) if iters_per_rhs.size else 0
     norms = norms[: it_max + 1]
-    converged = bool(np.all(norms[-1] <= tol * norms[0]))
+    ref = (norms[0] if ref_norms is None
+           else np.asarray(ref_norms, np.float64))
+    converged = bool(np.all(norms[-1] <= tol * ref))
     frob = np.sqrt((norms ** 2).sum(axis=1))
     return SolveResult(
         backend=backend, converged=converged, iters=it_max,

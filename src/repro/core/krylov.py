@@ -86,7 +86,7 @@ def pcg(matvec: Callable, b: jax.Array, precond: Callable | None = None,
 
 def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
               tol: float = 1e-8, maxiter: int = 500,
-              exact_columns: bool = True):
+              exact_columns: bool = True, x0: jax.Array | None = None):
     """Blocked multi-RHS PCG: k single-RHS trajectories advanced in lockstep.
 
     ``B`` is ``(n, k)`` — one graph, many right-hand sides (the serving
@@ -112,6 +112,13 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
     (the serving layer batches requests with different tolerances into one
     block). Scalars keep the exact pre-existing trajectory; with arrays a
     column also freezes once it has run its own ``maxiter[j]`` rounds.
+
+    ``x0`` is an optional ``(n, k)`` block of per-column initial guesses
+    (LOBPCG inner refinement, incremental embeddings). Mirroring ``pcg``,
+    it is used as-is — no nullspace projection: any constant component
+    survives into the returned ``X`` (the Laplacian cannot see it).
+    ``x0=None`` starts from zeros and is bitwise-identical to the
+    pre-``x0`` behavior.
 
     Returns ``(X, BlockSolveInfo)`` with per-column iteration counts,
     converged flags, and the (T+1, k) residual history (rows beyond a
@@ -174,14 +181,30 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
 
     all_cols = np.ones(k, bool)
     B = proj(B)
-    X = jnp.zeros_like(B)
+    if x0 is None:
+        X = jnp.zeros_like(B)
+    else:
+        X = jnp.asarray(x0, B.dtype)
+        if X.shape != B.shape:
+            raise ValueError(f"x0 must match B's shape {B.shape}, "
+                             f"got {X.shape}")
     R = proj(B - bmv(X, all_cols))
     Z = proj(bM(R, all_cols))
     P = Z
     rz = cdot(R, Z)
     r0n = np.asarray(jax.device_get(cnorm(R)))
     hist = [r0n]
-    active = r0n > 0.0
+    if x0 is None:
+        # bitwise-pinned pre-x0 path: tolerance relative to the initial
+        # residual, which IS ||proj b|| when starting from zeros
+        ref = r0n
+        active = r0n > 0.0
+    else:
+        # warm starts measure against ||proj b|| (scipy's convention): a
+        # column whose guess is already converged runs zero iterations
+        # instead of chasing tol times its own tiny initial residual
+        ref = np.asarray(jax.device_get(cnorm(B)))
+        active = r0n > tol * ref
     iters = np.zeros(k, np.int64)
     for _ in range(n_rounds):
         active = active & (iters < maxiter)
@@ -199,7 +222,7 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
         R = jnp.where(act[None, :], proj(R - alpha[None, :] * Ap), R)
         rn = np.asarray(jax.device_get(cnorm(R)))
         hist.append(rn)
-        active = active & (rn > tol * r0n)
+        active = active & (rn > tol * ref)
         # Z only matters for still-active columns (a just-converged column
         # never uses its search direction again — pcg returns right here).
         Z = jnp.where(jnp.asarray(active)[None, :], proj(bM(R, active)), Z)
@@ -208,7 +231,7 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
         P = Z + beta[None, :] * P
         rz = rz_new
     norms = np.stack(hist)
-    converged = norms[-1] <= tol * r0n
+    converged = norms[-1] <= tol * ref
     return X, BlockSolveInfo(iters=iters, residual_norms=norms,
                              converged=converged)
 

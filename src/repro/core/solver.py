@@ -133,19 +133,24 @@ class LaplacianSolver:
 
     # ------------------------------------------------------------------
     def solve_block(self, B, tol: float = 1e-8, maxiter: int = 200,
-                    precondition: bool = True, exact_columns: bool = True
-                    ) -> tuple[jax.Array, BlockSolveInfo]:
+                    precondition: bool = True, exact_columns: bool = True,
+                    x0=None) -> tuple[jax.Array, BlockSolveInfo]:
         """Blocked multi-RHS solve: ``B`` is (n, k), one hierarchy, k solves.
 
         With ``exact_columns=True`` each column's trajectory is bitwise
         identical to a single-RHS ``solve`` of that column; with ``False``
         the SpMV and V-cycle run vmapped over all columns at once (see
-        ``pcg_block``).
+        ``pcg_block``). ``x0`` is an optional (n, k) block of per-column
+        initial guesses; ``None`` (the default) starts from zeros,
+        bitwise-identical to the pre-``x0`` behavior.
         """
         B_int = self._to_internal(jnp.asarray(B, jnp.float32))
+        x0_int = (self._to_internal(jnp.asarray(x0, jnp.float32))
+                  if x0 is not None else None)
         M = self.precondition if precondition else None
         X, info = pcg_block(self.matvec, B_int, precond=M, tol=tol,
-                            maxiter=maxiter, exact_columns=exact_columns)
+                            maxiter=maxiter, exact_columns=exact_columns,
+                            x0=x0_int)
         return self._from_internal(X), info
 
     def iteration_work(self, precondition: bool = True) -> float:

@@ -117,6 +117,18 @@ def delaunay(n: int, seed: int = 0, weighted: bool = False):
     return _dedup_sym(n, u, v, rng=rng if weighted else None)
 
 
+def star(n: int, weighted: bool = False, seed: int = 0):
+    """Hub-and-spokes star graph: vertex 0 adjacent to all others.
+
+    The unweighted star's Laplacian spectrum is {0, 1 (multiplicity n-2),
+    n} — the spectral test suite's multiplicity stress case.
+    """
+    rng = np.random.default_rng(seed)
+    u = np.zeros(n - 1, np.int64)
+    v = np.arange(1, n, dtype=np.int64)
+    return _dedup_sym(n, u, v, rng=rng if weighted else None)
+
+
 def watts_strogatz(n: int, k: int = 6, p: float = 0.1, seed: int = 0,
                    weighted: bool = False):
     rng = np.random.default_rng(seed)

@@ -124,12 +124,29 @@ class SolverService:
                 f"submit expects a repro.api.Problem, got "
                 f"{type(problem).__name__}")
         b = np.asarray(b)
+        if not (np.issubdtype(b.dtype, np.floating)
+                or np.issubdtype(b.dtype, np.integer)):
+            raise TypeError(
+                f"b must be a real numeric array (float or int), got dtype "
+                f"{b.dtype}: the solver computes in float32")
+        if b.ndim not in (1, 2):
+            raise ValueError(
+                f"b must be 1-D ({problem.n},) — auto-promoted to a "
+                f"({problem.n}, 1) block — or 2-D ({problem.n}, k), got a "
+                f"{b.ndim}-D array of shape {b.shape}")
         single = b.ndim == 1
         B = b[:, None] if single else b
-        if B.ndim != 2 or B.shape[0] != problem.n:
+        if B.shape[0] != problem.n:
             raise ValueError(
-                f"b must have shape ({problem.n},) or ({problem.n}, k), "
-                f"got {b.shape}")
+                f"b has {B.shape[0]} rows but the Problem has n = "
+                f"{problem.n} vertices — the RHS must supply one value per "
+                f"vertex (shape ({problem.n},) or ({problem.n}, k))")
+        if not np.isfinite(B).all():
+            j = int(np.flatnonzero(~np.isfinite(B).all(axis=0))[0])
+            raise ValueError(
+                f"b contains non-finite values (first bad column: {j}): "
+                f"NaN/Inf right-hand sides cannot converge — sanitize the "
+                f"request before submitting")
         t = Ticket(
             self._seq, problem, B, single,
             self.options.tol if tol is None else float(tol),

@@ -1,6 +1,6 @@
 """API-surface snapshot: the public names and signatures of ``repro.api``
-are frozen in ``tests/data/api_surface.txt`` so accidental facade changes
-fail fast in CI.
+and ``repro.spectral`` are frozen in ``tests/data/api_surface.txt`` so
+accidental facade changes fail fast in CI.
 
 Intentional changes: regenerate the snapshot and commit it together with
 the code change (and a MIGRATION.md note if a name moved):
@@ -15,13 +15,16 @@ import os
 SNAPSHOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "data",
                         "api_surface.txt")
 
+MODULES = ["repro.api", "repro.spectral"]
 
-def render_api_surface() -> str:
-    import repro.api as api
 
-    lines = []
-    for name in sorted(api.__all__):
-        obj = getattr(api, name)
+def _render_module(modname: str) -> list:
+    import importlib
+
+    mod = importlib.import_module(modname)
+    lines = [f"# {modname}"]
+    for name in sorted(mod.__all__):
+        obj = getattr(mod, name)
         if inspect.isclass(obj):
             base = (f"class {name}({obj.__mro__[1].__name__})"
                     if obj.__mro__[1] is not object else f"class {name}")
@@ -43,6 +46,13 @@ def render_api_surface() -> str:
             lines.append(f"def {name}{inspect.signature(obj)}")
         else:
             lines.append(f"obj {name}")
+    return lines
+
+
+def render_api_surface() -> str:
+    lines = []
+    for modname in MODULES:
+        lines.extend(_render_module(modname))
     return "\n".join(lines) + "\n"
 
 
@@ -51,7 +61,7 @@ def test_api_surface_matches_snapshot():
         frozen = f.read()
     current = render_api_surface()
     assert current == frozen, (
-        "repro.api public surface changed. If intentional, regenerate with\n"
+        "public API surface changed. If intentional, regenerate with\n"
         "    PYTHONPATH=src python tests/test_api_surface.py --regen\n"
         "and commit the snapshot (plus a MIGRATION.md note for renames).\n"
         "Diff:\n"

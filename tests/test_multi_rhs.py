@@ -115,6 +115,75 @@ def test_dist_backend_blocked_single_device():
         assert rj.iters == res.iters_per_rhs[j]
 
 
+class TestInitialGuess:
+    """The x0 satellite: warm starts must be opt-in and bit-honest."""
+
+    @pytest.mark.parametrize("backend", ["single", "serial_ref"])
+    def test_x0_zeros_matches_default_bitwise(self, backend):
+        """The regression pin: x0=None and x0=zeros are the SAME solve —
+        bitwise-equal solutions, iteration counts and histories."""
+        n, r, c, v = GRAPHS["grid"]()
+        p = Problem.from_edges(n, r, c, v)
+        solver = setup(p, OPTS, backend=backend)
+        rng = np.random.default_rng(11)
+        B = rng.normal(size=(n, 3)).astype(np.float32)
+        B -= B.mean(axis=0)
+        X_def, res_def = solver.solve(B)
+        X_z, res_z = solver.solve(B, x0=np.zeros_like(B))
+        np.testing.assert_array_equal(X_def, X_z)
+        assert res_def.iters == res_z.iters
+        np.testing.assert_array_equal(res_def.residual_norms,
+                                      res_z.residual_norms)
+
+    def test_x0_exact_solution_converges_immediately(self):
+        """Warm-starting at the answer must cost zero iterations."""
+        n, r, c, v = GRAPHS["grid"]()
+        p = Problem.from_edges(n, r, c, v)
+        solver = setup(p, OPTS, backend="single")
+        rng = np.random.default_rng(12)
+        b = rng.normal(size=n).astype(np.float32)
+        b -= b.mean()
+        x, res = solver.solve(b)
+        assert res.converged and res.iters > 0
+        # the recomputed float32 residual of a tol=1e-8 solution sits at
+        # the ~1e-6 rounding floor, so check immediacy at a looser tol
+        x2, res2 = solver.solve(b, tol=1e-4, x0=x)
+        assert res2.converged and res2.iters == 0
+        np.testing.assert_array_equal(x2, np.asarray(x))
+
+    def test_x0_partial_progress_cuts_iterations(self):
+        """A decent guess (the half-converged iterate) saves iterations."""
+        n, r, c, v = GRAPHS["ba"]()
+        p = Problem.from_edges(n, r, c, v)
+        solver = setup(p, OPTS, backend="single")
+        rng = np.random.default_rng(13)
+        b = rng.normal(size=n).astype(np.float32)
+        b -= b.mean()
+        _, cold = solver.solve(b)
+        rough, _ = solver.solve(b, tol=1e-2)
+        _, warm = solver.solve(b, x0=rough)
+        assert warm.converged
+        assert warm.iters < cold.iters
+
+    def test_x0_shape_validated(self):
+        n, r, c, v = GRAPHS["grid"]()
+        p = Problem.from_edges(n, r, c, v)
+        solver = setup(p, OPTS, backend="single")
+        b = np.zeros(n, np.float32)
+        with pytest.raises(ValueError, match="x0 must match b's shape"):
+            solver.solve(b, x0=np.zeros((n, 2), np.float32))
+
+    def test_x0_dist_not_implemented(self):
+        n, r, c, v = GRAPHS["ba"]()
+        p = Problem.from_edges(n, r, c, v)
+        solver = setup(p, SolverOptions(coarsest_size=64, max_iters=40,
+                                        dist_nnz_threshold=200),
+                       backend="dist")
+        b = np.zeros(n, np.float32)
+        with pytest.raises(NotImplementedError, match="x0"):
+            solver.solve(b, x0=b)
+
+
 DRIVER = textwrap.dedent("""
     import os, sys, json
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"

@@ -290,3 +290,67 @@ class TestPerColumnStopping:
                                  maxiter=np.array([2, 5], np.int64))
         assert info.iters[0] == 2 and info.iters[1] == 5
         assert not info.converged.any()
+
+
+# ----------------------------------------------------------------------------
+class TestSubmitValidation:
+    """The admission satellite: submit() rejects malformed requests with
+    actionable messages instead of letting them die inside a jitted solve."""
+
+    @pytest.fixture(scope="class")
+    def svc(self):
+        return SolverService(options=OPTS, backend="single")
+
+    def test_rejects_non_problem(self, svc):
+        with pytest.raises(TypeError, match="repro.api.Problem"):
+            svc.submit(np.eye(4), np.zeros(4, np.float32))
+
+    def test_rejects_bad_dtype(self, svc):
+        p = _problem("grid_2d")
+        with pytest.raises(TypeError, match="real numeric array"):
+            svc.submit(p, np.zeros(p.n, np.complex64))
+        with pytest.raises(TypeError, match="real numeric array"):
+            svc.submit(p, np.array(["a"] * p.n))
+
+    def test_rejects_bad_ndim(self, svc):
+        p = _problem("grid_2d")
+        with pytest.raises(ValueError, match="auto-promoted"):
+            svc.submit(p, np.zeros((p.n, 2, 2), np.float32))
+        with pytest.raises(ValueError, match="auto-promoted"):
+            svc.submit(p, np.float32(1.0))
+
+    def test_rejects_mismatched_n(self, svc):
+        p = _problem("grid_2d")
+        with pytest.raises(ValueError,
+                           match=f"the Problem has n = {p.n} vertices"):
+            svc.submit(p, np.zeros(p.n + 3, np.float32))
+
+    def test_rejects_non_finite(self, svc):
+        p = _problem("grid_2d")
+        B = np.zeros((p.n, 3), np.float32)
+        B[0, 2] = np.nan
+        with pytest.raises(ValueError,
+                           match=r"non-finite.*first bad column: 2"):
+            svc.submit(p, B)
+        B[0, 2] = 0.0
+        B[5, 1] = np.inf
+        with pytest.raises(ValueError,
+                           match=r"non-finite.*first bad column: 1"):
+            svc.submit(p, B)
+
+    def test_1d_auto_promoted_round_trip(self):
+        svc = SolverService(options=OPTS, backend="single")
+        p = _problem("grid_2d")
+        rng = np.random.default_rng(0)
+        b = rng.normal(size=p.n).astype(np.float32)
+        b -= b.mean()
+        t = svc.submit(p, b)
+        svc.flush()
+        x, res = t.result()
+        assert x.ndim == 1 and x.shape == (p.n,)
+        assert res.converged
+        # int dtype is accepted (the solver computes in float32)
+        t2 = svc.submit(p, np.ones(p.n, np.int64) * np.arange(p.n) % 5 - 2)
+        svc.flush()
+        x2, _ = t2.result()
+        assert x2.shape == (p.n,)

@@ -1,0 +1,349 @@
+"""The spectral application suite: LOBPCG vs a dense oracle, clustering,
+effective resistance, and positional encodings.
+
+Pins the PR 7 contracts:
+
+* ``lobpcg`` matches ``np.linalg.eigh`` on small graphs to rtol 1e-6,
+  on both eager backends, including a multiplicity-(n-2) eigenvalue
+  (star graph) — and the preconditioned run needs fewer iterations,
+* Fiedler sweep-cut conductance is no worse than the old
+  ``examples/spectral_partition.py`` inverse-iteration sign cut,
+* the Spielman–Srivastava sketch reproduces exact pairwise resistances
+  on <= 64-node graphs within its JL tolerance,
+* ``laplacian_pe`` is deterministic: same seed -> bitwise equal, and
+  sign canonicalization makes different-seed runs agree,
+* the dist backend runs the whole eigensolve on a real 2x2 mesh (slow).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import HierarchyCache, Problem, SolverOptions, setup
+from repro.graphs.generators import (barabasi_albert, ensure_connected,
+                                     grid_2d, star)
+from repro.spectral import (canonicalize_signs, conductance,
+                            effective_resistance, exact_effective_resistance,
+                            fiedler, fiedler_bisect, incremental_embedding,
+                            kmeans, laplacian_pe, lobpcg, recursive_bisection,
+                            refine_eigenpairs, spectral_clustering,
+                            spectral_embedding, sweep_cut)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# one cache for the whole module: repeated spectral calls on an equal
+# Problem must reuse its hierarchy (that is the layer's whole point)
+CACHE = HierarchyCache()
+
+
+def _problem(name):
+    if name == "grid":
+        n, r, c, v = ensure_connected(*grid_2d(10, 10))
+    elif name == "ba":
+        n, r, c, v = ensure_connected(*barabasi_albert(120, m=3, seed=1,
+                                                       weighted=True))
+    elif name == "star":
+        n, r, c, v = star(64)
+    elif name == "path":
+        n, r, c, v = grid_2d(48, 1)
+    else:  # pragma: no cover
+        raise KeyError(name)
+    return Problem.from_edges(n, r, c, v)
+
+
+def _dense_spectrum(p):
+    L = np.zeros((p.n, p.n))
+    L[p.rows, p.cols] = -np.asarray(p.vals, np.float64)
+    np.fill_diagonal(L, np.asarray(p.degrees(), np.float64))
+    return np.linalg.eigh(L)
+
+
+# ----------------------------------------------------------------------------
+class TestLobpcgOracle:
+    @pytest.mark.parametrize("backend", ["single", "serial_ref"])
+    @pytest.mark.parametrize("graph", ["grid", "ba"])
+    def test_matches_dense_oracle(self, backend, graph):
+        """Acceptance bar: eigenvalues to rtol 1e-6 against np.linalg.eigh
+        on both eager backends, riding the shared hierarchy cache."""
+        p = _problem(graph)
+        ev, _ = _dense_spectrum(p)
+        k = 6
+        res = lobpcg(p, k, tol=1e-6, backend=backend, cache=CACHE, seed=0)
+        assert res.converged.all(), res.residual_norms[-1]
+        assert res.backend == backend
+        np.testing.assert_allclose(res.eigenvalues, ev[1: k + 1],
+                                   rtol=1e-6, atol=1e-12)
+        # eigenvectors: orthonormal, mean-free, small residual
+        X = res.eigenvectors
+        np.testing.assert_allclose(X.T @ X, np.eye(k), atol=1e-8)
+        assert np.abs(X.mean(axis=0)).max() < 1e-8
+        # hierarchy accounting: the preconditioner really ran blocked,
+        # and soft locking means late blocks carry fewer live columns
+        assert res.precond_solves == res.iters
+        assert 0 < res.precond_columns <= res.precond_solves * k
+
+    def test_star_multiplicity(self):
+        """star(n): spectrum {0, 1 x (n-2), n}. A (k > 1)-dimensional
+        eigenspace must not destabilize the block iteration."""
+        p = _problem("star")
+        res = lobpcg(p, 5, tol=1e-6, cache=CACHE, seed=0)
+        assert res.converged.all()
+        np.testing.assert_allclose(res.eigenvalues, np.ones(5), rtol=1e-6)
+        X = res.eigenvectors
+        np.testing.assert_allclose(X.T @ X, np.eye(5), atol=1e-8)
+
+    def test_preconditioning_helps(self):
+        """The bench contract in miniature: multigrid preconditioning cuts
+        the outer iteration count (BENCH_spectral.json records >= 3x on
+        the full-size graphs)."""
+        p = _problem("grid")
+        pre = lobpcg(p, 4, tol=1e-5, cache=CACHE, seed=0)
+        unp = lobpcg(p, 4, tol=1e-5, precondition=False, max_iters=400,
+                     seed=0)
+        assert pre.converged.all() and unp.converged.all()
+        assert pre.iters < unp.iters
+        assert pre.backend != "none" and unp.backend == "none"
+
+    def test_validates_k(self):
+        p = _problem("star")
+        with pytest.raises(ValueError, match="k must be >= 1"):
+            lobpcg(p, 0)
+        with pytest.raises(ValueError, match="3k-wide trial basis"):
+            lobpcg(p, 64)
+
+    def test_warm_start_and_refine(self):
+        """X0 warm starts cut iterations; refine_eigenpairs (the x0
+        solve_block consumer) must not degrade the eigenvalues."""
+        p = _problem("ba")
+        ev, _ = _dense_spectrum(p)
+        cold = lobpcg(p, 4, tol=1e-5, cache=CACHE, seed=0)
+        warm = lobpcg(p, 4, tol=1e-5, cache=CACHE,
+                      X0=cold.eigenvectors)
+        assert warm.iters <= 2
+        np.testing.assert_allclose(warm.eigenvalues, ev[1:5], rtol=1e-6)
+        ref = refine_eigenpairs(p, warm, cache=CACHE)
+        np.testing.assert_allclose(ref.eigenvalues, ev[1:5], rtol=1e-6)
+
+
+# ----------------------------------------------------------------------------
+class TestClustering:
+    @staticmethod
+    def _planted(blocks=2, size=100, bridges=5, seed=0):
+        rng = np.random.default_rng(seed)
+        rows, cols = [], []
+        for b in range(blocks):
+            u = rng.integers(0, size, 6 * size) + b * size
+            v = rng.integers(0, size, 6 * size) + b * size
+            rows.extend(u)
+            cols.extend(v)
+        for a in range(blocks):
+            for b in range(a + 1, blocks):
+                for _ in range(bridges):
+                    rows.append(a * size + rng.integers(0, size))
+                    cols.append(b * size + rng.integers(0, size))
+        rows, cols = np.asarray(rows), np.asarray(cols)
+        keep = rows != cols
+        rows, cols = rows[keep], cols[keep]
+        r2 = np.concatenate([rows, cols]).astype(np.int32)
+        c2 = np.concatenate([cols, rows]).astype(np.int32)
+        n, r2, c2, v2 = ensure_connected(blocks * size, r2, c2,
+                                         np.ones(len(r2), np.float32))
+        return Problem.from_edges(n, r2, c2, v2, allow_duplicates=True)
+
+    def test_fiedler_beats_old_inverse_iteration(self):
+        """The retired examples/spectral_partition.py recipe (8 rounds of
+        inverse iteration + sign cut) is the baseline the new sweep-cut
+        Fiedler bisection must not regress."""
+        p = self._planted()
+        opts = SolverOptions(coarsest_size=min(128, p.n // 2),
+                             exact_columns=False)
+        solver = setup(p, opts, cache=CACHE)
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=p.n).astype(np.float32)
+        x -= x.mean()
+        for _ in range(8):
+            x, _ = solver.solve(x, tol=1e-6, max_iters=100)
+            x = np.array(x)
+            x -= x.mean()
+            x /= np.linalg.norm(x)
+        phi_old = conductance(p, x > 0)
+
+        mask, info = fiedler_bisect(p, tol=1e-5, cache=CACHE, seed=0)
+        assert info["conductance"] <= phi_old + 1e-12
+        assert 0 < mask.sum() < p.n
+
+    def test_sweep_cut_no_worse_than_sign_cut(self):
+        p = self._planted(seed=3)
+        vec, lam2 = fiedler(p, tol=1e-5, cache=CACHE, seed=0)
+        assert lam2 > 0
+        _, phi_sweep = sweep_cut(p, vec)
+        # the sign cut is one of the prefix cuts the sweep minimizes over
+        assert phi_sweep <= conductance(p, vec > 0) + 1e-12
+
+    def test_spectral_clustering_recovers_blocks(self):
+        p = self._planted(blocks=3, size=80, seed=1)
+        truth = np.arange(p.n) // 80
+        res = spectral_clustering(p, 3, tol=1e-5, cache=CACHE, seed=0)
+        assert res.n_clusters == 3
+        acc = sum(np.bincount(truth[res.labels == j]).max()
+                  for j in range(3)) / p.n
+        assert acc > 0.9, acc
+        assert res.ncut < 0.5
+        assert np.isfinite(res.conductances).all()
+
+    def test_recursive_bisection_partitions(self):
+        p = self._planted(blocks=4, size=60, seed=2)
+        res = recursive_bisection(p, 4, tol=1e-5, cache=CACHE, seed=0)
+        assert res.n_clusters == 4
+        assert np.array_equal(np.unique(res.labels), np.arange(4))
+        truth = np.arange(p.n) // 60
+        acc = sum(np.bincount(truth[res.labels == j]).max()
+                  for j in range(4)) / p.n
+        assert acc > 0.9, acc
+
+    def test_kmeans_deterministic(self):
+        rng = np.random.default_rng(0)
+        X = np.concatenate([rng.normal(size=(40, 2)),
+                            rng.normal(size=(40, 2)) + 6.0])
+        l1, c1, i1 = kmeans(X, 2, seed=7)
+        l2, c2, i2 = kmeans(X, 2, seed=7)
+        np.testing.assert_array_equal(l1, l2)
+        np.testing.assert_array_equal(c1, c2)
+        assert i1 == i2
+        assert (l1[:40] == l1[0]).all() and (l1[40:] == l1[40]).all()
+        assert l1[0] != l1[40]
+
+    def test_incremental_embedding_extends(self):
+        p = _problem("grid")
+        emb = spectral_embedding(p, 3, tol=1e-5, cache=CACHE, seed=0)
+        emb6 = incremental_embedding(p, emb, k=6, tol=1e-5, cache=CACHE)
+        assert emb6.coords.shape == (p.n, 6)
+        ev, _ = _dense_spectrum(p)
+        np.testing.assert_allclose(emb6.eigenvalues, ev[1:7], rtol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+class TestResistance:
+    @pytest.mark.parametrize("graph", ["grid", "star"])
+    def test_sketch_matches_exact(self, graph):
+        """JL contract on <= 64-node graphs: every pairwise resistance
+        within ~eps of the exact pseudo-inverse value (seeded, so the
+        probabilistic bound is a fixed measured number here)."""
+        if graph == "grid":
+            n, r, c, v = ensure_connected(*grid_2d(8, 8))
+        else:
+            n, r, c, v = star(64)
+        p = Problem.from_edges(n, r, c, v)
+        eps = 0.3
+        sk = effective_resistance(p, eps=eps, seed=1, cache=CACHE)
+        exact = exact_effective_resistance(p)
+        u, v = np.triu_indices(p.n, k=1)
+        rel = np.abs(sk.query(u, v) - exact[u, v]) / exact[u, v]
+        assert rel.max() < 2 * eps, rel.max()
+        assert np.median(rel) < eps
+
+    def test_query_broadcasts_and_is_symmetric(self):
+        n, r, c, v = ensure_connected(*grid_2d(6, 6))
+        p = Problem.from_edges(n, r, c, v)
+        sk = effective_resistance(p, eps=0.4, seed=0, cache=CACHE)
+        assert sk.query(0, 1).shape == ()
+        assert sk.query(0, np.arange(1, 6)).shape == (5,)
+        np.testing.assert_allclose(sk.query([0, 2], [5, 9]),
+                                   sk.query([5, 9], [0, 2]))
+
+
+# ----------------------------------------------------------------------------
+class TestPositionalEncodings:
+    def test_canonicalize_signs(self):
+        rng = np.random.default_rng(0)
+        V = rng.normal(size=(30, 4))
+        W = canonicalize_signs(V)
+        np.testing.assert_array_equal(canonicalize_signs(-V), W)
+        np.testing.assert_array_equal(canonicalize_signs(W), W)
+        # per-column: output is V's column up to a +-1 factor
+        s = (W * V).sum(axis=0) / (V * V).sum(axis=0)
+        np.testing.assert_allclose(np.abs(s), np.ones(4))
+
+    def test_deterministic_same_seed(self):
+        p = _problem("path")
+        pe1 = laplacian_pe(p, k=4, tol=1e-5, cache=CACHE, seed=0)
+        pe2 = laplacian_pe(p, k=4, tol=1e-5, cache=CACHE, seed=0)
+        np.testing.assert_array_equal(pe1, pe2)
+        assert pe1.dtype == np.float32 and pe1.shape == (p.n, 4)
+
+    def test_sign_canonical_across_seeds(self):
+        """A path graph's spectrum is simple, so different random starts
+        must land on the same canonicalized eigenvectors."""
+        p = _problem("path")
+        pe1 = laplacian_pe(p, k=4, tol=1e-6, cache=CACHE, seed=0)
+        pe2 = laplacian_pe(p, k=4, tol=1e-6, cache=CACHE, seed=11)
+        np.testing.assert_allclose(pe1, pe2, atol=5e-4)
+
+    def test_graph_batch_wiring(self):
+        from repro.models.gnn.common import GraphBatch
+        from repro.spectral import graph_batch_with_pe
+
+        p = _problem("path")
+        gb = graph_batch_with_pe(p, k=3, tol=1e-5, cache=CACHE)
+        assert isinstance(gb, GraphBatch)
+        assert gb.node_feat.shape == (p.n, 3)
+        assert gb.edge_feat.shape == (len(p.rows), 1)
+        feats = np.arange(2 * p.n, dtype=np.float32).reshape(p.n, 2)
+        gb2 = graph_batch_with_pe(p, k=3, tol=1e-5, cache=CACHE,
+                                  node_feat=feats)
+        assert gb2.node_feat.shape == (p.n, 5)
+        np.testing.assert_array_equal(np.asarray(gb2.node_feat[:, :2]),
+                                      feats)
+        with pytest.raises(ValueError, match="node_feat"):
+            graph_batch_with_pe(p, k=3, cache=CACHE,
+                                node_feat=np.zeros((3, 2)))
+
+
+# ----------------------------------------------------------------------------
+DIST_DRIVER = textwrap.dedent("""
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    import jax.sharding as shd
+    from repro.api import Problem, SolverOptions
+    from repro.graphs.generators import barabasi_albert, ensure_connected
+    from repro.spectral import lobpcg
+
+    n, r, c, v = ensure_connected(*barabasi_albert(600, m=3, seed=2))
+    p = Problem.from_edges(n, r, c, v)
+    L = np.zeros((n, n)); L[p.rows, p.cols] = -np.asarray(p.vals, float)
+    np.fill_diagonal(L, np.asarray(p.degrees(), float))
+    ev = np.linalg.eigvalsh(L)
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(shd.AxisType.Auto, shd.AxisType.Auto))
+    opts = SolverOptions(coarsest_size=64, dist_nnz_threshold=100)
+    res = lobpcg(p, 2, options=opts, backend="dist", mesh=mesh,
+                 tol=1e-4, max_iters=100, seed=0)
+    out = dict(backend=res.backend, iters=int(res.iters),
+               converged=bool(res.converged.all()),
+               max_rel=float(np.abs(res.eigenvalues - ev[1:3]).max()
+                             / ev[1]))
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_lobpcg_dist_backend_subprocess():
+    """The whole eigensolve with every preconditioner application a dist
+    solve_block on a real 2x2 mesh."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run([sys.executable, "-c", DIST_DRIVER],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out["backend"] == "dist"
+    assert out["converged"], out
+    assert out["max_rel"] < 1e-4, out
