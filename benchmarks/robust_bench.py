@@ -1,0 +1,204 @@
+"""Robustness benchmark: guard overhead, recovery rate, time-to-fallback.
+
+PR 8 added breakdown guards to the Krylov hot path and a degradation
+ladder behind the ``repro.api`` facade. This benchmark records the three
+numbers that keep that layer honest:
+
+* **guard overhead** — warm blocked-solve wall time with ``guard=True``
+  vs ``guard=False`` on a clean problem. The guards only *observe* (host
+  fetches of already-computed scalars), so the contract is < 2% overhead
+  on the warm hot path — and the returned iterates must stay bitwise
+  identical (the JSON carries ``bitwise_identical`` next to the ratio).
+* **recovery success rate** — a battery of seeded fault-injection
+  scenarios (``repro.testing.faults``) where clean math is reachable
+  (transient solve faults, poisoned setup artifacts, persistent SpMV
+  corruption with the dense rung in range). Success = the facade
+  terminates ``"converged"``/``"degraded"`` AND the answer matches the
+  clean solve. Contract: rate == 1.0.
+* **time-to-fallback** — wall seconds each scenario spends from submit
+  to recovered answer, next to the clean-solve baseline, so ladder
+  latency is a tracked number rather than a surprise.
+
+Running this module directly — or via ``benchmarks/run.py --only
+robust`` — writes the stable-schema ``BENCH_robust.json`` at the repo
+root. ``--smoke`` shrinks sizes for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+SCHEMA = "repro.bench.robust/v1"
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                         "BENCH_robust.json")
+
+GUARD_OVERHEAD_TARGET = 0.02
+
+
+def _problem(side: int, seed: int = 0):
+    from repro.api import Problem
+    from repro.graphs.generators import ensure_connected, grid_2d
+
+    n, r, c, v = ensure_connected(*grid_2d(side, side, weighted=True,
+                                           seed=seed))
+    return Problem.from_edges(n, r, c, v)
+
+
+def _rhs(n: int, k: int, seed: int = 0) -> np.ndarray:
+    b = np.random.default_rng(seed).normal(size=(n, k)).astype(np.float32)
+    return b - b.mean(axis=0)
+
+
+def _guard_overhead(problem, k: int, repeats: int) -> dict:
+    """Warm hot-path wall time, guard on vs off, interleaved repeats."""
+    from repro.api import SolverOptions, setup
+
+    B = _rhs(problem.n, k, seed=1)
+    solvers = {}
+    for guard in (True, False):
+        opts = SolverOptions(coarsest_size=64, max_iters=300, guard=guard)
+        solvers[guard] = setup(problem, opts, backend="single", cache=False)
+        solvers[guard].solve(B)                   # compile + warm
+    times = {True: [], False: []}
+    X = {}
+    for _ in range(repeats):
+        for guard in (True, False):               # interleave: fair clocks
+            t0 = time.perf_counter()
+            X[guard], res = solvers[guard].solve(B)
+            times[guard].append(time.perf_counter() - t0)
+            assert res.converged
+    on = float(np.median(times[True]))
+    off = float(np.median(times[False]))
+    return dict(
+        n=problem.n, k=k, repeats=repeats,
+        guarded_seconds=on, unguarded_seconds=off,
+        overhead_fraction=on / off - 1.0,
+        bitwise_identical=bool(
+            np.array_equal(np.asarray(X[True]), np.asarray(X[False]))),
+    )
+
+
+# (site, mode, at_calls, label) — every scenario leaves clean math
+# reachable, so the ladder must recover each one.
+SCENARIOS = (
+    ("solve.spmv", "nan", (1,), "transient SpMV NaN"),
+    ("solve.precond", "nan", (0,), "initial V-cycle NaN"),
+    ("solve.residual", "inf", (1,), "residual update Inf"),
+    ("solve.spmv", "huge", (1,), "SpMV overflow (x1e30)"),
+    ("setup.coarse_inv", "nan", None, "poisoned coarse inverse"),
+    ("solve.spmv", "nan", None, "persistent SpMV NaN (dense rung)"),
+)
+
+
+def _recovery(problem, k: int) -> dict:
+    from repro.api import SolverOptions, setup
+    from repro.testing import Fault, FaultPlan, inject
+
+    opts = SolverOptions(coarsest_size=64, max_iters=300)
+    B = _rhs(problem.n, k, seed=2)
+    clean = setup(problem, opts, backend="single", cache=False)
+    t0 = time.perf_counter()
+    X_ref, res_ref = clean.solve(B)
+    clean_seconds = time.perf_counter() - t0
+    assert res_ref.status == "converged"
+    scale = max(1.0, float(np.abs(X_ref).max()))
+
+    rows = []
+    for i, (site, mode, at_calls, label) in enumerate(SCENARIOS):
+        plan = FaultPlan({site: Fault(mode=mode, at_calls=at_calls,
+                                      fraction=0.2)}, seed=100 + i)
+        setup_faulted = site.startswith("setup.")
+        t0 = time.perf_counter()
+        if setup_faulted:
+            with inject(plan):
+                solver = setup(problem, opts, backend="single", cache=False)
+            X, res = solver.solve(B)
+        else:
+            solver = setup(problem, opts, backend="single", cache=False)
+            with inject(plan):
+                X, res = solver.solve(B)
+        seconds = time.perf_counter() - t0
+        err = float(np.linalg.norm(np.asarray(X, np.float64)
+                                   - np.asarray(X_ref, np.float64)))
+        ok = (bool(plan.fired)
+              and res.status in ("converged", "degraded")
+              and err <= 1e-2 * scale * np.sqrt(problem.n * k))
+        rows.append(dict(
+            site=site, mode=mode,
+            at_calls=None if at_calls is None else list(at_calls),
+            label=label, fired=len(plan.fired), status=res.status,
+            stages=[d["stage"] for d in res.diagnostics],
+            error_vs_clean=err, seconds=seconds,
+            time_to_fallback_seconds=max(0.0, seconds - clean_seconds),
+            recovered=ok,
+        ))
+    return dict(
+        n=problem.n, k=k, clean_solve_seconds=clean_seconds,
+        scenarios=rows,
+        success_rate=float(np.mean([r["recovered"] for r in rows])),
+        mean_time_to_fallback_seconds=float(
+            np.mean([r["time_to_fallback_seconds"] for r in rows])),
+    )
+
+
+def bench_robust(scale: float = 0.12, smoke: bool = False) -> dict:
+    side = 22 if smoke else max(24, int(64 * np.sqrt(scale * 2)))
+    k = 2 if smoke else 4
+    repeats = 3 if smoke else 7
+    p = _problem(side)
+    guard = _guard_overhead(p, k, repeats)
+    recovery = _recovery(p, k)
+    return dict(
+        schema=SCHEMA,
+        smoke=smoke,
+        guard_overhead=guard,
+        recovery=recovery,
+        contracts=dict(
+            guard_overhead_target=GUARD_OVERHEAD_TARGET,
+            guard_overhead_met=bool(
+                guard["overhead_fraction"] < GUARD_OVERHEAD_TARGET),
+            guards_bitwise_clean=guard["bitwise_identical"],
+            recovery_rate_met=bool(recovery["success_rate"] == 1.0),
+        ),
+    )
+
+
+def write_root_json(out: dict, path: str = ROOT_JSON) -> str:
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+        f.write("\n")
+    return os.path.abspath(path)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--scale", type=float, default=0.12)
+    args = ap.parse_args(argv)
+    out = bench_robust(scale=args.scale, smoke=args.smoke)
+    g, r = out["guard_overhead"], out["recovery"]
+    print(f"guard overhead (n={g['n']}, k={g['k']}, warm): "
+          f"{g['overhead_fraction']*100:+.2f}% "
+          f"(target <{GUARD_OVERHEAD_TARGET:.0%}: "
+          f"{out['contracts']['guard_overhead_met']}, "
+          f"bitwise={g['bitwise_identical']})")
+    for s in r["scenarios"]:
+        print(f"  {s['label']:>34s}: {s['status']:>9s} "
+              f"stages={'>'.join(s['stages']) or '-'} "
+              f"err={s['error_vs_clean']:.2e} "
+              f"t={s['seconds']:.2f}s recovered={s['recovered']}")
+    print(f"recovery: rate={r['success_rate']:.2f} "
+          f"(target 1.0: {out['contracts']['recovery_rate_met']}), "
+          f"mean time-to-fallback={r['mean_time_to_fallback_seconds']:.2f}s "
+          f"vs clean {r['clean_solve_seconds']:.2f}s")
+    print("wrote", write_root_json(out))
+
+
+if __name__ == "__main__":
+    main()

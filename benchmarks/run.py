@@ -211,6 +211,31 @@ def main(argv=None) -> None:
                   sv["warm_columns_per_s"])
         print(f"  (schema {out['schema']} -> {path})")
 
+    if want("robust"):
+        from benchmarks.robust_bench import bench_robust, write_root_json
+
+        out = bench_robust(scale=scale)
+        _save("robust", out)
+        path = write_root_json(out)
+        g, rec = out["guard_overhead"], out["recovery"]
+        print("\n== robustness: guard overhead + degradation-ladder "
+              "recovery ==")
+        print(f"  guard overhead (n={g['n']}, k={g['k']}, warm): "
+              f"{g['overhead_fraction']*100:+.2f}% "
+              f"(target <2%: {out['contracts']['guard_overhead_met']}, "
+              f"bitwise={g['bitwise_identical']})")
+        for s in rec["scenarios"]:
+            print(f"  {s['label']:>34s}: {s['status']:>9s} "
+                  f"stages={'>'.join(s['stages']) or '-'} "
+                  f"recovered={s['recovered']}")
+        print(f"  recovery rate={rec['success_rate']:.2f} "
+              f"(target 1.0: {out['contracts']['recovery_rate_met']}), "
+              f"mean time-to-fallback="
+              f"{rec['mean_time_to_fallback_seconds']:.2f}s")
+        _emit_csv("robust_guard_overhead", 0, g["overhead_fraction"])
+        _emit_csv("robust_recovery_rate", 0, rec["success_rate"])
+        print(f"  (schema {out['schema']} -> {path})")
+
     if want("spectral"):
         from benchmarks.spectral_bench import bench_spectral, write_root_json
 

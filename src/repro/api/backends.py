@@ -11,6 +11,11 @@ handle protocol the facade consumes:
 ``solve_block`` always takes and returns 2-D blocks; the facade does the
 (n,) <-> (n, 1) plumbing. ``norms`` is the (T+1, k) lockstep residual
 history, ``iters`` the per-column iteration counts.
+
+PR 8 extends the protocol with a fourth element: per-column Krylov status
+codes (``repro.core.krylov``). The facade still accepts the legacy
+3-tuple from third-party handles (statuses are then None and the
+degradation ladder never triggers for them).
 """
 
 from __future__ import annotations
@@ -48,9 +53,10 @@ class _EagerHandle:
         X, info = self._solver.solve_block(
             B, tol=tol, maxiter=max_iters,
             precondition=self._options.precondition,
-            exact_columns=self._options.exact_columns, x0=x0)
+            exact_columns=self._options.exact_columns, x0=x0,
+            guard=self._options.guard_config() or False)
         return (np.asarray(X), info.residual_norms,
-                np.asarray(info.iters, np.int64))
+                np.asarray(info.iters, np.int64), info.status)
 
     def stats(self) -> dict:
         return self._solver.stats()
@@ -72,8 +78,13 @@ class _DistHandle:
                 "for x0 warm starts")
         X, norms, iters = self._solver.solve_block(B, n_iters=max_iters,
                                                    tol=tol)
-        return (np.asarray(X), np.asarray(norms),
-                np.asarray(iters, np.int64))
+        norms = np.asarray(norms)
+        # The scanned solve cannot guard inside its fixed XLA program;
+        # derive per-column statuses host-side from the fetched history.
+        from repro.core.krylov import scan_norms_status
+
+        statuses = scan_norms_status(norms, tol, norms[0])
+        return (np.asarray(X), norms, np.asarray(iters, np.int64), statuses)
 
     def stats(self) -> dict:
         import jax

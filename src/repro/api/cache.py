@@ -47,6 +47,7 @@ class HierarchyCache:
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        self._invalidations = 0
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -96,10 +97,27 @@ class HierarchyCache:
         """Drop every entry (counters keep accumulating)."""
         self._entries.clear()
 
+    def invalidate(self, fingerprint: str) -> int:
+        """Evict every entry for a Problem fingerprint; returns the count.
+
+        The poisoned-hierarchy path: when a cached hierarchy produces a
+        Krylov breakdown, the facade's degradation ladder evicts all of
+        that problem's entries (every options/backend/mesh variant — the
+        setup artifact itself is suspect) before rebuilding, so the bad
+        artifact cannot keep serving future requests.
+        """
+        doomed = [k for k in self._entries if k[0] == fingerprint]
+        for k in doomed:
+            del self._entries[k]
+        self._invalidations += len(doomed)
+        return len(doomed)
+
     def stats(self) -> dict:
-        """Size/capacity plus hit/miss/eviction counters and hit rate."""
+        """Size/capacity plus hit/miss/eviction/invalidation counters
+        and hit rate."""
         total = self._hits + self._misses
         return dict(size=len(self._entries), capacity=self.capacity,
                     hits=self._hits, misses=self._misses,
                     evictions=self._evictions,
+                    invalidations=self._invalidations,
                     hit_rate=(self._hits / total) if total else 0.0)

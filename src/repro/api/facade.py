@@ -11,6 +11,21 @@
 This is the paper's own shape — one algorithm "amenable to linear algebra
 using arbitrary distributions" — surfaced the way LAMG ships it: a setup
 phase that builds the hierarchy, then any number of solves against it.
+
+Failure handling (PR 8): the Krylov layer's breakdown guards surface
+per-column status codes, and on a breakdown the facade walks a
+graceful-degradation ladder (``SolverOptions.fallback``):
+
+1. invalidate the problem's cache entries and retry once against a
+   freshly rebuilt hierarchy (a poisoned cached setup must not keep
+   serving),
+2. diagonal-preconditioned CG straight off the edge list (no hierarchy
+   trusted at all — the paper's own baseline),
+3. for ``n <= dense_fallback_max``, a dense nullspace-aware direct solve.
+
+Every rung is recorded in ``SolveResult.diagnostics``; the overall
+``SolveResult.status`` is ``"degraded"`` when a rung recovered the solve
+and ``"failed"`` when the ladder is exhausted — never an unhandled NaN.
 """
 
 from __future__ import annotations
@@ -23,7 +38,9 @@ from repro.api.cache import HierarchyCache
 from repro.api.options import SolverOptions
 from repro.api.problem import Problem
 from repro.api.registry import get_backend, resolve_backend
-from repro.api.result import SolveResult, result_from_history
+from repro.api.result import (SolveResult, STATUS_DEGRADED, STATUS_FAILED,
+                              has_breakdown, result_from_history,
+                              worst_status)
 
 # Registration side effect: importing the facade makes the built-ins
 # available, so ``from repro.api import solve; solve(...)`` just works.
@@ -39,14 +56,30 @@ class Solver:
     """
 
     def __init__(self, problem: Problem, options: SolverOptions,
-                 backend: str, handle, setup_seconds: float):
+                 backend: str, handle, setup_seconds: float,
+                 mesh=None, cache: HierarchyCache | None = None):
         self.problem = problem
         self.options = options
         self.backend = backend
         self.setup_seconds = setup_seconds
         self._handle = handle
+        self._mesh = mesh
+        self._cache = cache
 
     # ------------------------------------------------------------------
+    def _run(self, handle, B, tol, max_iters, x0):
+        """One solve attempt through a backend handle, normalized to the
+        4-tuple ``(X, norms, iters, statuses)`` — third-party handles may
+        still return the legacy 3-tuple (statuses=None)."""
+        if x0 is None:
+            out = handle.solve_block(B, tol, max_iters)
+        else:
+            out = handle.solve_block(B, tol, max_iters, x0=x0)
+        if len(out) == 3:
+            X, norms, iters = out
+            return X, norms, iters, None
+        return out
+
     def solve(self, b, *, tol: float | None = None,
               max_iters: int | None = None, x0=None
               ) -> tuple[np.ndarray, SolveResult]:
@@ -56,7 +89,8 @@ class Solver:
         an optional initial guess shaped like ``b`` (eager backends only;
         the default ``None`` starts from zeros, unchanged behavior).
         Returns ``(x, SolveResult)`` with ``x`` matching the shape of
-        ``b``.
+        ``b``. On a Krylov breakdown the degradation ladder runs (see
+        module docstring); inspect ``result.status`` / ``.diagnostics``.
         """
         tol = self.options.tol if tol is None else tol
         max_iters = self.options.max_iters if max_iters is None else max_iters
@@ -74,23 +108,109 @@ class Solver:
                     f"x0 must match b's shape {b.shape}, got {x0.shape}")
             x0 = x0[:, None] if single else x0
         t0 = time.perf_counter()
+        X, norms, iters, statuses = self._run(self._handle, B, tol,
+                                              max_iters, x0)
+        wpi = self._handle.work_per_iteration
+        diagnostics: list = []
+        status = None
+        if has_breakdown(statuses) and self.options.fallback:
+            X, norms, iters, statuses, wpi, status = self._degrade(
+                B, tol, max_iters, x0, X, norms, iters, statuses,
+                diagnostics)
+        solve_seconds = time.perf_counter() - t0
         if x0 is None:
-            X, norms, iters = self._handle.solve_block(B, tol, max_iters)
             ref_norms = None
         else:
-            X, norms, iters = self._handle.solve_block(B, tol, max_iters,
-                                                       x0=x0)
             # warm starts converge relative to ||proj b|| (the solver's
             # own reference), not the guess's possibly-tiny r0
             Bc = np.asarray(B, np.float64)
             ref_norms = np.linalg.norm(Bc - Bc.mean(axis=0, keepdims=True),
                                        axis=0)
-        solve_seconds = time.perf_counter() - t0
         result = result_from_history(
-            self.backend, norms, iters, tol,
-            self._handle.work_per_iteration, self.setup_seconds,
-            solve_seconds, ref_norms=ref_norms)
+            self.backend, norms, iters, tol, wpi, self.setup_seconds,
+            solve_seconds, ref_norms=ref_norms, statuses=statuses,
+            diagnostics=tuple(diagnostics), status=status)
         return (X[:, 0] if single else X), result
+
+    # ------------------------------------------------------------------
+    def _degrade(self, B, tol, max_iters, x0, X, norms, iters, statuses,
+                 diagnostics):
+        """Walk the degradation ladder after a breakdown. Returns the
+        final ``(X, norms, iters, statuses, work_per_iteration, status)``
+        and appends one diagnostics entry per rung that ran."""
+        opts = self.options
+
+        def record(stage, sts, note=None):
+            diagnostics.append(dict(
+                stage=stage, status=worst_status(sts),
+                statuses=np.asarray(sts).tolist(),
+                recovered=not has_breakdown(sts),
+                **({} if note is None else dict(note=note))))
+
+        record("primary", statuses)
+        wpi = self._handle.work_per_iteration
+
+        # rung 1: evict + rebuild the hierarchy, retry once ---------------
+        note = None
+        if self._cache is not None:
+            n_inv = self._cache.invalidate(self.problem.fingerprint())
+            note = f"invalidated {n_inv} cache entries"
+        try:
+            handle = get_backend(self.backend)(self.problem, opts, self._mesh)
+            X, norms, iters, statuses = self._run(handle, B, tol,
+                                                  max_iters, x0)
+            wpi = handle.work_per_iteration
+            record("rebuild", statuses, note)
+            if not has_breakdown(statuses):
+                # adopt (and re-cache) the healthy rebuild
+                self._handle = handle
+                if self._cache is not None:
+                    self._cache.put(HierarchyCache.key(
+                        self.problem, opts, self.backend, self._mesh),
+                        handle)
+                return X, norms, iters, statuses, wpi, STATUS_DEGRADED \
+                    if worst_status(statuses) == "converged" else None
+        except Exception as e:                      # rebuild itself died
+            record("rebuild", statuses, f"{note + '; ' if note else ''}"
+                                        f"rebuild raised {e!r}")
+
+        # rung 2: diagonal-preconditioned CG off the edge list ------------
+        from repro.api.fallback import diag_pcg_block
+
+        try:
+            X, norms, iters, statuses = diag_pcg_block(
+                self.problem, B, tol, max_iters,
+                guard=opts.guard_config() or False, x0=x0)
+            wpi = 1.0
+            record("diag_pcg", statuses)
+            if not has_breakdown(statuses):
+                return X, norms, iters, statuses, wpi, STATUS_DEGRADED \
+                    if worst_status(statuses) == "converged" else None
+        except Exception as e:
+            record("diag_pcg", statuses, f"raised {e!r}")
+
+        # rung 3: dense nullspace-aware direct solve (small n) ------------
+        if self.problem.n <= opts.dense_fallback_max:
+            from repro.api.fallback import dense_solve_block
+
+            try:
+                X, norms, iters, statuses = dense_solve_block(
+                    self.problem, B, tol)
+                wpi = float(self.problem.n)
+                record("dense", statuses)
+                if not has_breakdown(statuses):
+                    return X, norms, iters, statuses, wpi, STATUS_DEGRADED \
+                        if worst_status(statuses) == "converged" else None
+            except Exception as e:
+                record("dense", statuses, f"raised {e!r}")
+        else:
+            diagnostics.append(dict(
+                stage="dense", status="skipped", statuses=[],
+                recovered=False,
+                note=f"n={self.problem.n} exceeds "
+                     f"dense_fallback_max={opts.dense_fallback_max}"))
+
+        return X, norms, iters, statuses, wpi, STATUS_FAILED
 
     def stats(self) -> dict:
         """Hierarchy statistics (per-level kind / size / nnz)."""
@@ -146,13 +266,15 @@ def setup(problem: Problem, options: SolverOptions | None = None,
         key = HierarchyCache.key(problem, options, name, mesh)
         handle = cache.get(key)
         if handle is not None:
-            return Solver(problem, options, name, handle, 0.0)
+            return Solver(problem, options, name, handle, 0.0,
+                          mesh=mesh, cache=cache)
     t0 = time.perf_counter()
     handle = get_backend(name)(problem, options, mesh)
     seconds = time.perf_counter() - t0
     if cache is not None:
         cache.put(key, handle)
-    return Solver(problem, options, name, handle, seconds)
+    return Solver(problem, options, name, handle, seconds,
+                  mesh=mesh, cache=cache)
 
 
 def solve(problem: Problem, b, options: SolverOptions | None = None,

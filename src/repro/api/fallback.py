@@ -1,0 +1,102 @@
+"""Last-resort solvers for the facade's degradation ladder (PR 8).
+
+When the multigrid-preconditioned solve breaks down (and a rebuilt
+hierarchy breaks down again), the facade steps down to solvers with
+strictly smaller trusted surfaces:
+
+* :func:`diag_pcg_block` — CG preconditioned by diag(L)⁻¹, built directly
+  from the Problem's edge list. No hierarchy, no elimination, no
+  aggregation: the only setup artifact it trusts is the degree vector.
+  This is the paper's own baseline (Fig 3), so degraded service quality
+  is exactly "the paper without its contribution".
+* :func:`dense_solve_block` — a dense nullspace-aware direct solve in
+  float64, viable for small systems (``SolverOptions.dense_fallback_max``).
+  Solves ``(L + α Σ_c J_c) x = P b`` where ``P`` removes per-component
+  means — the regularized system is nonsingular and its solution *is* the
+  pseudo-inverse solution ``L⁺ P b`` (taking per-component means of both
+  sides shows ``x`` is component-mean-free).
+
+Both are nullspace-correct on disconnected graphs via
+``Problem.components()``. Return convention matches the backend handle
+protocol's 4-tuple: ``(X, norms, iters, statuses)``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.krylov import (STATUS_CONVERGED, STATUS_MAX_ITERS,
+                               STATUS_NONFINITE, GuardConfig, pcg_block)
+
+
+def _projector(problem):
+    comp, n_comp = problem.components()
+    if n_comp == 1:
+        return None
+    from repro.core.components import component_projector
+
+    return component_projector(comp, n_comp)
+
+
+def diag_pcg_block(problem, B, tol, max_iters,
+                   guard: GuardConfig | bool = True, x0=None):
+    """Diagonal-preconditioned CG straight off the Problem's edge list."""
+    import jax
+    import jax.numpy as jnp
+
+    n = problem.n
+    rows = jnp.asarray(problem.rows, jnp.int32)
+    cols = jnp.asarray(problem.cols, jnp.int32)
+    vals = jnp.asarray(problem.vals, jnp.float32)
+    deg = jnp.asarray(problem.degrees().astype(np.float32))
+    inv_deg = 1.0 / jnp.maximum(deg, 1e-30)
+
+    def matvec(v):
+        return deg * v - jax.ops.segment_sum(vals * jnp.take(v, cols),
+                                             rows, num_segments=n)
+
+    X, info = pcg_block(matvec, jnp.asarray(B, jnp.float32),
+                        precond=lambda r: inv_deg * r, tol=tol,
+                        maxiter=max_iters, exact_columns=False,
+                        x0=None if x0 is None
+                        else jnp.asarray(x0, jnp.float32),
+                        project=_projector(problem), guard=guard)
+    return (np.asarray(X), np.asarray(info.residual_norms),
+            np.asarray(info.iters, np.int64), info.status)
+
+
+def dense_solve_block(problem, B, tol):
+    """Dense float64 nullspace-aware direct solve (small n only)."""
+    n = problem.n
+    L = np.zeros((n, n), np.float64)
+    r, c = problem.rows, problem.cols
+    v = np.asarray(problem.vals, np.float64)
+    np.add.at(L, (r, r), v)           # degrees (both directions stored)
+    np.subtract.at(L, (r, c), v)
+    comp, n_comp = problem.components()
+    counts = np.bincount(comp, minlength=n_comp).astype(np.float64)
+    alpha = float(L.trace() / n) or 1.0
+    reg = (comp[:, None] == comp[None, :]) / counts[comp][:, None]
+
+    B = np.asarray(B, np.float64)
+    single = B.ndim == 1
+    if single:
+        B = B[:, None]
+    means = np.zeros((n_comp, B.shape[1]))
+    np.add.at(means, comp, B)
+    Bp = B - (means / counts[:, None])[comp]
+    X = np.linalg.solve(L + alpha * reg, Bp)
+
+    r0n = np.linalg.norm(Bp, axis=0)
+    rn = np.linalg.norm(Bp - L @ X, axis=0)
+    norms = np.stack([r0n, rn])
+    with np.errstate(invalid="ignore"):
+        ok = rn <= np.asarray(tol) * r0n
+    statuses = np.where(ok, STATUS_CONVERGED, STATUS_MAX_ITERS
+                        ).astype("<U24")
+    # a non-finite RHS (e.g. an injected NaN that survived to the last
+    # rung) is a breakdown, not "clean math that ran out of iterations" —
+    # report it so the ladder ends in "failed" rather than "max_iters"
+    statuses[~(np.isfinite(r0n) & np.isfinite(rn))] = STATUS_NONFINITE
+    return (X[:, 0] if single else X, norms,
+            np.ones(B.shape[1], np.int64), statuses)

@@ -76,6 +76,22 @@ class SolverOptions:
       bitwise (eager backends); False trades that for vmapped batched
       operator applications.
 
+    Robustness (PR 8 — see README "Robustness & failure handling"):
+
+    * ``guard`` — per-column breakdown detection in the eager PCG loops
+      (non-finite residual, indefinite ``p·Ap``, stagnation window).
+      Observational only: clean solves are bitwise-unchanged with guards
+      on or off.
+    * ``stagnation_window`` — iterations without relative residual
+      improvement before a solve is declared stagnated.
+    * ``fallback`` — the facade's graceful-degradation ladder: on
+      breakdown, retry once against a freshly rebuilt hierarchy (evicting
+      a possibly-poisoned cache entry), then diagonal-preconditioned CG,
+      then (``n <= dense_fallback_max``) a dense nullspace-aware direct
+      solve. Every rung is recorded in ``SolveResult.diagnostics``.
+    * ``dense_fallback_max`` — largest ``n`` eligible for the dense
+      last-resort solve (an O(n³) factorization).
+
     Distributed backend only:
 
     * ``dist_nnz_threshold``, ``max_dist_levels`` — which hierarchy levels
@@ -114,6 +130,11 @@ class SolverOptions:
     precondition: bool = True
     # multi-RHS
     exact_columns: bool = True
+    # robustness: breakdown guards + degradation ladder
+    guard: bool = True
+    stagnation_window: int = 50
+    fallback: bool = True
+    dense_fallback_max: int = 4096
     # distributed
     dist_nnz_threshold: int = 10_000
     max_dist_levels: int = 3
@@ -133,6 +154,20 @@ class SolverOptions:
         if floor < 0 or (floor & (floor - 1)):
             raise ValueError(f"setup_bucket_floor must be 0 or a power of "
                              f"two, got {floor!r}")
+        if self.stagnation_window < 1:
+            raise ValueError(f"stagnation_window must be >= 1, got "
+                             f"{self.stagnation_window}")
+        if self.dense_fallback_max < 0:
+            raise ValueError(f"dense_fallback_max must be >= 0, got "
+                             f"{self.dense_fallback_max}")
+
+    def guard_config(self):
+        """The Krylov-layer guard policy this maps to (None = guards off)."""
+        from repro.core.krylov import GuardConfig
+
+        if not self.guard:
+            return None
+        return GuardConfig(stagnation_window=self.stagnation_window)
 
     def setup_config(self) -> SetupConfig:
         """The core-layer setup configuration this maps to."""

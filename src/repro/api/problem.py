@@ -241,6 +241,23 @@ class Problem:
         object.__setattr__(self, "_fingerprint", digest)
         return digest
 
+    def components(self) -> tuple[np.ndarray, int]:
+        """Connected components: ``(labels, n_components)``, memoized.
+
+        ``labels`` is an int32 (n,) array of 0-based component ids. A
+        connected graph returns ``n_components == 1``. The facade's
+        fallback solvers and the pathological-input tests use this to
+        build per-component nullspace projections
+        (``repro.core.components``).
+        """
+        cached = self.__dict__.get("_components")
+        if cached is None:
+            from repro.core.components import connected_components
+
+            cached = connected_components(self.n, self.rows, self.cols)
+            object.__setattr__(self, "_components", cached)
+        return cached
+
     def bucket_signature(self, floor: int = 0) -> tuple[int, int]:
         """The capacity buckets this problem's setup pads to.
 

@@ -4,6 +4,13 @@ The three legacy entry points returned three different info objects
 (``LaplacianSolveInfo``, a bare ``(x, norms)`` tuple, ``SolveInfo``). The
 facade normalises them: whatever backend ran, the caller gets the same
 fields with the same meanings, for one right-hand side or a block of them.
+
+PR 8 adds the robustness surface: ``status`` (the overall outcome code),
+``statuses`` (per-column Krylov status codes when the backend reports
+them), and ``diagnostics`` (the recorded rungs of the facade's
+degradation ladder). A clean converged solve reports
+``status="converged"`` and empty diagnostics — byte-for-byte the old
+behavior plus three new fields.
 """
 
 from __future__ import annotations
@@ -12,7 +19,33 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.krylov import (BREAKDOWN_STATUSES, STATUS_CONVERGED,
+                               STATUS_MAX_ITERS)
 from repro.core.wda import wda as _wda
+
+# Overall-outcome codes beyond the Krylov layer's own:
+STATUS_DEGRADED = "degraded"   # a ladder rung recovered the solve
+STATUS_FAILED = "failed"       # breakdown and every rung exhausted
+
+
+def worst_status(statuses) -> str:
+    """Collapse per-column status codes to the block's overall code.
+
+    Severity order: non-finite > indefinite > stagnation > max_iters >
+    converged — a block is only "converged" when every column is.
+    """
+    order = ("breakdown_nonfinite", "breakdown_indefinite", "stagnation",
+             STATUS_MAX_ITERS, STATUS_CONVERGED)
+    seen = set(str(s) for s in np.asarray(statuses).ravel())
+    for code in order:
+        if code in seen:
+            return code
+    return STATUS_CONVERGED
+
+
+def has_breakdown(statuses) -> bool:
+    return bool(statuses is not None
+                and worst_status(statuses) in BREAKDOWN_STATUSES)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -31,7 +64,17 @@ class SolveResult:
       matvec equivalents,
     * ``setup_seconds`` / ``solve_seconds`` — wall-clock (setup is the
       hierarchy build of the owning ``Solver``, amortised over its solves),
-    * ``n_rhs`` — number of right-hand sides (k).
+    * ``n_rhs`` — number of right-hand sides (k),
+    * ``status`` — overall outcome code: ``"converged"``, ``"max_iters"``
+      (honest non-convergence), a breakdown code
+      (``"breakdown_nonfinite"`` / ``"breakdown_indefinite"`` /
+      ``"stagnation"``), ``"degraded"`` (a breakdown recovered by the
+      facade's fallback ladder) or ``"failed"`` (ladder exhausted),
+    * ``statuses`` — per-column Krylov status codes, shape (k,), or None
+      when the backend doesn't report them (third-party handles),
+    * ``diagnostics`` — tuple of dicts, one per degradation-ladder rung
+      that ran (empty for a clean solve); each records the ``stage``, its
+      per-column ``statuses`` and whether it ``recovered``.
     """
 
     backend: str
@@ -44,13 +87,18 @@ class SolveResult:
     setup_seconds: float
     solve_seconds: float
     n_rhs: int
+    status: str = STATUS_CONVERGED
+    statuses: np.ndarray | None = None
+    diagnostics: tuple = ()
 
 
 def result_from_history(backend: str, norms: np.ndarray,
                         iters_per_rhs: np.ndarray, tol: float,
                         work_per_iteration: float, setup_seconds: float,
                         solve_seconds: float,
-                        ref_norms: np.ndarray | None = None) -> SolveResult:
+                        ref_norms: np.ndarray | None = None,
+                        statuses=None, diagnostics: tuple = (),
+                        status: str | None = None) -> SolveResult:
     """Assemble a ``SolveResult`` from a (T+1, k) residual history.
 
     Trims the history at the slowest column's convergence point (frozen
@@ -59,6 +107,11 @@ def result_from_history(backend: str, norms: np.ndarray,
     is within ``tol`` of its initial norm — or of ``ref_norms`` when
     given (warm-started solves measure against ``||proj b||``, not the
     initial guess's own residual).
+
+    ``status`` defaults to the worst per-column code in ``statuses``, or
+    to converged/max_iters derived from the residuals when the backend
+    reported no codes. The facade overrides it with ``"degraded"`` /
+    ``"failed"`` after running its ladder.
     """
     norms = np.asarray(norms, np.float64)
     if norms.ndim == 1:
@@ -68,7 +121,15 @@ def result_from_history(backend: str, norms: np.ndarray,
     norms = norms[: it_max + 1]
     ref = (norms[0] if ref_norms is None
            else np.asarray(ref_norms, np.float64))
-    converged = bool(np.all(norms[-1] <= tol * ref))
+    with np.errstate(invalid="ignore"):
+        converged = bool(np.all(norms[-1] <= tol * ref))
+    if statuses is not None:
+        statuses = np.asarray(statuses)
+    if status is None:
+        if statuses is not None:
+            status = worst_status(statuses)
+        else:
+            status = STATUS_CONVERGED if converged else STATUS_MAX_ITERS
     frob = np.sqrt((norms ** 2).sum(axis=1))
     return SolveResult(
         backend=backend, converged=converged, iters=it_max,
@@ -76,4 +137,5 @@ def result_from_history(backend: str, norms: np.ndarray,
         wda=_wda(frob.tolist(), work_per_iteration),
         work_per_iteration=float(work_per_iteration),
         setup_seconds=float(setup_seconds),
-        solve_seconds=float(solve_seconds), n_rhs=norms.shape[1])
+        solve_seconds=float(solve_seconds), n_rhs=norms.shape[1],
+        status=status, statuses=statuses, diagnostics=tuple(diagnostics))

@@ -202,7 +202,11 @@ def schur_arrays(adj: COO, deg: jax.Array, elim: jax.Array, n, *,
 
     row_f = jnp.take(elim, adj.row, mode="fill", fill_value=False) & adj.valid
     # F -> C edges become P_F (scaled); C -> C edges survive into A_CC.
-    inv_deg_f = 1.0 / jnp.take(deg, f_vertices, mode="fill", fill_value=1.0)
+    # Clamped reciprocal: an isolated (deg=0) or denormal-degree F-vertex
+    # would otherwise put an Inf here that rides p_scale/pair_val into the
+    # Schur fill as NaN. For any normal degree the max() is a bitwise no-op.
+    inv_deg_f = 1.0 / jnp.maximum(
+        jnp.take(deg, f_vertices, mode="fill", fill_value=1.0), 1e-30)
     p_row = jnp.where(row_f, jnp.take(f_index,
                                       jnp.minimum(adj.row, n_cap - 1),
                                       mode="fill", fill_value=0), f_cap)

@@ -54,6 +54,7 @@ from repro.core.graph import GraphLevel, graph_from_adjacency, laplacian_dense
 from repro.core.smoothers import SmootherConfig, estimate_lambda_max
 from repro.core.strength import STRENGTH_METRICS
 from repro.sparse.coo import COO
+from repro.testing import faults
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,8 +179,36 @@ def attach_ell_transfers(transfers: Sequence[Transfer],
                  for t in transfers)
 
 
+def coarse_inverse(level: GraphLevel, alpha: float,
+                   row_h: np.ndarray, col_h: np.ndarray) -> jax.Array:
+    """Dense nullspace-regularized bottom solve: ``(L_c + α Σ_c J_c)⁻¹``.
+
+    ``row_h``/``col_h`` are the coarse adjacency's index arrays already on
+    host (both setup paths have them fetched for free at this point). On a
+    connected coarse graph this is the classic rank-one ``L + α 11ᵀ/n`` —
+    kept as the *exact* original expression, bitwise — but that matrix is
+    singular as soon as the graph splits: each component contributes its
+    own nullspace direction, so each gets its own ``J_c = 1_c 1_cᵀ / n_c``
+    regularizer (``repro.core.components``).
+    """
+    from repro.core.components import (component_ones_matrix,
+                                       connected_components)
+
+    L = laplacian_dense(level)
+    n_c = level.n
+    m = (row_h < n_c) & (col_h < n_c)
+    comp, n_comp = connected_components(n_c, row_h[m], col_h[m])
+    if n_comp == 1:
+        inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
+    else:
+        reg = jnp.asarray(component_ones_matrix(comp, n_comp))
+        inv = jnp.linalg.inv(L + alpha * reg)
+    return faults.site("setup.coarse_inv", inv)
+
+
 def build_hierarchy(adj: COO, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
     """Build the multigrid hierarchy in the configured ``setup_mode``."""
+    faults.checkpoint("setup.build")
     if cfg.setup_mode == "superstep":
         from repro.core.setup_step import build_hierarchy_superstep
 
@@ -207,6 +236,7 @@ def build_hierarchy_batch(adjs: Sequence[COO],
     ``setup_mode="eager"`` has no batched form — it falls back to a plain
     loop over :func:`build_hierarchy_eager` (same results, no batching).
     """
+    faults.checkpoint("setup.build")
     if cfg.setup_mode == "superstep":
         from repro.core.setup_step import build_hierarchy_superstep_batch
 
@@ -277,15 +307,16 @@ def build_hierarchy_eager(adj: COO, cfg: SetupConfig = SetupConfig()
             continue
         t = contract(level, coarse_id, n_c)
         t = dataclasses.replace(t, coarse=_shrink(t.coarse))
-        lam_maxes.append(estimate_lambda_max(s_level))
+        lam_maxes.append(faults.site("setup.lambda_max",
+                                     estimate_lambda_max(s_level)))
         transfers.append(t)
         level = t.coarse
 
-    # --- dense bottom solve: (L_c + α J)⁻¹ with J = 11ᵀ/n ----------------
-    L = laplacian_dense(level)
-    n_c = level.n
-    alpha = float(jax.device_get(jnp.mean(level.deg))) or 1.0
-    coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
+    # --- dense bottom solve: (L_c + α Σ_c J_c)⁻¹ -------------------------
+    alpha, row_h, col_h = jax.device_get(
+        (jnp.mean(level.deg), level.adj.row, level.adj.col))
+    coarse_inv = coarse_inverse(level, float(alpha) or 1.0,
+                                np.asarray(row_h), np.asarray(col_h))
 
     return Hierarchy(transfers=attach_ell_transfers(transfers, cfg),
                      lam_maxes=tuple(lam_maxes), coarse_inv=coarse_inv)

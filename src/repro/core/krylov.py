@@ -14,7 +14,20 @@ Two execution modes:
 
 Graph Laplacians are singular (nullspace = constants on connected graphs), so
 residuals/preconditioned residuals are projected mean-free each iteration —
-standard semidefinite-CG practice.
+standard semidefinite-CG practice. Disconnected graphs pass a per-component
+``project`` callable instead (``repro.core.components``); the default
+``None`` keeps the original global-mean projection bitwise-unchanged.
+
+**Breakdown guards** (PR 8): the eager solvers watch for the three ways PCG
+dies on hostile inputs — a non-finite residual norm (NaN/Inf anywhere in the
+iteration poisons it within one step), an indefinite or non-finite ``p·Ap``
+(the CG invariant requires it strictly positive on a PSD operator), and a
+stagnation window (no relative residual improvement for ``stagnation_window``
+iterations — the "silently iterating forever" mode). A tripped guard stops
+the affected solve/column with an explicit status instead of iterating on
+garbage; statuses surface on ``SolveInfo.status`` / ``BlockSolveInfo.status``
+and feed the ``repro.api`` degradation ladder. Guards only *observe* — on a
+clean solve the iterates are bitwise identical to the unguarded loop.
 
 The ``matvec`` callables these solvers drive are level matvecs that route
 through the ``repro.sparse.matvec`` operator layer: with
@@ -26,11 +39,55 @@ gather+segment-sum COO path — same trajectory, different execution format.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.testing import faults
+
+# Status codes reported by the eager solvers (SolveInfo.status and the
+# per-column BlockSolveInfo.status). BREAKDOWN_STATUSES are the ones the
+# repro.api degradation ladder reacts to; "max_iters" is an honest
+# non-convergence, not a breakdown.
+STATUS_CONVERGED = "converged"
+STATUS_MAX_ITERS = "max_iters"
+STATUS_NONFINITE = "breakdown_nonfinite"
+STATUS_INDEFINITE = "breakdown_indefinite"
+STATUS_STAGNATION = "stagnation"
+
+BREAKDOWN_STATUSES = frozenset(
+    {STATUS_NONFINITE, STATUS_INDEFINITE, STATUS_STAGNATION})
+
+
+def is_breakdown(status: str) -> bool:
+    return status in BREAKDOWN_STATUSES
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Breakdown-guard policy for the eager PCG loops.
+
+    ``stagnation_window`` iterations without the best residual improving
+    by a relative ``stagnation_rtol`` trips the stagnation guard. The
+    window is deliberately generous: a healthy PCG trajectory (even an
+    unpreconditioned one on a hard graph) improves far more than 0.01%
+    per 50 iterations, while a float32 solve pushed past its attainable
+    accuracy flatlines exactly.
+    """
+
+    stagnation_window: int = 50
+    stagnation_rtol: float = 1e-4
+
+
+def _as_guard(guard) -> GuardConfig | None:
+    if guard is None or guard is False:
+        return None
+    if guard is True:
+        return GuardConfig()
+    return guard
 
 
 @dataclasses.dataclass
@@ -38,6 +95,7 @@ class SolveInfo:
     iters: int
     residual_norms: list
     converged: bool
+    status: str = STATUS_MAX_ITERS
 
 
 @dataclasses.dataclass
@@ -47,6 +105,7 @@ class BlockSolveInfo:
     iters: np.ndarray           # int64 [k] — iterations each column ran
     residual_norms: np.ndarray  # float [T+1, k] — lockstep residual history
     converged: np.ndarray       # bool [k]
+    status: np.ndarray | None = None   # str [k] — per-column status codes
 
 
 def _project(v):
@@ -54,39 +113,69 @@ def _project(v):
 
 
 def pcg(matvec: Callable, b: jax.Array, precond: Callable | None = None,
-        x0: jax.Array | None = None, tol: float = 1e-8, maxiter: int = 500):
-    """Eager PCG with residual history. Returns (x, SolveInfo)."""
-    b = _project(b)
+        x0: jax.Array | None = None, tol: float = 1e-8, maxiter: int = 500,
+        project: Callable | None = None, guard=True):
+    """Eager PCG with residual history. Returns (x, SolveInfo).
+
+    ``project`` overrides the nullspace projection (default: global mean
+    subtraction — connected graphs). ``guard`` enables the breakdown
+    guards (bool or a :class:`GuardConfig`); they only observe, so clean
+    solves are bitwise-identical with guards on or off.
+    """
+    proj = _project if project is None else project
+    g = _as_guard(guard)
+    b = proj(b)
     x = jnp.zeros_like(b) if x0 is None else x0
-    r = _project(b - matvec(x))
+    r = proj(b - matvec(x))
     M = precond if precond is not None else (lambda v: v)
-    z = _project(M(r))
+    z = proj(faults.site("solve.precond", M(r)))
     p = z
     rz = jnp.vdot(r, z)
     r0n = float(jnp.linalg.norm(r))
     hist = [r0n]
     if r0n == 0:
-        return x, SolveInfo(0, hist, True)
+        return x, SolveInfo(0, hist, True, STATUS_CONVERGED)
+    if g is not None and not math.isfinite(r0n):
+        return x, SolveInfo(0, hist, False, STATUS_NONFINITE)
+    best, stall = r0n, 0
     for it in range(maxiter):
-        Ap = matvec(p)
-        alpha = rz / jnp.vdot(p, Ap)
+        Ap = faults.site("solve.spmv", matvec(p))
+        pAp = jnp.vdot(p, Ap)
+        if g is not None:
+            pApf = float(pAp)
+            if not math.isfinite(pApf) or pApf <= 0.0:
+                # stop BEFORE applying the poisoned step: x is the last
+                # finite iterate, not a NaN field
+                return x, SolveInfo(it, hist, False, STATUS_INDEFINITE)
+        alpha = rz / pAp
         x = x + alpha * p
-        r = _project(r - alpha * Ap)
+        r = proj(faults.site("solve.residual", r - alpha * Ap))
         rn = float(jnp.linalg.norm(r))
         hist.append(rn)
         if rn <= tol * r0n:
-            return x, SolveInfo(it + 1, hist, True)
-        z = _project(M(r))
+            return x, SolveInfo(it + 1, hist, True, STATUS_CONVERGED)
+        if g is not None:
+            if not math.isfinite(rn):
+                return x, SolveInfo(it + 1, hist, False, STATUS_NONFINITE)
+            if rn < best * (1.0 - g.stagnation_rtol):
+                best, stall = rn, 0
+            else:
+                stall += 1
+                if stall >= g.stagnation_window:
+                    return x, SolveInfo(it + 1, hist, False,
+                                        STATUS_STAGNATION)
+        z = proj(faults.site("solve.precond", M(r)))
         rz_new = jnp.vdot(r, z)
         beta = rz_new / rz
         p = z + beta * p
         rz = rz_new
-    return x, SolveInfo(maxiter, hist, False)
+    return x, SolveInfo(maxiter, hist, False, STATUS_MAX_ITERS)
 
 
 def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
               tol: float = 1e-8, maxiter: int = 500,
-              exact_columns: bool = True, x0: jax.Array | None = None):
+              exact_columns: bool = True, x0: jax.Array | None = None,
+              project: Callable | None = None, guard=True):
     """Blocked multi-RHS PCG: k single-RHS trajectories advanced in lockstep.
 
     ``B`` is ``(n, k)`` — one graph, many right-hand sides (the serving
@@ -106,7 +195,12 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
 
     Columns converge independently: once a column's residual drops below
     ``tol * ||r0||`` its step size is zeroed (x, r freeze) while the rest
-    keep iterating; the loop exits when every column has converged.
+    keep iterating; the loop exits when every column has converged. The
+    breakdown guards (``guard``) work the same way per column: a column
+    whose residual goes non-finite, whose ``p·Ap`` stops being positive, or
+    whose residual stagnates freezes with its own status code while the
+    healthy columns keep iterating — one poisoned request cannot take down
+    a batched block.
 
     ``tol`` and ``maxiter`` accept a scalar or a per-column ``(k,)`` array
     (the serving layer batches requests with different tolerances into one
@@ -120,14 +214,18 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
     ``x0=None`` starts from zeros and is bitwise-identical to the
     pre-``x0`` behavior.
 
+    ``project`` overrides the per-column nullspace projection (a single-
+    vector callable, lifted over columns the same way the operators are).
+
     Returns ``(X, BlockSolveInfo)`` with per-column iteration counts,
-    converged flags, and the (T+1, k) residual history (rows beyond a
-    column's own convergence hold its frozen residual norm).
+    converged flags, status codes, and the (T+1, k) residual history (rows
+    beyond a column's own convergence hold its frozen residual norm).
     """
     B = jnp.asarray(B)
     if B.ndim != 2:
         raise ValueError(f"pcg_block expects B of shape (n, k), got {B.shape}")
     k = B.shape[1]
+    g = _as_guard(guard)
     # Per-column tol/maxiter: scalars pass through untouched (bitwise-stable
     # trajectories); arrays must be (k,) and act elementwise below.
     if np.ndim(tol):
@@ -170,8 +268,17 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
     def cmean(V):
         return jnp.stack([jnp.mean(V[:, j]) for j in range(k)])
 
-    def proj(V):
-        return V - cmean(V)[None, :]
+    if project is None:
+        def proj(V):
+            return V - cmean(V)[None, :]
+    elif exact_columns:
+        def proj(V):
+            return jnp.stack([project(V[:, j]) for j in range(k)], axis=1)
+    else:
+        _bproj = jax.vmap(project, in_axes=1, out_axes=1)
+
+        def proj(V):
+            return _bproj(V)
 
     def cdot(U, V):
         return jnp.stack([jnp.vdot(U[:, j], V[:, j]) for j in range(k)])
@@ -189,66 +296,115 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
             raise ValueError(f"x0 must match B's shape {B.shape}, "
                              f"got {X.shape}")
     R = proj(B - bmv(X, all_cols))
-    Z = proj(bM(R, all_cols))
+    Z = proj(faults.site("solve.precond", bM(R, all_cols)))
     P = Z
     rz = cdot(R, Z)
     r0n = np.asarray(jax.device_get(cnorm(R)))
     hist = [r0n]
+    status = np.full(k, "", dtype="<U24")
     if x0 is None:
         # bitwise-pinned pre-x0 path: tolerance relative to the initial
-        # residual, which IS ||proj b|| when starting from zeros
+        # residual, which IS ||proj b|| when starting from zeros. NB the
+        # done-test is written so a NaN r0n stays ACTIVE (every comparison
+        # with NaN is False) and falls through to the guard below.
         ref = r0n
-        active = r0n > 0.0
+        done0 = r0n == 0.0
     else:
         # warm starts measure against ||proj b|| (scipy's convention): a
         # column whose guess is already converged runs zero iterations
         # instead of chasing tol times its own tiny initial residual
         ref = np.asarray(jax.device_get(cnorm(B)))
-        active = r0n > tol * ref
+        done0 = r0n <= tol * ref
+    status[done0] = STATUS_CONVERGED
+    active = ~done0
+    if g is not None:
+        dead = active & ~np.isfinite(r0n)
+        if dead.any():
+            status[dead] = STATUS_NONFINITE
+            active = active & ~dead
+    best = np.where(np.isfinite(r0n), r0n, np.inf)
+    stall = np.zeros(k, np.int64)
     iters = np.zeros(k, np.int64)
     for _ in range(n_rounds):
         active = active & (iters < maxiter)
         if not active.any():
             break
+        Ap = faults.site("solve.spmv", bmv(P, active))
+        pAp = cdot(P, Ap)
+        if g is not None:
+            pApf = np.asarray(jax.device_get(pAp))
+            bad = active & (~np.isfinite(pApf) | (pApf <= 0.0))
+            if bad.any():
+                # freeze the broken columns BEFORE the update: their x stays
+                # the last finite iterate while healthy columns continue
+                status[bad] = STATUS_INDEFINITE
+                active = active & ~bad
+                if not active.any():
+                    break
         act = jnp.asarray(active)
         iters += active
-        Ap = bmv(P, active)
-        pAp = cdot(P, Ap)
         alpha = jnp.where(act, rz / pAp, 0.0)
         X = X + alpha[None, :] * P
         # Freeze converged columns exactly: re-projecting them every
         # iteration would keep shaving off the ~eps nullspace leak and
         # drift their (already reported) residuals.
-        R = jnp.where(act[None, :], proj(R - alpha[None, :] * Ap), R)
+        R = jnp.where(act[None, :],
+                      proj(faults.site("solve.residual",
+                                       R - alpha[None, :] * Ap)), R)
         rn = np.asarray(jax.device_get(cnorm(R)))
         hist.append(rn)
-        active = active & (rn > tol * ref)
+        just_done = active & (rn <= tol * ref)
+        status[just_done] = STATUS_CONVERGED
+        active = active & ~just_done
+        if g is not None:
+            dead = active & ~np.isfinite(rn)
+            if dead.any():
+                status[dead] = STATUS_NONFINITE
+                active = active & ~dead
+            improved = active & (rn < best * (1.0 - g.stagnation_rtol))
+            best = np.where(improved, rn, best)
+            stall = np.where(improved, 0, stall + active)
+            stalled = active & (stall >= g.stagnation_window)
+            if stalled.any():
+                status[stalled] = STATUS_STAGNATION
+                active = active & ~stalled
         # Z only matters for still-active columns (a just-converged column
         # never uses its search direction again — pcg returns right here).
-        Z = jnp.where(jnp.asarray(active)[None, :], proj(bM(R, active)), Z)
+        Z = jnp.where(jnp.asarray(active)[None, :],
+                      proj(faults.site("solve.precond", bM(R, active))), Z)
         rz_new = cdot(R, Z)
         beta = jnp.where(jnp.asarray(active), rz_new / rz, 0.0)
         P = Z + beta[None, :] * P
         rz = rz_new
     norms = np.stack(hist)
     converged = norms[-1] <= tol * ref
+    status[status == ""] = np.where(converged, STATUS_CONVERGED,
+                                    STATUS_MAX_ITERS)[status == ""]
     return X, BlockSolveInfo(iters=iters, residual_norms=norms,
-                             converged=converged)
+                             converged=converged, status=status)
 
 
 def pcg_scanned(matvec: Callable, b: jax.Array, precond: Callable | None = None,
-                n_iters: int = 50):
+                n_iters: int = 50, project: Callable | None = None):
     """Fixed-iteration PCG as one scanned XLA program.
 
     Returns (x, residual_norms [n_iters+1]). This is the jit/dry-run path:
     all collectives (matvec + 2 dots + preconditioner) appear in one HLO so
     the roofline extraction sees the whole iteration.
+
+    No host-side breakdown guards run inside the scan (the body stays one
+    fixed XLA program); callers that need per-column breakdown detection on
+    this path inspect the returned norms host-side — a NaN/Inf in a
+    column's history marks the iteration it broke
+    (``repro.dist.solver.DistLaplacianSolver.solve_block`` does exactly
+    that and stops fetching further chunks).
     """
+    proj = _project if project is None else project
     M = precond if precond is not None else (lambda v: v)
-    b = _project(b)
+    b = proj(b)
     x0 = jnp.zeros_like(b)
-    r0 = _project(b - matvec(x0))
-    z0 = _project(M(r0))
+    r0 = proj(b - matvec(x0))
+    z0 = proj(M(r0))
     carry0 = (x0, r0, z0, z0, jnp.vdot(r0, z0))
 
     def body(carry, _):
@@ -256,8 +412,8 @@ def pcg_scanned(matvec: Callable, b: jax.Array, precond: Callable | None = None,
         Ap = matvec(p)
         alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
         x = x + alpha * p
-        r = _project(r - alpha * Ap)
-        z = _project(M(r))
+        r = proj(r - alpha * Ap)
+        z = proj(M(r))
         rz_new = jnp.vdot(r, z)
         beta = rz_new / jnp.maximum(rz, 1e-30)
         p = z + beta * p
@@ -265,6 +421,25 @@ def pcg_scanned(matvec: Callable, b: jax.Array, precond: Callable | None = None,
 
     (x, r, *_), norms = jax.lax.scan(body, carry0, None, length=n_iters)
     return x, jnp.concatenate([jnp.linalg.norm(r0)[None], norms])
+
+
+def scan_norms_status(norms: np.ndarray, tol, ref: np.ndarray) -> np.ndarray:
+    """Per-column status codes from a (T+1, k) scanned residual history.
+
+    The fixed-shape scan path cannot guard inside the program; this is the
+    host-side postmortem: a column whose history contains a non-finite
+    entry broke down, otherwise it converged iff its final norm is within
+    ``tol * ref``.
+    """
+    norms = np.asarray(norms, np.float64)
+    if norms.ndim == 1:
+        norms = norms[:, None]
+    k = norms.shape[1]
+    status = np.full(k, STATUS_MAX_ITERS, dtype="<U24")
+    finite = np.isfinite(norms).all(axis=0)
+    status[~finite] = STATUS_NONFINITE
+    status[finite & (norms[-1] <= np.asarray(tol) * ref)] = STATUS_CONVERGED
+    return status
 
 
 def cg(matvec, b, **kw):

@@ -37,7 +37,6 @@ from repro.core.smoothers import estimate_lambda_max
 from repro.core.solver import LaplacianSolver
 from repro.core.strength import STRENGTH_METRICS
 from repro.graphs.generators import random_relabel, to_laplacian_coo
-from repro.core.graph import laplacian_dense
 import dataclasses
 import jax
 
@@ -134,10 +133,11 @@ def build_serial_hierarchy(adj, cfg: SetupConfig = SetupConfig()) -> Hierarchy:
         transfers.append(t)
         level = t.coarse
 
-    L = laplacian_dense(level)
-    n_c = level.n
-    alpha = float(jax.device_get(jnp.mean(level.deg))) or 1.0
-    coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
+    from repro.core.hierarchy import coarse_inverse
+
+    alpha, row_h, col_h = jax.device_get(
+        (jnp.mean(level.deg), level.adj.row, level.adj.col))
+    coarse_inv = coarse_inverse(level, float(alpha) or 1.0, row_h, col_h)
     return Hierarchy(transfers=attach_ell_transfers(transfers, cfg),
                      lam_maxes=tuple(lam_maxes), coarse_inv=coarse_inv)
 
@@ -158,7 +158,11 @@ def serial_lamg_solver(n, rows, cols, vals,
     if random_ordering:
         rows, cols, perm, inv_perm = random_relabel(
             n, rows, cols, setup_config.seed)
+    from repro.core.solver import _detect_components
+
+    comp, n_comp = _detect_components(n, rows, cols)
     adj = to_laplacian_coo(n, rows, cols, vals, capacity=capacity)
     h = build_serial_hierarchy(adj, setup_config)
     return LaplacianSolver(hierarchy=h, cycle_config=cycle_config, n=n,
-                           perm=perm, inv_perm=inv_perm)
+                           perm=perm, inv_perm=inv_perm,
+                           comp=comp, n_comp=n_comp)

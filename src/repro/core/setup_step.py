@@ -90,6 +90,7 @@ from repro.core.smoothers import estimate_lambda_max
 from repro.core.strength import STRENGTH_METRICS
 from repro.sparse.coo import COO, coalesce_arrays
 from repro.sparse.ell import ELL, ell_layout_traced
+from repro.testing import faults
 
 
 # ----------------------------------------------------------------------------
@@ -737,17 +738,19 @@ def _setup_plan(adj: COO, cfg, profile: list | None = None):
             lam_maxes.append(jnp.asarray(0.0))
         else:
             t = _wrap_agg(level, spec)
-            lam_maxes.append(spec["out"]["lam"])
+            lam_maxes.append(faults.site("setup.lambda_max",
+                                         spec["out"]["lam"]))
         transfers.append(t)
         level = t.coarse
 
-    from repro.core.graph import laplacian_dense
+    from repro.core.hierarchy import coarse_inverse
 
-    L = laplacian_dense(level)
-    n_c = level.n
-    (alpha,) = yield ("fetch", (jnp.mean(level.deg),))
-    alpha = float(alpha) or 1.0
-    coarse_inv = jnp.linalg.inv(L + alpha * jnp.ones((n_c, n_c)) / n_c)
+    # ONE fetch (the sync-ledger contract): the alpha scalar plus the
+    # coarse index arrays the nullspace/component analysis needs.
+    alpha, row_h, col_h = yield ("fetch", (jnp.mean(level.deg),
+                                           level.adj.row, level.adj.col))
+    coarse_inv = coarse_inverse(level, float(alpha) or 1.0,
+                                np.asarray(row_h), np.asarray(col_h))
     return Hierarchy(transfers=attach_ell_transfers(transfers, cfg),
                      lam_maxes=tuple(lam_maxes), coarse_inv=coarse_inv)
 

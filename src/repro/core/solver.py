@@ -41,6 +41,20 @@ class LaplacianSolveInfo:
     converged: bool
     wda: float
     work_per_iteration: float
+    status: str = "max_iters"           # krylov status code (PR 8)
+
+
+def _detect_components(n: int, rows, cols) -> tuple:
+    """Host-side component detection on the (relabeled) edge list.
+
+    Returns ``(comp, n_comp)`` with ``comp=None`` for connected graphs —
+    the common case costs one numpy label-propagation pass at setup time
+    and leaves the solve path untouched.
+    """
+    from repro.core.components import connected_components
+
+    comp, n_comp = connected_components(n, rows, cols)
+    return (comp, n_comp) if n_comp > 1 else (None, 1)
 
 
 @dataclasses.dataclass
@@ -50,6 +64,12 @@ class LaplacianSolver:
     n: int
     perm: np.ndarray | None = None          # random ordering (paper §2.2)
     inv_perm: np.ndarray | None = None
+    # Connected-component labels in INTERNAL (relabeled) vertex order, or
+    # None when the graph is connected. Disconnected graphs swap the
+    # Krylov layer's global-mean nullspace projection for a per-component
+    # one (repro.core.components) — with comp=None nothing changes.
+    comp: np.ndarray | None = None
+    n_comp: int = 1
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -65,10 +85,12 @@ class LaplacianSolver:
         if random_ordering:
             rows, cols, perm, inv_perm = random_relabel(
                 n, rows, cols, setup_config.seed)
+        comp, n_comp = _detect_components(n, rows, cols)
         adj = to_laplacian_coo(n, rows, cols, vals, capacity=capacity)
         h = build_hierarchy(adj, setup_config)
         return LaplacianSolver(hierarchy=h, cycle_config=cycle_config, n=n,
-                               perm=perm, inv_perm=inv_perm)
+                               perm=perm, inv_perm=inv_perm,
+                               comp=comp, n_comp=n_comp)
 
     @staticmethod
     def setup_batch(problems,
@@ -93,14 +115,31 @@ class LaplacianSolver:
             if random_ordering:
                 rows, cols, perm, inv_perm = random_relabel(
                     n, rows, cols, setup_config.seed)
-            preps.append((n, perm, inv_perm))
+            preps.append((n, perm, inv_perm,
+                          *_detect_components(n, rows, cols)))
             adjs.append(to_laplacian_coo(n, rows, cols, vals))
         hs = build_hierarchy_batch(adjs, setup_config)
         return [LaplacianSolver(hierarchy=h, cycle_config=cycle_config,
-                                n=n, perm=perm, inv_perm=inv_perm)
-                for h, (n, perm, inv_perm) in zip(hs, preps)]
+                                n=n, perm=perm, inv_perm=inv_perm,
+                                comp=comp, n_comp=n_comp)
+                for h, (n, perm, inv_perm, comp, n_comp) in zip(hs, preps)]
 
     # ------------------------------------------------------------------
+    @property
+    def projector(self):
+        """Per-component nullspace projector (internal order), or None on
+        connected graphs (pcg then keeps its default global-mean
+        projection — the bitwise-pinned clean path)."""
+        if self.comp is None:
+            return None
+        proj = getattr(self, "_projector", None)
+        if proj is None:
+            from repro.core.components import component_projector
+
+            proj = component_projector(self.comp, self.n_comp)
+            object.__setattr__(self, "_projector", proj)
+        return proj
+
     def _to_internal(self, b):
         return b[jnp.asarray(self.inv_perm)] if self.perm is not None else b
         # note: internal[new] = b[old] with new = perm[old]  ⇔  take(b, inv_perm)
@@ -120,21 +159,23 @@ class LaplacianSolver:
 
     # ------------------------------------------------------------------
     def solve(self, b, tol: float = 1e-8, maxiter: int = 200,
-              precondition: bool = True) -> tuple[jax.Array, LaplacianSolveInfo]:
+              precondition: bool = True,
+              guard=True) -> tuple[jax.Array, LaplacianSolveInfo]:
         b_int = self._to_internal(jnp.asarray(b, jnp.float32))
         M = self.precondition if precondition else None
-        x, info = pcg(self.matvec, b_int, precond=M, tol=tol, maxiter=maxiter)
+        x, info = pcg(self.matvec, b_int, precond=M, tol=tol, maxiter=maxiter,
+                      project=self.projector, guard=guard)
         w = self.iteration_work(precondition)
         out = LaplacianSolveInfo(
             iters=info.iters, residual_norms=info.residual_norms,
             converged=info.converged, work_per_iteration=w,
-            wda=wda(info.residual_norms, w))
+            wda=wda(info.residual_norms, w), status=info.status)
         return self._from_internal(x), out
 
     # ------------------------------------------------------------------
     def solve_block(self, B, tol: float = 1e-8, maxiter: int = 200,
                     precondition: bool = True, exact_columns: bool = True,
-                    x0=None) -> tuple[jax.Array, BlockSolveInfo]:
+                    x0=None, guard=True) -> tuple[jax.Array, BlockSolveInfo]:
         """Blocked multi-RHS solve: ``B`` is (n, k), one hierarchy, k solves.
 
         With ``exact_columns=True`` each column's trajectory is bitwise
@@ -150,7 +191,7 @@ class LaplacianSolver:
         M = self.precondition if precondition else None
         X, info = pcg_block(self.matvec, B_int, precond=M, tol=tol,
                             maxiter=maxiter, exact_columns=exact_columns,
-                            x0=x0_int)
+                            x0=x0_int, project=self.projector, guard=guard)
         return self._from_internal(X), info
 
     def iteration_work(self, precondition: bool = True) -> float:
@@ -164,11 +205,13 @@ class LaplacianSolver:
         """A pure fixed-shape function (b -> x, residual_norms): jit target."""
         h = self.hierarchy
         cyc = self.cycle_config
+        proj = self.projector
 
         def solve_step(b):
             return pcg_scanned(
                 lambda v: h.transfers[0].fine.laplacian_matvec(v), b,
-                precond=lambda r: apply_cycle(h, r, cyc), n_iters=n_iters)
+                precond=lambda r: apply_cycle(h, r, cyc), n_iters=n_iters,
+                project=proj)
 
         return solve_step
 

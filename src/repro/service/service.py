@@ -25,6 +25,18 @@ programs, and the same answers.
 
 ``stats()`` surfaces the serving counters: queue depth, setup batch
 occupancy, cache hit rate, and end-to-end request latency percentiles.
+
+Fault isolation (PR 8): one poisoned request cannot take down a flush.
+Setup and solve groups run under per-group exception isolation — a failed
+batched group is retried per-ticket (capped at one retry per ticket), and
+a ticket that still fails carries the exception on ``Ticket.error`` while
+the rest of the flush completes. Per-column Krylov breakdowns route the
+affected ticket through the facade's degradation ladder (rebuild →
+diag-CG → dense; ``SolverOptions.fallback``), which also evicts the
+poisoned hierarchy from the cache. An optional per-flush deadline budget
+bounds tail latency: requests not served when the budget runs out fail
+with an explicit deadline error instead of holding the flush open.
+``stats()`` adds failure/retry/fallback/deadline counters.
 """
 
 from __future__ import annotations
@@ -38,7 +50,8 @@ from repro.api.cache import HierarchyCache
 from repro.api.options import SolverOptions
 from repro.api.problem import Problem
 from repro.api.registry import get_backend, resolve_backend
-from repro.api.result import SolveResult, result_from_history
+from repro.api.result import SolveResult, has_breakdown, result_from_history
+from repro.testing import faults
 
 # Backends whose solve_block accepts per-column (k,) tol / max-iters
 # arrays; other backends get one solve_block call per request.
@@ -46,15 +59,18 @@ _BLOCKABLE = ("single", "serial_ref")
 
 
 class ServiceError(RuntimeError):
-    """A service request was used before it was served."""
+    """A service request failed, or was used before it was served."""
 
 
 class Ticket:
-    """A submitted request; resolved by the next ``flush()``.
+    """A submitted request; resolved (or failed) by the next ``flush()``.
 
-    ``done()`` says whether the request has been served; ``result()``
+    ``status`` is ``"pending"`` → ``"done"`` | ``"failed"``; ``done()``
+    says whether the request has been resolved either way. ``result()``
     returns ``(x, SolveResult)`` with ``x`` shaped like the submitted
-    ``b`` (a 1-D RHS comes back 1-D).
+    ``b`` (a 1-D RHS comes back 1-D) — or raises :class:`ServiceError`
+    carrying this ticket's own failure (``Ticket.error``) if its serve
+    failed; other tickets in the same flush are unaffected.
     """
 
     def __init__(self, seq: int, problem: Problem, B: np.ndarray,
@@ -69,15 +85,25 @@ class Ticket:
         self._submitted = time.perf_counter()
         self._x: np.ndarray | None = None
         self._result: SolveResult | None = None
+        self.error: BaseException | None = None
 
     @property
     def n_rhs(self) -> int:
         return self._B.shape[1]
 
+    @property
+    def status(self) -> str:
+        if self.error is not None:
+            return "failed"
+        return "done" if self._result is not None else "pending"
+
     def done(self) -> bool:
-        return self._result is not None
+        return self._result is not None or self.error is not None
 
     def result(self) -> tuple[np.ndarray, SolveResult]:
+        if self.error is not None:
+            raise ServiceError(
+                f"request {self.seq} failed: {self.error!r}") from self.error
         if self._result is None:
             raise ServiceError(
                 "request not served yet — call SolverService.flush() first")
@@ -98,14 +124,19 @@ class SolverService:
 
     def __init__(self, options: SolverOptions | None = None,
                  backend: str = "auto", mesh=None,
-                 cache: HierarchyCache | None = None, max_batch: int = 8):
+                 cache: HierarchyCache | None = None, max_batch: int = 8,
+                 flush_deadline: float | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if flush_deadline is not None and flush_deadline <= 0:
+            raise ValueError(f"flush_deadline must be positive seconds, "
+                             f"got {flush_deadline}")
         self.options = options or SolverOptions()
         self.backend = resolve_backend(backend, mesh, self.options)
         self.mesh = mesh
         self.cache = cache if cache is not None else HierarchyCache()
         self.max_batch = max_batch
+        self.flush_deadline = flush_deadline
         self._pending: list[Ticket] = []
         self._seq = 0
         self._latencies: list[float] = []
@@ -113,7 +144,9 @@ class SolverService:
                        setups_batched=0, setups_looped=0,
                        setup_batches=0, solve_blocks=0,
                        rhs_columns=0, solve_seconds=0.0,
-                       setup_seconds=0.0)
+                       setup_seconds=0.0,
+                       failures=0, retries=0, fallbacks=0,
+                       deadline_expired=0)
 
     # ------------------------------------------------------------------
     def submit(self, problem: Problem, b, *, tol: float | None = None,
@@ -147,6 +180,10 @@ class SolverService:
                 f"b contains non-finite values (first bad column: {j}): "
                 f"NaN/Inf right-hand sides cannot converge — sanitize the "
                 f"request before submitting")
+        # Fault site: corruption AFTER admission validation — the harness
+        # models an RHS that goes bad in flight (transfer, bitflip),
+        # exercising the solve-time guards instead of the admission checks.
+        B = faults.site("service.request", B)
         t = Ticket(
             self._seq, problem, B, single,
             self.options.tol if tol is None else float(tol),
@@ -159,32 +196,59 @@ class SolverService:
         return t
 
     # ------------------------------------------------------------------
-    def flush(self) -> list[Ticket]:
-        """Serve every pending request; returns the served tickets."""
+    def flush(self, deadline: float | None = None) -> list[Ticket]:
+        """Serve every pending request; returns the resolved tickets.
+
+        ``deadline`` (seconds; default: the service's ``flush_deadline``)
+        bounds this flush's wall clock: when the budget runs out, work
+        stops at the next group boundary and every not-yet-served ticket
+        fails with an explicit deadline :class:`ServiceError` (counted in
+        ``stats()["deadline_expired"]``) instead of holding the flush
+        open. Individual setup/solve failures are isolated per ticket —
+        see the module docstring.
+        """
         pending, self._pending = self._pending, []
         if not pending:
             return []
         self._c["flushes"] += 1
-        self._setup_pass(pending)
-        self._solve_pass(pending)
+        budget = self.flush_deadline if deadline is None else deadline
+        t_start = time.perf_counter()
+
+        def expired() -> bool:
+            return (budget is not None
+                    and time.perf_counter() - t_start > budget)
+
+        self._setup_pass(pending, expired)
+        self._solve_pass(pending, expired)
+        for t in pending:
+            if t._result is None and t.error is None:
+                t.error = ServiceError(
+                    f"flush deadline of {budget}s exceeded before request "
+                    f"{t.seq} was served")
+                self._c["deadline_expired"] += 1
         now = time.perf_counter()
         self._latencies.extend(now - t._submitted for t in pending)
-        self._c["served"] += len(pending)
+        self._c["served"] += sum(t.status == "done" for t in pending)
         return pending
 
     # ------------------------------------------------------------------
-    def _setup_pass(self, pending: list[Ticket]) -> None:
-        """Build every missing hierarchy, vmap-batching same-bucket ones."""
-        missing: dict[tuple, Ticket] = {}
-        probed: set = set()
+    def _setup_pass(self, pending: list[Ticket], expired) -> None:
+        """Build every missing hierarchy, vmap-batching same-bucket ones.
+
+        A chunk that fails (or a raising ``service.setup`` fault) is
+        retried per-ticket once; a ticket whose setup still fails carries
+        the exception for every request on that hierarchy — the rest of
+        the pass continues.
+        """
+        by_key: dict[tuple, list[Ticket]] = {}
         for t in pending:
-            if t._key in probed:
-                continue
-            probed.add(t._key)
+            by_key.setdefault(t._key, []).append(t)
+        missing: dict[tuple, Ticket] = {}
+        for key, ts in by_key.items():
             # One counted lookup per unique hierarchy per flush: the
             # cache's hit/miss stats then read as admission outcomes.
-            if self.cache.get(t._key) is None:
-                missing[t._key] = t
+            if self.cache.get(key) is None:
+                missing[key] = ts[0]
         if not missing:
             return
         t0 = time.perf_counter()
@@ -197,15 +261,43 @@ class SolverService:
         for sig in sorted(buckets):
             group = buckets[sig]
             while group:
+                if expired():
+                    self._c["setup_seconds"] += time.perf_counter() - t0
+                    return
                 chunk, group = group[:self.max_batch], group[self.max_batch:]
-                if can_batch and len(chunk) > 1:
-                    self._setup_batched(chunk)
-                else:
-                    for t in chunk:
-                        self.cache.put(t._key, get_backend(self.backend)(
-                            t.problem, self.options, self.mesh))
-                        self._c["setups_looped"] += 1
+                try:
+                    faults.checkpoint("service.setup")
+                    if can_batch and len(chunk) > 1:
+                        self._setup_batched(chunk)
+                    else:
+                        for t in chunk:
+                            self._setup_one(t)
+                except Exception:
+                    self._c["failures"] += 1
+                    self._retry_setups(chunk, by_key, expired)
         self._c["setup_seconds"] += time.perf_counter() - t0
+
+    def _setup_one(self, t: Ticket) -> None:
+        self.cache.put(t._key, get_backend(self.backend)(
+            t.problem, self.options, self.mesh))
+        self._c["setups_looped"] += 1
+
+    def _retry_setups(self, chunk: list[Ticket], by_key: dict,
+                      expired) -> None:
+        """Per-ticket isolation after a failed setup chunk: one capped
+        retry each; a still-failing setup fails only that hierarchy's
+        tickets."""
+        for t in chunk:
+            if expired() or self.cache.peek(t._key) is not None:
+                continue
+            self._c["retries"] += 1
+            try:
+                faults.checkpoint("service.setup")
+                self._setup_one(t)
+            except Exception as e:
+                self._c["failures"] += 1
+                for tk in by_key[t._key]:
+                    tk.error = e
 
     def _setup_batched(self, chunk: list[Ticket]) -> None:
         """One vmapped super-step run -> len(chunk) cached handles."""
@@ -223,19 +315,51 @@ class SolverService:
         self._c["setups_batched"] += len(chunk)
 
     # ------------------------------------------------------------------
-    def _solve_pass(self, pending: list[Ticket]) -> None:
+    def _solve_pass(self, pending: list[Ticket], expired) -> None:
         """Group same-hierarchy requests into blocked solves."""
         groups: dict[tuple, list[Ticket]] = {}
         for t in pending:
-            groups.setdefault(t._key, []).append(t)
+            if t.error is None:
+                groups.setdefault(t._key, []).append(t)
         for key in sorted(groups):
+            if expired():
+                return
             tickets = sorted(groups[key], key=lambda t: t.seq)
             handle = self.cache.peek(key)
+            if handle is None:
+                err = ServiceError(
+                    "no hierarchy for this request (setup failed or the "
+                    "flush deadline expired before it was built)")
+                for t in tickets:
+                    t.error = err
+                continue
             if self.backend in _BLOCKABLE:
-                self._solve_merged(handle, tickets)
+                self._solve_group(handle, tickets, expired)
             else:
                 for t in tickets:
+                    if expired():
+                        return
+                    self._solve_group(handle, [t], expired)
+
+    def _solve_group(self, handle, tickets: list[Ticket], expired) -> None:
+        """One merged solve with per-ticket fault isolation: a raising
+        group is split and retried ticket by ticket (capped at one retry
+        each), so a poisoned request fails alone."""
+        try:
+            faults.checkpoint("service.solve")
+            self._solve_merged(handle, tickets)
+        except Exception:
+            self._c["failures"] += 1
+            for t in tickets:
+                if expired():
+                    return
+                self._c["retries"] += 1
+                try:
+                    faults.checkpoint("service.solve")
                     self._solve_merged(handle, [t])
+                except Exception as e2:
+                    self._c["failures"] += 1
+                    t.error = e2
 
     def _solve_merged(self, handle, tickets: list[Ticket]) -> None:
         B = np.concatenate([t._B for t in tickets], axis=1)
@@ -249,7 +373,8 @@ class SolverService:
                 [np.full(k, t.max_iters, np.int64)
                  for t, k in zip(tickets, ks)])
         t0 = time.perf_counter()
-        X, norms, iters = handle.solve_block(B, tol, max_iters)
+        out = handle.solve_block(B, tol, max_iters)
+        X, norms, iters, statuses = out if len(out) == 4 else (*out, None)
         seconds = time.perf_counter() - t0
         self._c["solve_blocks"] += 1
         self._c["rhs_columns"] += B.shape[1]
@@ -258,14 +383,38 @@ class SolverService:
         for t, k in zip(tickets, ks):
             sl = slice(lo, lo + k)
             lo += k
+            sts = None if statuses is None else np.asarray(statuses)[sl]
+            if (sts is not None and has_breakdown(sts)
+                    and self.options.fallback):
+                self._fallback_ticket(handle, t)
+                continue
             # Wall-clock attribution: the block ran once; each request
             # reports its share by column count.
             t._result = result_from_history(
                 self.backend, norms[:, sl], iters[sl], t.tol,
                 handle.work_per_iteration, 0.0,
-                seconds * (k / B.shape[1]))
+                seconds * (k / B.shape[1]), statuses=sts)
             X_t = np.asarray(X[:, sl])
             t._x = X_t[:, 0] if t._single else X_t
+
+    def _fallback_ticket(self, handle, t: Ticket) -> None:
+        """Route one broken-down ticket through the facade's degradation
+        ladder (retry against a rebuilt hierarchy, then diag-CG, then
+        dense) — sharing this service's cache, so a poisoned hierarchy is
+        also invalidated for future requests."""
+        from repro.api.facade import Solver as _FacadeSolver
+
+        self._c["fallbacks"] += 1
+        solver = _FacadeSolver(t.problem, self.options, self.backend,
+                               handle, 0.0, mesh=self.mesh,
+                               cache=self.cache)
+        try:
+            x, result = solver.solve(t._B[:, 0] if t._single else t._B,
+                                     tol=t.tol, max_iters=t.max_iters)
+            t._x, t._result = x, result
+        except Exception as e:
+            self._c["failures"] += 1
+            t.error = e
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:

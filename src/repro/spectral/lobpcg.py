@@ -55,6 +55,14 @@ class EigResult:
       ``solve_block`` applications the preconditioner issued and the total
       RHS columns they carried (the solve-block occupancy the benchmark
       reports),
+    * ``precond_status`` — the worst overall status any preconditioner
+      application reported (``"converged"`` < ``"max_iters"`` <
+      ``"degraded"`` < ``"failed"``; see ``SolveResult.status``). Inner
+      solves are truncated at ``inner_iters`` by design, so
+      ``"max_iters"`` here is normal; ``"degraded"``/``"failed"`` mean the
+      facade's ladder ran — a failed application falls back to the
+      unpreconditioned direction (W = R) for that iteration, so the
+      eigensolve itself still converges on clean math,
     * ``setup_seconds`` — hierarchy build wall time (0.0 on a cache hit).
     """
 
@@ -68,6 +76,11 @@ class EigResult:
     precond_solves: int
     precond_columns: int
     setup_seconds: float
+    precond_status: str = "converged"
+
+
+# severity ladder for the worst-status collapse over inner solves
+_STATUS_RANK = {"converged": 0, "max_iters": 1, "degraded": 2, "failed": 3}
 
 
 def _laplacian_csr(problem):
@@ -180,19 +193,28 @@ def lobpcg(problem, k: int = 8, *, options=None, backend: str = "auto",
 
     precond_solves = 0
     precond_columns = 0
+    precond_status = "converged"
 
     def apply_T(R):
         """Inexact L⁺ apply: one blocked multigrid solve per call."""
-        nonlocal precond_solves, precond_columns
+        nonlocal precond_solves, precond_columns, precond_status
         if solver is None:
             return R.copy()
-        W, _ = solver.solve(R.astype(np.float32), tol=inner_tol,
-                            max_iters=inner_iters)
+        W, res = solver.solve(R.astype(np.float32), tol=inner_tol,
+                              max_iters=inner_iters)
         precond_solves += 1
         # occupancy accounting: soft-locked columns ride along as zeros in
         # the fixed-shape block; only the nonzero columns are live work
         precond_columns += int((np.abs(R).max(axis=0) > 0).sum())
-        return np.asarray(W, np.float64)
+        if _STATUS_RANK.get(res.status, 3) > _STATUS_RANK[precond_status]:
+            precond_status = res.status
+        W = np.asarray(W, np.float64)
+        if res.status == "failed" or not np.isfinite(W).all():
+            # the ladder is exhausted for this application: preconditioning
+            # only accelerates, so fall back to the unpreconditioned
+            # direction rather than poisoning the trial basis
+            return R.copy()
+        return W
 
     if X0 is not None:
         X = np.asarray(X0, np.float64)
@@ -276,7 +298,8 @@ def lobpcg(problem, k: int = 8, *, options=None, backend: str = "auto",
         backend=backend_name,
         precond_solves=precond_solves,
         precond_columns=precond_columns,
-        setup_seconds=setup_seconds)
+        setup_seconds=setup_seconds,
+        precond_status=precond_status)
 
 
 def refine_eigenpairs(problem, result: EigResult, *, options=None,

@@ -1,0 +1,18 @@
+"""``repro.testing`` — deterministic fault injection for robustness tests.
+
+See :mod:`repro.testing.faults`.
+"""
+
+from repro.testing.faults import (Fault, FaultPlan, InjectedFault, SITES,
+                                  active, checkpoint, inject, site)
+
+__all__ = [
+    "Fault",
+    "FaultPlan",
+    "InjectedFault",
+    "SITES",
+    "active",
+    "checkpoint",
+    "inject",
+    "site",
+]

@@ -1,0 +1,203 @@
+"""Deterministic, seeded fault injection at named pipeline sites.
+
+The robustness layer (PR 8) promises that a poisoned request, a broken
+setup artifact, or a numerically exploding solve always terminates with an
+*explicit* status — never an unhandled NaN or a whole-flush abort. This
+module is how that promise is exercised: production code calls
+:func:`site` (corrupt an array) or :func:`checkpoint` (raise) at named
+locations, and a test arms a :class:`FaultPlan` around the code under
+test::
+
+    from repro.testing import Fault, FaultPlan, inject
+
+    plan = FaultPlan({"solve.spmv": Fault(mode="nan", at_calls=(2,))})
+    with inject(plan):
+        x, result = solver.solve(b)          # breaks at PCG iteration 2
+    assert result.status == "degraded"       # ... and recovers
+    assert plan.fired                        # the fault actually fired
+
+With no plan armed (the production default) every hook is a single global
+``None`` check — the guard-overhead benchmark (``benchmarks/robust_bench.py``)
+pins the cost on the warm solve hot path below 2%.
+
+Corruption is **deterministic**: which entries are corrupted is drawn from
+``numpy.random.default_rng`` seeded by ``(plan.seed, site name, call
+index)``, and ``at_calls`` selects fire points by per-site call count — the
+same plan against the same code always corrupts the same floats.
+
+Named sites (grep for ``faults.site(``/``faults.checkpoint(``):
+
+=====================  ======================================================
+``setup.build``        raising checkpoint at hierarchy-build entry
+``setup.coarse_inv``   dense coarsest-level inverse of a built hierarchy
+``setup.lambda_max``   per-level λmax smoother bounds of a built hierarchy
+``solve.spmv``         SpMV output inside pcg / pcg_block iterations
+``solve.precond``      preconditioner (V-cycle) output inside pcg / pcg_block
+``solve.residual``     updated residual inside pcg / pcg_block iterations
+``service.request``    admitted RHS block (post-validation) in submit()
+``service.setup``      raising checkpoint in the flush() setup pass
+``service.solve``      raising checkpoint in the flush() solve pass
+=====================  ======================================================
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import numpy as np
+
+SITES = (
+    "setup.build",
+    "setup.coarse_inv",
+    "setup.lambda_max",
+    "solve.spmv",
+    "solve.precond",
+    "solve.residual",
+    "service.request",
+    "service.setup",
+    "service.solve",
+)
+
+_MODES = ("nan", "inf", "huge", "zero", "negate", "raise")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an armed ``mode="raise"`` fault at a checkpoint site."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One site's corruption policy.
+
+    * ``mode`` — ``"nan"`` / ``"inf"`` / ``"huge"`` (×1e30) / ``"zero"`` /
+      ``"negate"`` corrupt array sites; ``"raise"`` raises
+      :class:`InjectedFault` (array sites raise too — a site may fail
+      instead of corrupting).
+    * ``at_calls`` — per-site call indices (0-based) at which the fault
+      fires; ``None`` fires on every call.
+    * ``fraction`` — fraction of array entries corrupted (at least one),
+      chosen by the seeded RNG.
+    """
+
+    mode: str = "nan"
+    at_calls: tuple | None = (0,)
+    fraction: float = 0.05
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, "
+                             f"got {self.mode!r}")
+        if not 0.0 < self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], "
+                             f"got {self.fraction}")
+
+
+class FaultPlan:
+    """A seeded set of site faults plus the record of what fired.
+
+    ``counts`` tracks per-site call counts (every pass through a site,
+    fired or not); ``fired`` is the ordered list of ``(site, call_index,
+    mode)`` events — tests assert on it so a scenario that silently
+    stopped reaching its site fails loudly instead of passing vacuously.
+    """
+
+    def __init__(self, faults: dict, seed: int = 0):
+        for name, f in faults.items():
+            if not isinstance(f, Fault):
+                raise TypeError(f"site {name!r}: expected a Fault, "
+                                f"got {type(f).__name__}")
+        self.faults = dict(faults)
+        self.seed = int(seed)
+        self.counts: dict = {}
+        self.fired: list = []
+
+    # ------------------------------------------------------------------
+    def _armed(self, name: str) -> Fault | None:
+        idx = self.counts.get(name, 0)
+        self.counts[name] = idx + 1
+        f = self.faults.get(name)
+        if f is None:
+            return None
+        if f.at_calls is not None and idx not in f.at_calls:
+            return None
+        self.fired.append((name, idx, f.mode))
+        return f
+
+    def apply(self, name: str, x):
+        """Corrupt ``x`` if a fault is armed for this call of ``name``."""
+        f = self._armed(name)
+        if f is None:
+            return x
+        if f.mode == "raise":
+            raise InjectedFault(f"injected failure at site {name!r} "
+                                f"(call {self.counts[name] - 1})")
+        arr = np.array(x, copy=True)
+        if arr.dtype.kind not in "fc":
+            arr = arr.astype(np.float64)
+        flat = arr.reshape(-1)
+        rng = np.random.default_rng(
+            (self.seed, hash(name) & 0x7FFFFFFF, self.counts[name] - 1))
+        m = max(1, int(round(f.fraction * flat.size)))
+        idx = rng.choice(flat.size, size=min(m, flat.size), replace=False)
+        if f.mode == "nan":
+            flat[idx] = np.nan
+        elif f.mode == "inf":
+            flat[idx] = np.inf
+        elif f.mode == "huge":
+            flat[idx] = flat[idx] * 1e30 + 1e30
+        elif f.mode == "zero":
+            flat[idx] = 0.0
+        elif f.mode == "negate":
+            flat[idx] = -flat[idx]
+        out = flat.reshape(arr.shape)
+        try:                                    # preserve jax-array inputs
+            import jax.numpy as jnp
+
+            if not isinstance(x, np.ndarray):
+                return jnp.asarray(out, getattr(x, "dtype", None))
+        except ImportError:                       # pragma: no cover
+            pass
+        return out.astype(np.asarray(x).dtype, copy=False)
+
+    def check(self, name: str) -> None:
+        """Raise :class:`InjectedFault` if a raising fault is armed."""
+        f = self._armed(name)
+        if f is not None:
+            raise InjectedFault(f"injected failure at site {name!r} "
+                                f"(call {self.counts[name] - 1})")
+
+
+# ----------------------------------------------------------------------
+_ACTIVE: FaultPlan | None = None
+
+
+def active() -> FaultPlan | None:
+    """The currently armed plan, or None (production)."""
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Arm ``plan`` for the duration of the block (not reentrant)."""
+    global _ACTIVE
+    if _ACTIVE is not None:
+        raise RuntimeError("a FaultPlan is already armed")
+    _ACTIVE = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = None
+
+
+def site(name: str, x):
+    """Hook: return ``x``, corrupted iff a fault is armed for ``name``."""
+    if _ACTIVE is None:
+        return x
+    return _ACTIVE.apply(name, x)
+
+
+def checkpoint(name: str) -> None:
+    """Hook: raise :class:`InjectedFault` iff a raising fault is armed."""
+    if _ACTIVE is not None:
+        _ACTIVE.check(name)

@@ -1,0 +1,269 @@
+"""Pathological Problems and the degradation ladder: disconnected graphs
+checked against a dense pseudo-inverse oracle, isolated vertices, extreme
+weight distributions, breakdown statuses, and ladder recovery."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.api import Problem, ProblemValidationError, SolverOptions, setup
+from repro.api.cache import HierarchyCache
+from repro.core.components import connected_components
+from repro.core.krylov import BREAKDOWN_STATUSES, pcg_block
+from repro.graphs.generators import (barabasi_albert, ensure_connected,
+                                     grid_2d)
+from repro.testing import Fault, FaultPlan, inject
+
+OPTS = SolverOptions(coarsest_size=64, max_iters=300)
+
+
+def component_graph(sizes, seed=0):
+    """Disjoint union of BA graphs, one per entry of ``sizes`` (entries of
+    1 become isolated vertices). Returns (n, rows, cols, vals, labels)."""
+    rows, cols, vals, labels = [], [], [], []
+    off = 0
+    for i, sz in enumerate(sizes):
+        if sz > 1:
+            n_i, r, c, v = ensure_connected(
+                *barabasi_albert(sz, m=2, seed=seed + i, weighted=True))
+            rows.append(r + off)
+            cols.append(c + off)
+            vals.append(v)
+        else:
+            n_i = 1
+        labels.extend([i] * n_i)
+        off += n_i
+    cat = lambda xs: np.concatenate(xs) if xs else np.empty(0, np.int64)
+    return off, cat(rows), cat(cols), cat(vals), np.asarray(labels)
+
+
+def component_mean_free(b, labels):
+    b = np.asarray(b, np.float64).copy()
+    for c in np.unique(labels):
+        m = labels == c
+        b[m] -= b[m].mean(axis=0)
+    return b.astype(np.float32)
+
+
+def dense_pinv_solve(problem, b):
+    """Float64 pseudo-inverse oracle straight off the edge list."""
+    n = problem.n
+    L = np.zeros((n, n))
+    v = np.asarray(problem.vals, np.float64)
+    np.add.at(L, (problem.rows, problem.rows), v)
+    np.subtract.at(L, (problem.rows, problem.cols), v)
+    return np.linalg.pinv(L) @ np.asarray(b, np.float64)
+
+
+class TestComponents:
+    def test_two_components_detected(self):
+        n, r, c, v, labels = component_graph([200, 150])
+        p = Problem.from_edges(n, r, c, v)
+        comp, n_comp = p.components()
+        assert n_comp == 2
+        # same partition as the construction labels, up to renaming
+        assert len({(a, b) for a, b in zip(labels, comp)}) == 2
+
+    def test_isolated_vertices_are_components(self):
+        n, r, c, v, _ = component_graph([200, 1, 1, 1])
+        p = Problem.from_edges(n, r, c, v)
+        assert p.components()[1] == 4
+
+    def test_edgeless_graph(self):
+        comp, n_comp = connected_components(
+            5, np.empty(0, np.int64), np.empty(0, np.int64))
+        assert n_comp == 5 and sorted(comp) == list(range(5))
+
+    def test_matches_scipy_on_random_graphs(self):
+        import scipy.sparse as sp
+        from scipy.sparse.csgraph import connected_components as cc_ref
+
+        rng = np.random.default_rng(0)
+        for trial in range(25):
+            n = int(rng.integers(2, 40))
+            m = int(rng.integers(0, 3 * n))
+            r = rng.integers(0, n, size=m)
+            c = rng.integers(0, n, size=m)
+            keep = r != c
+            r, c = r[keep], c[keep]
+            a = sp.coo_matrix((np.ones(len(r)), (r, c)), shape=(n, n))
+            want = cc_ref(a, directed=False)[0]
+            # exercise both one-directional and symmetrized inputs
+            assert connected_components(n, r, c)[1] == want
+            rs = np.concatenate([r, c])
+            cs = np.concatenate([c, r])
+            assert connected_components(n, rs, cs)[1] == want
+
+
+class TestDisconnectedSolve:
+    @pytest.mark.parametrize("backend", ["single", "serial_ref"])
+    def test_two_components_match_pinv_oracle(self, backend):
+        n, r, c, v, labels = component_graph([220, 180])
+        p = Problem.from_edges(n, r, c, v)
+        b = component_mean_free(
+            np.random.default_rng(1).normal(size=n), labels)
+        solver = setup(p, OPTS, backend=backend, cache=False)
+        x, res = solver.solve(b, tol=1e-6)
+        assert res.status == "converged" and res.diagnostics == ()
+        oracle = dense_pinv_solve(p, b)
+        err = np.linalg.norm(np.asarray(x, np.float64) - oracle)
+        assert err <= 1e-3 * max(1.0, np.linalg.norm(oracle))
+
+    def test_isolated_vertices_solve(self):
+        n, r, c, v, labels = component_graph([300, 1, 1])
+        p = Problem.from_edges(n, r, c, v)
+        b = component_mean_free(
+            np.random.default_rng(2).normal(size=n), labels)
+        x, res = setup(p, OPTS, backend="single",
+                       cache=False).solve(b, tol=1e-6)
+        assert res.status == "converged"
+        assert np.isfinite(x).all()
+        # singleton components: b is 0 there, so the mean-free solution is 0
+        np.testing.assert_allclose(x[-2:], 0.0, atol=1e-6)
+
+    def test_block_rhs_on_disconnected(self):
+        n, r, c, v, labels = component_graph([200, 160])
+        p = Problem.from_edges(n, r, c, v)
+        B = component_mean_free(
+            np.random.default_rng(3).normal(size=(n, 3)), labels)
+        X, res = setup(p, OPTS, backend="single", cache=False).solve(
+            B, tol=1e-6)
+        assert res.status == "converged" and res.n_rhs == 3
+        oracle = dense_pinv_solve(p, B)
+        err = np.linalg.norm(np.asarray(X, np.float64) - oracle)
+        assert err <= 1e-3 * max(1.0, np.linalg.norm(oracle))
+
+
+class TestExtremeWeights:
+    def test_zero_weights_rejected_at_admission(self):
+        with pytest.raises(ProblemValidationError, match="non-positive"):
+            Problem.from_edges(3, [0, 1, 1, 2], [1, 0, 2, 1],
+                               [0.0, 0.0, 1.0, 1.0])
+
+    def test_denormal_weights_terminate_explicitly(self):
+        n, r, c, v = ensure_connected(*grid_2d(18, 18))
+        p = Problem.from_edges(n, r, c,
+                               np.full_like(np.asarray(v, np.float32),
+                                            1e-38))
+        b = np.random.default_rng(4).normal(size=n).astype(np.float32)
+        b -= b.mean()
+        x, res = setup(p, OPTS, backend="single", cache=False).solve(b)
+        # the promise is an explicit status and a finite answer when any
+        # rung reaches clean math (n is small enough for the dense rung)
+        assert res.status in ("converged", "degraded")
+        assert np.isfinite(np.asarray(x)).all()
+
+    def test_1e12_dynamic_range_terminates_explicitly(self):
+        n, r, c, v = ensure_connected(
+            *barabasi_albert(400, m=3, seed=5, weighted=True))
+        rng = np.random.default_rng(5)
+        # one weight in [1e-6, 1e6] per undirected edge, applied to both
+        # stored directions (keyed by the unordered vertex pair)
+        key = (np.minimum(r, c).astype(np.int64) * n
+               + np.maximum(r, c).astype(np.int64))
+        uniq, idx = np.unique(key, return_inverse=True)
+        scale = 10.0 ** rng.uniform(-6, 6, size=len(uniq))
+        p = Problem.from_edges(n, r, c, scale[idx].astype(np.float32))
+        b = np.random.default_rng(6).normal(size=p.n).astype(np.float32)
+        b -= b.mean()
+        x, res = setup(p, OPTS, backend="single", cache=False).solve(b)
+        assert res.status in ("converged", "degraded", "max_iters")
+        if res.status != "max_iters":
+            assert np.isfinite(np.asarray(x)).all()
+
+
+class TestBreakdownStatuses:
+    def test_nan_rhs_column_is_flagged_not_converged(self):
+        """Regression: a NaN initial residual must surface as
+        ``breakdown_nonfinite``, never as 0-iteration convergence."""
+        B = jnp.asarray(np.stack([np.full(16, np.nan),
+                                  np.ones(16)], axis=1), jnp.float32)
+        X, info = pcg_block(lambda V: V, B, tol=1e-8, maxiter=10)
+        assert info.status[0] == "breakdown_nonfinite"
+        assert info.status[1] == "converged"
+        assert info.status[0] in BREAKDOWN_STATUSES
+
+    def test_fallback_off_reports_raw_breakdown(self):
+        p = Problem.from_edges(*ensure_connected(
+            *barabasi_albert(300, m=3, seed=7, weighted=True)))
+        opts = SolverOptions(coarsest_size=64, max_iters=200, fallback=False)
+        solver = setup(p, opts, backend="single", cache=False)
+        plan = FaultPlan({"solve.spmv": Fault(mode="nan", at_calls=(1,),
+                                              fraction=0.3)})
+        b = np.random.default_rng(8).normal(size=p.n).astype(np.float32)
+        with inject(plan):
+            x, res = solver.solve(b - b.mean())
+        assert plan.fired
+        assert res.status in BREAKDOWN_STATUSES
+        assert res.diagnostics == ()              # no ladder ran
+
+
+class TestLadder:
+    def graph(self, seed=9):
+        return Problem.from_edges(*ensure_connected(
+            *barabasi_albert(350, m=3, seed=seed, weighted=True)))
+
+    def rhs(self, p, seed=10):
+        b = np.random.default_rng(seed).normal(size=p.n).astype(np.float32)
+        return b - b.mean()
+
+    def test_rebuild_rung_recovers_and_invalidates_cache(self):
+        p, cache = self.graph(), HierarchyCache()
+        b = self.rhs(p)
+        clean = setup(p, OPTS, backend="single", cache=False)
+        x_ref, _ = clean.solve(b, tol=1e-6)
+        # poison the *cached* hierarchy's coarse inverse at build time
+        plan = FaultPlan({"setup.coarse_inv": Fault(mode="nan",
+                                                    at_calls=None,
+                                                    fraction=0.5)})
+        with inject(plan):
+            solver = setup(p, OPTS, backend="single", cache=cache)
+        assert plan.fired and len(cache) == 1
+        x, res = solver.solve(b, tol=1e-6)
+        assert res.status == "degraded"
+        stages = [d["stage"] for d in res.diagnostics]
+        assert stages[:2] == ["primary", "rebuild"]
+        assert res.diagnostics[1]["recovered"]
+        assert cache.stats()["invalidations"] >= 1
+        np.testing.assert_allclose(x, x_ref, atol=1e-3 * max(
+            1.0, float(np.abs(x_ref).max())))
+        # the healthy rebuild was re-cached: a fresh setup is a cache hit
+        # and solves cleanly
+        again = setup(p, OPTS, backend="single", cache=cache)
+        assert again.setup_seconds == 0.0
+        _, res2 = again.solve(b, tol=1e-6)
+        assert res2.status == "converged" and res2.diagnostics == ()
+
+    def test_persistent_faults_fall_through_to_dense(self):
+        p = self.graph(seed=11)
+        b = self.rhs(p, seed=12)
+        solver = setup(p, OPTS, backend="single", cache=False)
+        # every SpMV in every CG rung is corrupted; only the dense rung
+        # (pure numpy, no sites) reaches clean math
+        plan = FaultPlan({"solve.spmv": Fault(mode="nan", at_calls=None,
+                                              fraction=0.1)})
+        with inject(plan):
+            x, res = solver.solve(b, tol=1e-6)
+        assert res.status == "degraded"
+        stages = [d["stage"] for d in res.diagnostics]
+        assert stages == ["primary", "rebuild", "diag_pcg", "dense"]
+        assert res.diagnostics[-1]["recovered"]
+        oracle = dense_pinv_solve(p, b)
+        err = np.linalg.norm(np.asarray(x, np.float64) - oracle)
+        assert err <= 1e-3 * max(1.0, np.linalg.norm(oracle))
+
+    def test_ladder_exhaustion_is_explicit_failure(self):
+        p = self.graph(seed=13)
+        b = self.rhs(p, seed=14)
+        opts = SolverOptions(coarsest_size=64, max_iters=200,
+                             dense_fallback_max=0)   # dense rung gated off
+        solver = setup(p, opts, backend="single", cache=False)
+        plan = FaultPlan({"solve.spmv": Fault(mode="nan", at_calls=None,
+                                              fraction=0.1)})
+        with inject(plan):
+            x, res = solver.solve(b, tol=1e-6)
+        assert res.status == "failed"
+        stages = [d["stage"] for d in res.diagnostics]
+        assert stages == ["primary", "rebuild", "diag_pcg", "dense"]
+        assert res.diagnostics[-1]["status"] == "skipped"
