@@ -24,6 +24,7 @@ from repro.api.problem import Problem, ProblemValidationError
 from repro.api.registry import (available_backends, get_backend,
                                 register_backend, resolve_backend)
 from repro.api.result import SolveResult
+from repro.api.triage import TriageReport, triage_problem
 
 __all__ = [
     "HierarchyCache",
@@ -32,6 +33,7 @@ __all__ = [
     "SolveResult",
     "Solver",
     "SolverOptions",
+    "TriageReport",
     "available_backends",
     "default_cache",
     "get_backend",
@@ -39,4 +41,5 @@ __all__ = [
     "resolve_backend",
     "setup",
     "solve",
+    "triage_problem",
 ]

@@ -49,12 +49,17 @@ class _EagerHandle:
         self.work_per_iteration = solver.iteration_work(
             precondition=options.precondition)
 
-    def solve_block(self, B, tol: float, max_iters: int, x0=None):
+    def solve_block(self, B, tol: float, max_iters: int, x0=None,
+                    guard=None):
+        # ``guard`` overrides the options-derived policy for this call
+        # (the triage layer passes a tightened GuardConfig); None keeps
+        # the options default.
+        g = self._options.guard_config() if guard is None else guard
         X, info = self._solver.solve_block(
             B, tol=tol, maxiter=max_iters,
             precondition=self._options.precondition,
             exact_columns=self._options.exact_columns, x0=x0,
-            guard=self._options.guard_config() or False)
+            guard=g or False)
         return (np.asarray(X), info.residual_norms,
                 np.asarray(info.iters, np.int64), info.status)
 
@@ -70,20 +75,35 @@ class _DistHandle:
         self._options = options
         self.work_per_iteration = solver.work_per_iteration
 
-    def solve_block(self, B, tol: float, max_iters: int, x0=None):
+    def solve_block(self, B, tol: float, max_iters: int, x0=None,
+                    guard=None):
         if x0 is not None:
             raise NotImplementedError(
                 "the dist backend's scanned solve does not accept per-column "
                 "initial guesses yet; use backend='single' or 'serial_ref' "
                 "for x0 warm starts")
-        X, norms, iters = self._solver.solve_block(B, n_iters=max_iters,
-                                                   tol=tol)
-        norms = np.asarray(norms)
-        # The scanned solve cannot guard inside its fixed XLA program;
-        # derive per-column statuses host-side from the fetched history.
-        from repro.core.krylov import scan_norms_status
+        g = self._options.guard_config() if guard is None else (guard or None)
+        if g is not None and self._options.guard_mode == "in_scan":
+            # PR 9: the guards run INSIDE the scanned program as status
+            # lanes — statuses are live device truth (an indefinite p·Ap
+            # freezes the column before the poisoned update, which a
+            # norms-only postmortem can never see). Clean paths are
+            # bitwise-unchanged (BENCH_robust.json dist bitwise check).
+            from repro.core.krylov import scan_status_from_codes
 
-        statuses = scan_norms_status(norms, tol, norms[0])
+            X, norms, iters, codes = self._solver.solve_block(
+                B, n_iters=max_iters, tol=tol, guard=g)
+            norms = np.asarray(norms)
+            statuses = scan_status_from_codes(codes, norms, tol, norms[0])
+        else:
+            # guards off, or guard_mode="postmortem": the pre-PR 9
+            # unguarded program plus host-side reconstruction.
+            from repro.core.krylov import scan_norms_status
+
+            X, norms, iters = self._solver.solve_block(B, n_iters=max_iters,
+                                                       tol=tol)
+            norms = np.asarray(norms)
+            statuses = scan_norms_status(norms, tol, norms[0])
         return (np.asarray(X), norms, np.asarray(iters, np.int64), statuses)
 
     def stats(self) -> dict:

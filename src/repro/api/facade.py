@@ -26,6 +26,14 @@ graceful-degradation ladder (``SolverOptions.fallback``):
 Every rung is recorded in ``SolveResult.diagnostics``; the overall
 ``SolveResult.status`` is ``"degraded"`` when a rung recovered the solve
 and ``"failed"`` when the ladder is exhausted — never an unhandled NaN.
+
+Admission triage (PR 9): with ``SolverOptions(triage=True)``, setup also
+runs a cheap host-side conditioning score (``repro.api.triage``) that
+picks the *starting* rung before any breakdown — a numerically hopeless
+graph goes straight to the diag-PCG or dense rung instead of burning a
+full multigrid solve first, and a merely suspicious one keeps multigrid
+under a tightened guard. The report is the first ``diagnostics`` entry
+of every solve (``stage="triage"``) and is exposed as ``Solver.triage``.
 """
 
 from __future__ import annotations
@@ -65,16 +73,37 @@ class Solver:
         self._handle = handle
         self._mesh = mesh
         self._cache = cache
+        # Admission-time conditioning triage (PR 9, opt-in). Computed at
+        # construction — i.e. at admission, cache hit or not — so the
+        # routing decision exists before the first solve. The expensive
+        # part of the score is memoized on the Problem.
+        if options.triage:
+            from repro.api.triage import triage_problem
+
+            self.triage = triage_problem(problem, options)
+        else:
+            self.triage = None
 
     # ------------------------------------------------------------------
-    def _run(self, handle, B, tol, max_iters, x0):
+    def _run(self, handle, B, tol, max_iters, x0, guard=None):
         """One solve attempt through a backend handle, normalized to the
         4-tuple ``(X, norms, iters, statuses)`` — third-party handles may
-        still return the legacy 3-tuple (statuses=None)."""
-        if x0 is None:
-            out = handle.solve_block(B, tol, max_iters)
-        else:
-            out = handle.solve_block(B, tol, max_iters, x0=x0)
+        still return the legacy 3-tuple (statuses=None). ``guard``
+        overrides the handle's options-derived guard policy (the triage
+        layer passes a tightened GuardConfig); third-party handles that
+        predate the kwarg are retried without it."""
+        kwargs = {}
+        if x0 is not None:
+            kwargs["x0"] = x0
+        if guard is not None:
+            kwargs["guard"] = guard
+        try:
+            out = handle.solve_block(B, tol, max_iters, **kwargs)
+        except TypeError:
+            if "guard" not in kwargs:
+                raise
+            del kwargs["guard"]
+            out = handle.solve_block(B, tol, max_iters, **kwargs)
         if len(out) == 3:
             X, norms, iters = out
             return X, norms, iters, None
@@ -108,15 +137,27 @@ class Solver:
                     f"x0 must match b's shape {b.shape}, got {x0.shape}")
             x0 = x0[:, None] if single else x0
         t0 = time.perf_counter()
-        X, norms, iters, statuses = self._run(self._handle, B, tol,
-                                              max_iters, x0)
-        wpi = self._handle.work_per_iteration
         diagnostics: list = []
         status = None
-        if has_breakdown(statuses) and self.options.fallback:
-            X, norms, iters, statuses, wpi, status = self._degrade(
-                B, tol, max_iters, x0, X, norms, iters, statuses,
-                diagnostics)
+        guard = None
+        if self.triage is not None:
+            diagnostics.append(self.triage.as_diagnostics())
+            guard = self.triage.guard
+        if self.triage is not None and self.triage.rung in ("diag_pcg",
+                                                            "dense"):
+            # triage routed AWAY from the multigrid path at admission —
+            # go straight to the chosen ladder rung, no breakdown needed.
+            X, norms, iters, statuses, wpi = self._triage_route(
+                self.triage.rung, B, tol, max_iters, x0, diagnostics)
+        else:
+            X, norms, iters, statuses = self._run(self._handle, B, tol,
+                                                  max_iters, x0,
+                                                  guard=guard)
+            wpi = self._handle.work_per_iteration
+            if has_breakdown(statuses) and self.options.fallback:
+                X, norms, iters, statuses, wpi, status = self._degrade(
+                    B, tol, max_iters, x0, X, norms, iters, statuses,
+                    diagnostics)
         solve_seconds = time.perf_counter() - t0
         if x0 is None:
             ref_norms = None
@@ -131,6 +172,38 @@ class Solver:
             solve_seconds, ref_norms=ref_norms, statuses=statuses,
             diagnostics=tuple(diagnostics), status=status)
         return (X[:, 0] if single else X), result
+
+    # ------------------------------------------------------------------
+    def _triage_route(self, rung, B, tol, max_iters, x0, diagnostics):
+        """Run a triage-chosen non-multigrid rung directly. Returns
+        ``(X, norms, iters, statuses, work_per_iteration)`` and appends a
+        diagnostics entry per rung that ran (the ``stage="triage"`` entry
+        is already in place)."""
+        from repro.api.fallback import dense_solve_block, diag_pcg_block
+
+        opts = self.options
+
+        def record(stage, sts):
+            diagnostics.append(dict(
+                stage=stage, status=worst_status(sts),
+                statuses=np.asarray(sts).tolist(),
+                recovered=not has_breakdown(sts)))
+
+        if rung == "diag_pcg":
+            X, norms, iters, statuses = diag_pcg_block(
+                self.problem, B, tol, max_iters,
+                guard=opts.guard_config() or False, x0=x0)
+            record("diag_pcg", statuses)
+            if (has_breakdown(statuses) and opts.fallback
+                    and self.problem.n <= opts.dense_fallback_max):
+                X, norms, iters, statuses = dense_solve_block(
+                    self.problem, B, tol)
+                record("dense", statuses)
+                return X, norms, iters, statuses, float(self.problem.n)
+            return X, norms, iters, statuses, 1.0
+        X, norms, iters, statuses = dense_solve_block(self.problem, B, tol)
+        record("dense", statuses)
+        return X, norms, iters, statuses, float(self.problem.n)
 
     # ------------------------------------------------------------------
     def _degrade(self, B, tol, max_iters, x0, X, norms, iters, statuses,

@@ -76,12 +76,20 @@ class SolverOptions:
       bitwise (eager backends); False trades that for vmapped batched
       operator applications.
 
-    Robustness (PR 8 — see README "Robustness & failure handling"):
+    Robustness (PR 8/PR 9 — see README "Robustness & failure handling"):
 
-    * ``guard`` — per-column breakdown detection in the eager PCG loops
+    * ``guard`` — per-column breakdown detection in the PCG loops
       (non-finite residual, indefinite ``p·Ap``, stagnation window).
       Observational only: clean solves are bitwise-unchanged with guards
       on or off.
+    * ``guard_mode`` — how the *dist* backend detects breakdowns (PR 9):
+      ``"in_scan"`` (default) carries per-column int status lanes inside
+      the scanned solve, so ``SolveResult.statuses`` is live device truth
+      (an indefinite ``p·Ap`` freezes the column at its last finite
+      iterate, exactly like the eager path); ``"postmortem"`` keeps the
+      PR 8 behavior — the unguarded scan plus a host-side
+      ``scan_norms_status`` reconstruction from the fetched norms. The
+      eager backends ignore it (their guards are host-side loops).
     * ``stagnation_window`` — iterations without relative residual
       improvement before a solve is declared stagnated.
     * ``fallback`` — the facade's graceful-degradation ladder: on
@@ -91,6 +99,16 @@ class SolverOptions:
       solve. Every rung is recorded in ``SolveResult.diagnostics``.
     * ``dense_fallback_max`` — largest ``n`` eligible for the dense
       last-resort solve (an O(n³) factorization).
+    * ``triage`` (PR 9) — admission-time conditioning triage: a cheap
+      host-side sanity score (degree extremes, weight dynamic range,
+      component count, a few Lanczos λ-estimates) picks the *starting*
+      ladder rung and guard strictness before the first breakdown.
+      Opt-in; the report lands in ``SolveResult.diagnostics`` (facade)
+      and ``Ticket.triage`` (service). See ``repro.api.triage``.
+    * ``checkpoint_every`` (PR 9, service only) — snapshot
+      ``SolverService.flush()`` progress every N completed tickets to the
+      service's ``checkpoint_dir`` (0 = off); ``SolverService.resume``
+      replays only unfinished work, bit-matching an uninterrupted flush.
 
     Distributed backend only:
 
@@ -130,11 +148,14 @@ class SolverOptions:
     precondition: bool = True
     # multi-RHS
     exact_columns: bool = True
-    # robustness: breakdown guards + degradation ladder
+    # robustness: breakdown guards + degradation ladder + triage/checkpoint
     guard: bool = True
+    guard_mode: str = "in_scan"
     stagnation_window: int = 50
     fallback: bool = True
     dense_fallback_max: int = 4096
+    triage: bool = False
+    checkpoint_every: int = 0
     # distributed
     dist_nnz_threshold: int = 10_000
     max_dist_levels: int = 3
@@ -160,6 +181,12 @@ class SolverOptions:
         if self.dense_fallback_max < 0:
             raise ValueError(f"dense_fallback_max must be >= 0, got "
                              f"{self.dense_fallback_max}")
+        if self.guard_mode not in ("in_scan", "postmortem"):
+            raise ValueError(f"guard_mode must be 'in_scan' or "
+                             f"'postmortem', got {self.guard_mode!r}")
+        if self.checkpoint_every < 0:
+            raise ValueError(f"checkpoint_every must be >= 0, got "
+                             f"{self.checkpoint_every}")
 
     def guard_config(self):
         """The Krylov-layer guard policy this maps to (None = guards off)."""

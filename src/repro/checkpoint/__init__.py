@@ -1,3 +1,5 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.ckpt import (save_checkpoint, restore_checkpoint,
+                                   latest_step, load_checkpoint_flat)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "load_checkpoint_flat"]

@@ -72,6 +72,21 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
+def load_checkpoint_flat(directory: str, step: int):
+    """Load a saved step as a flat ``{key: np.ndarray}`` dict + manifest.
+
+    No ``tree_like`` needed: consumers that key their leaves themselves
+    (the service's flush checkpoints, PR 9) restore by flattened key path
+    instead of reconstructing a pytree structure.
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {key: np.load(os.path.join(path, info["file"]))
+            for key, info in manifest["leaves"].items()}
+    return flat, manifest
+
+
 def restore_checkpoint(directory: str, step: int, tree_like,
                        shardings=None):
     """Restore into the structure of ``tree_like``; optional shardings pytree

@@ -61,6 +61,23 @@ STATUS_STAGNATION = "stagnation"
 BREAKDOWN_STATUSES = frozenset(
     {STATUS_NONFINITE, STATUS_INDEFINITE, STATUS_STAGNATION})
 
+# Device-side status codes for the scanned/dist solve path (PR 9): the
+# in-scan guards carry one int32 per column through the scan instead of
+# host strings. 0 = still healthy (resolved host-side into converged /
+# max_iters from the final norms); nonzero = the guard that froze the
+# column. Kept disjoint from 1 so a future "converged-in-scan" lane can
+# take it without renumbering.
+SCAN_OK = 0
+SCAN_NONFINITE = 2
+SCAN_INDEFINITE = 3
+SCAN_STAGNATION = 4
+
+_SCAN_CODE_STATUS = {
+    SCAN_NONFINITE: STATUS_NONFINITE,
+    SCAN_INDEFINITE: STATUS_INDEFINITE,
+    SCAN_STAGNATION: STATUS_STAGNATION,
+}
+
 
 def is_breakdown(status: str) -> bool:
     return status in BREAKDOWN_STATUSES
@@ -385,51 +402,148 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
 
 
 def pcg_scanned(matvec: Callable, b: jax.Array, precond: Callable | None = None,
-                n_iters: int = 50, project: Callable | None = None):
+                n_iters: int = 50, project: Callable | None = None,
+                guard=None, tol: float = 0.0):
     """Fixed-iteration PCG as one scanned XLA program.
 
-    Returns (x, residual_norms [n_iters+1]). This is the jit/dry-run path:
-    all collectives (matvec + 2 dots + preconditioner) appear in one HLO so
+    With ``guard=None`` (the default, the pre-PR 9 program): returns
+    ``(x, residual_norms [n_iters+1])``. This is the jit/dry-run path: all
+    collectives (matvec + 2 dots + preconditioner) appear in one HLO so
     the roofline extraction sees the whole iteration.
 
-    No host-side breakdown guards run inside the scan (the body stays one
-    fixed XLA program); callers that need per-column breakdown detection on
-    this path inspect the returned norms host-side — a NaN/Inf in a
-    column's history marks the iteration it broke
-    (``repro.dist.solver.DistLaplacianSolver.solve_block`` does exactly
-    that and stops fetching further chunks).
+    With ``guard`` a :class:`GuardConfig` (or True): the breakdown guards
+    run *inside* the scan as device-side status lanes — an int32 code,
+    the best residual norm, and a stall counter ride the carry — and the
+    return grows a third element: ``(x, norms, code)`` where ``code`` is
+    one of the ``SCAN_*`` constants. Semantics mirror the eager ``pcg``
+    exactly: an indefinite/non-finite ``p·Ap`` freezes x BEFORE the
+    poisoned update (last finite iterate), a non-finite residual norm
+    freezes after it, and ``stagnation_window`` iterations without
+    relative improvement trip the stagnation lane. A frozen solve carries
+    its state unchanged through the remaining iterations — the program
+    shape never changes. On a clean trajectory every freeze predicate is
+    false, every ``jnp.where`` selects the exact same float, and the
+    returned ``x``/``norms`` are bitwise identical to the unguarded scan
+    (pinned by ``BENCH_robust.json``'s dist bitwise check).
+
+    ``tol`` (guarded path only) exempts an already-converged trajectory
+    (``rn <= tol * r0n``) from the stagnation guard: a solve sitting at
+    its attainable-accuracy floor *below* tolerance is finished, not
+    stagnating — without this a long fixed-iteration run would always
+    "stagnate" after it converged. It does NOT freeze the iteration (that
+    would change clean-path bits); it only resets the stall counter.
     """
     proj = _project if project is None else project
     M = precond if precond is not None else (lambda v: v)
+    g = _as_guard(guard)
     b = proj(b)
     x0 = jnp.zeros_like(b)
     r0 = proj(b - matvec(x0))
     z0 = proj(M(r0))
-    carry0 = (x0, r0, z0, z0, jnp.vdot(r0, z0))
+    r0n = jnp.linalg.norm(r0)
 
-    def body(carry, _):
-        x, r, z, p, rz = carry
+    if g is None:
+        carry0 = (x0, r0, z0, z0, jnp.vdot(r0, z0))
+
+        def body(carry, _):
+            x, r, z, p, rz = carry
+            Ap = matvec(p)
+            alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
+            x = x + alpha * p
+            r = proj(r - alpha * Ap)
+            z = proj(M(r))
+            rz_new = jnp.vdot(r, z)
+            beta = rz_new / jnp.maximum(rz, 1e-30)
+            p = z + beta * p
+            return (x, r, z, p, rz_new), jnp.linalg.norm(r)
+
+        (x, r, *_), norms = jax.lax.scan(body, carry0, None, length=n_iters)
+        return x, jnp.concatenate([r0n[None], norms])
+
+    code0 = jnp.where(jnp.isfinite(r0n), SCAN_OK,
+                      SCAN_NONFINITE).astype(jnp.int32)
+    carry0 = (x0, r0, z0, z0, jnp.vdot(r0, z0), code0,
+              jnp.where(jnp.isfinite(r0n), r0n, jnp.inf),
+              jnp.zeros((), jnp.int32))
+
+    def gbody(carry, _):
+        x, r, z, p, rz, code, best, stall = carry
+        ok = code == SCAN_OK
         Ap = matvec(p)
-        alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
+        pAp = jnp.vdot(p, Ap)
+        indef = ok & ~(jnp.isfinite(pAp) & (pAp > 0.0))
+        code = jnp.where(indef, SCAN_INDEFINITE, code)
+        ok = ok & ~indef
+        alpha = jnp.where(ok, rz / jnp.maximum(pAp, 1e-30),
+                          jnp.zeros_like(rz))
         x = x + alpha * p
-        r = proj(r - alpha * Ap)
-        z = proj(M(r))
-        rz_new = jnp.vdot(r, z)
-        beta = rz_new / jnp.maximum(rz, 1e-30)
-        p = z + beta * p
-        return (x, r, z, p, rz_new), jnp.linalg.norm(r)
+        r = jnp.where(ok, proj(r - alpha * Ap), r)
+        rn = jnp.linalg.norm(r)
+        nonf = ok & ~jnp.isfinite(rn)
+        code = jnp.where(nonf, SCAN_NONFINITE, code)
+        ok = ok & ~nonf
+        improved = ok & (rn < best * (1.0 - g.stagnation_rtol))
+        best = jnp.where(improved, rn, best)
+        conv = rn <= tol * r0n
+        stall = jnp.where(improved | conv, 0,
+                          stall + ok.astype(jnp.int32))
+        stalled = ok & (stall >= g.stagnation_window)
+        code = jnp.where(stalled, SCAN_STAGNATION, code)
+        ok = ok & ~stalled
+        z = jnp.where(ok, proj(M(r)), z)
+        rz_new = jnp.where(ok, jnp.vdot(r, z), rz)
+        beta = jnp.where(ok, rz_new / jnp.maximum(rz, 1e-30),
+                         jnp.zeros_like(rz))
+        p = jnp.where(ok, z + beta * p, p)
+        return (x, r, z, p, rz_new, code, best, stall), rn
 
-    (x, r, *_), norms = jax.lax.scan(body, carry0, None, length=n_iters)
-    return x, jnp.concatenate([jnp.linalg.norm(r0)[None], norms])
+    (x, r, _, _, _, code, _, _), norms = jax.lax.scan(
+        gbody, carry0, None, length=n_iters)
+    return x, jnp.concatenate([r0n[None], norms]), code
+
+
+def scan_status_from_codes(codes, norms, tol, ref) -> np.ndarray:
+    """Per-column status strings from in-scan device codes + final norms.
+
+    ``codes`` is the int32 ``SCAN_*`` lane a guarded scan carried (scalar
+    or ``(k,)``); ``norms`` the ``(T+1,)`` / ``(T+1, k)`` residual
+    history. A nonzero code wins; a zero code resolves to ``"converged"``
+    iff the final norm is within ``tol * ref``, else ``"max_iters"`` —
+    the same resolution the eager path applies host-side.
+    """
+    codes = np.atleast_1d(np.asarray(jax.device_get(codes)))
+    norms = np.asarray(norms, np.float64)
+    if norms.ndim == 1:
+        norms = norms[:, None]
+    k = codes.shape[0]
+    status = np.full(k, STATUS_MAX_ITERS, dtype="<U24")
+    final = norms[-1]
+    conv = np.isfinite(final) & (final <= np.asarray(tol) * np.asarray(ref))
+    status[conv] = STATUS_CONVERGED
+    for c, s in _SCAN_CODE_STATUS.items():
+        status[codes == c] = s
+    return status
 
 
 def scan_norms_status(norms: np.ndarray, tol, ref: np.ndarray) -> np.ndarray:
     """Per-column status codes from a (T+1, k) scanned residual history.
 
-    The fixed-shape scan path cannot guard inside the program; this is the
-    host-side postmortem: a column whose history contains a non-finite
-    entry broke down, otherwise it converged iff its final norm is within
-    ``tol * ref``.
+    .. deprecated:: PR 9
+        Debug helper only. The scanned/dist solve now carries breakdown
+        codes *inside* the scan (``pcg_scanned(guard=...)`` /
+        ``DistLaplacianSolver.solve_block(guard=...)`` →
+        :func:`scan_status_from_codes`), which detects strictly more than
+        this postmortem can: an indefinite ``p·Ap`` is caught and frozen
+        *before* NaN ever reaches the residual history, so this
+        norms-only reconstruction reports ``max_iters`` where the in-scan
+        lane reports ``breakdown_indefinite`` (and it can never see
+        stagnation at all). It remains as a cross-check — on clean runs
+        and on nonfinite-residual faults the two agree exactly (asserted
+        in ``tests/test_dist_faults.py``) — and as the fallback for
+        ``SolverOptions(guard_mode="postmortem")``.
+
+    A column whose history contains a non-finite entry broke down,
+    otherwise it converged iff its final norm is within ``tol * ref``.
     """
     norms = np.asarray(norms, np.float64)
     if norms.ndim == 1:

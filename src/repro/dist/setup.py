@@ -69,6 +69,7 @@ from repro.core.setup_step import (SuperstepBuilders,
                                    resolve_vote_mode)
 from repro.dist.partition import (Partition2D, check_mesh_matches, edge_spec,
                                   ell_block_spec, mesh_geometry)
+from repro.testing import faults
 
 _I32_MAX = jnp.iinfo(jnp.int32).max
 _I32_MIN = jnp.iinfo(jnp.int32).min
@@ -349,6 +350,11 @@ def _dist_select_fn(mesh, n_cap: int, e_cap: int, max_degree: int):
             ok = valid & jnp.take(cand, cl, mode="fill", fill_value=False)
             k = jnp.where(ok, jnp.take(keys, cl, mode="fill",
                                        fill_value=_I32_MAX), _I32_MAX)
+            # one seeded shard's Alg 1 key tensor can be corrupted
+            # (trace-time site; no-op unless a fault plan is armed)
+            k = faults.site_traced("dist.select", k,
+                                   axis_index=_linear_block_index(mesh),
+                                   n_shards=_n_blocks(mesh)[3])
             best_k = jax.lax.pmin(
                 jax.ops.segment_min(k, rl, num_segments=n_cap), axes)
             attain = ok & (k == jnp.take(best_k, rl, mode="fill",
@@ -411,6 +417,11 @@ def _dist_vote_factory(mesh, n_cap: int, cfg):
                     bk_r, bi_r = vote_reduce_ref(ec2, es2, state,
                                                  levels=acfg.strength_levels,
                                                  decided=DECIDED)
+                # one seeded shard's fused vote keys can be corrupted
+                # (trace-time site; no-op unless a fault plan is armed)
+                bk_r = faults.site_traced("dist.vote", bk_r,
+                                          axis_index=idx,
+                                          n_shards=_n_blocks(mesh)[3])
                 key_part = jax.lax.dynamic_update_slice(
                     jnp.full((n_rows_pad,), _I32_MIN, jnp.int32), bk_r,
                     (idx * rblk,))
@@ -464,7 +475,12 @@ class DistSuperstepBuilders(SuperstepBuilders):
     def __init__(self, cfg, mesh):
         super().__init__(cfg)
         self.mesh = mesh
-        self.tag = (mesh,)
+        # The fault trace token rides the registry tag: while a plan with
+        # traced sites (dist.select / dist.vote) is armed, each setup
+        # attempt gets a unique tag — armed traces never reuse cached
+        # clean programs and never poison the shared registry. In
+        # production the token is None and the tag is a stable constant.
+        self.tag = (mesh, faults.trace_token())
 
     def select_fn(self, n_cap: int, e_cap: int):
         return _dist_select_fn(self.mesh, n_cap, e_cap,

@@ -36,10 +36,24 @@ from repro.core.elimination import EliminationLevel
 from repro.core.graph import GraphLevel, graph_from_adjacency
 from repro.core.hierarchy import (Hierarchy, SetupConfig,
                                   attach_ell_transfers, build_hierarchy)
+from repro.core.krylov import (SCAN_INDEFINITE, SCAN_NONFINITE, SCAN_OK,
+                               SCAN_STAGNATION, _as_guard)
 from repro.dist.partition import (edge_spec, ell_block_spec,
                                   ell_blocks_from_partition, mesh_geometry,
                                   partition_edges_2d)
 from repro.graphs.generators import random_relabel, to_laplacian_coo
+from repro.testing import faults
+
+
+def _shard_coords(mesh):
+    """(traced linear shard index, static shard count) inside shard_map."""
+    idx = jnp.zeros((), jnp.int32)
+    n_shards = 1
+    for name in mesh.axis_names:
+        size = mesh.shape[name]
+        idx = idx * size + jax.lax.axis_index(name)
+        n_shards *= int(size)
+    return idx, n_shards
 
 
 @jax.tree_util.register_dataclass
@@ -104,6 +118,11 @@ class DistGraphLevel:
             xg = jnp.take(x, col_g, mode="fill", fill_value=0)
             prod = jnp.where(valid, val * xg, 0)
             part = jax.ops.segment_sum(prod, row_g, num_segments=n_pad)
+            # One seeded shard's allreduce contribution can be corrupted
+            # (trace-time site; a no-op unless a fault plan is armed).
+            sidx, nsh = _shard_coords(mesh)
+            part = faults.site_traced("dist.psum", part,
+                                      axis_index=sidx, n_shards=nsh)
             # Column-communicator reduce + row broadcast == one psum.
             return jax.lax.psum(part, axes)
 
@@ -155,6 +174,9 @@ class DistGraphLevel:
                 prod = jnp.where(sr < n_pad, sv * xg, 0)
                 part = part + jax.ops.segment_sum(prod, sr,
                                                   num_segments=n_pad)
+            sidx, nsh = _shard_coords(mesh)
+            part = faults.site_traced("dist.psum", part,
+                                      axis_index=sidx, n_shards=nsh)
             return jax.lax.psum(part, axes)
 
         spill_args = ((self.spill_row, self.spill_col, self.spill_val)
@@ -230,20 +252,36 @@ def _block_ops(matvec, precond, n: int, n_pad: int):
     return bmv, bM, proj, cnorm
 
 
-def _pcg_block_init(matvec, B, precond, n: int, n_pad: int):
-    """Blocked PCG carry for B [n_pad, k]: (X, R, Z, P, rz, iters, r0n)."""
+def _pcg_block_init(matvec, B, precond, n: int, n_pad: int, guard=None):
+    """Blocked PCG carry for B [n_pad, k].
+
+    Unguarded (``guard=None``, the pre-PR 9 program):
+    ``(X, R, Z, P, rz, iters, r0n)``. With a ``GuardConfig``, three
+    device-side status lanes ride the carry — per-column int32 ``SCAN_*``
+    codes, the best residual norm, and a stall counter:
+    ``(X, R, Z, P, rz, iters, code, best, stall, r0n)``. A column whose
+    initial residual norm is already non-finite starts frozen with
+    ``SCAN_NONFINITE``.
+    """
     bmv, bM, proj, cnorm = _block_ops(matvec, precond, n, n_pad)
     k = B.shape[1]
     B = proj(B)
     X0 = jnp.zeros_like(B)
     R0 = proj(B - bmv(X0))
     Z0 = proj(bM(R0))
-    return (X0, R0, Z0, Z0, jnp.sum(R0 * Z0, axis=0),
-            jnp.zeros((k,), jnp.int32), cnorm(R0))
+    r0n = cnorm(R0)
+    base = (X0, R0, Z0, Z0, jnp.sum(R0 * Z0, axis=0),
+            jnp.zeros((k,), jnp.int32))
+    if guard is None:
+        return base + (r0n,)
+    fin = jnp.isfinite(r0n)
+    code0 = jnp.where(fin, SCAN_OK, SCAN_NONFINITE).astype(jnp.int32)
+    best0 = jnp.where(fin, r0n, jnp.inf)
+    return base + (code0, best0, jnp.zeros((k,), jnp.int32), r0n)
 
 
 def _pcg_block_chunk(matvec, precond, n: int, n_pad: int, tol: float,
-                     length: int, carry):
+                     length: int, carry, guard=None):
     """Advance a blocked PCG carry ``length`` scan steps.
 
     Each step carries a residual-based active mask: once a column's
@@ -252,30 +290,84 @@ def _pcg_block_chunk(matvec, precond, n: int, n_pad: int, tol: float,
     fixed length — the jit/dry-run contract) carries the remaining columns.
     ``tol=0`` reproduces the original never-exit behavior.
 
+    With ``guard`` a ``GuardConfig`` (carry from the guarded init), the
+    PR 8 breakdown guards run *inside* the scan per column: an indefinite
+    or non-finite ``p·Ap`` freezes the column BEFORE the poisoned update
+    (x stays the last finite iterate, exactly like eager ``pcg_block``), a
+    non-finite residual norm freezes it after, and ``stagnation_window``
+    active iterations with no relative improvement trip the stagnation
+    lane. Frozen columns fold into the same active mask the convergence
+    exit already uses, so on a clean trajectory every guard predicate is
+    false and the emitted X/norms/iters are bitwise identical to the
+    unguarded program (pinned by the bench's dist bitwise check). The
+    iteration SpMV routes through the ``dist.spmv`` trace-time fault site
+    (mirroring the eager path's ``solve.spmv``); a no-op unless a fault
+    plan is armed.
+
     Returns ``(carry, norms [length, k])``; ``carry[5]`` counts the steps
     each column was active for, cumulative across chunks.
     """
     bmv, bM, proj, cnorm = _block_ops(matvec, precond, n, n_pad)
-    r0n = carry[6]
 
-    def body(state, _):
-        X, R, Z, P, rz, iters = state
-        active = cnorm(R) > tol * r0n
-        iters = iters + active.astype(jnp.int32)
-        Ap = bmv(P)
+    if guard is None:
+        r0n = carry[6]
+
+        def body(state, _):
+            X, R, Z, P, rz, iters = state
+            active = cnorm(R) > tol * r0n
+            iters = iters + active.astype(jnp.int32)
+            Ap = bmv(P)
+            pAp = jnp.sum(P * Ap, axis=0)
+            alpha = jnp.where(active, rz / jnp.maximum(pAp, 1e-30), 0.0)
+            X = X + alpha[None, :] * P
+            # Converged columns stop updating: freeze r exactly rather than
+            # re-projecting it (which would drift the reported norms).
+            R = jnp.where(active[None, :], proj(R - alpha[None, :] * Ap), R)
+            Z = jnp.where(active[None, :], proj(bM(R)), Z)
+            rz_new = jnp.sum(R * Z, axis=0)
+            beta = jnp.where(active, rz_new / jnp.maximum(rz, 1e-30), 0.0)
+            P = Z + beta[None, :] * P
+            return (X, R, Z, P, rz_new, iters), cnorm(R)
+
+        state, norms = jax.lax.scan(body, tuple(carry[:6]), None,
+                                    length=length)
+        return state + (r0n,), norms
+
+    g = guard
+    r0n = carry[9]
+
+    def gbody(state, _):
+        X, R, Z, P, rz, iters, code, best, stall = state
+        active = (cnorm(R) > tol * r0n) & (code == SCAN_OK)
+        Ap = faults.site_traced("dist.spmv", bmv(P))
         pAp = jnp.sum(P * Ap, axis=0)
+        indef = active & ~(jnp.isfinite(pAp) & (pAp > 0.0))
+        code = jnp.where(indef, SCAN_INDEFINITE, code)
+        active = active & ~indef
+        iters = iters + active.astype(jnp.int32)
         alpha = jnp.where(active, rz / jnp.maximum(pAp, 1e-30), 0.0)
         X = X + alpha[None, :] * P
-        # Converged columns stop updating: freeze r exactly rather than
-        # re-projecting it (which would drift the reported norms).
         R = jnp.where(active[None, :], proj(R - alpha[None, :] * Ap), R)
+        rn = cnorm(R)
+        nonf = active & ~jnp.isfinite(rn)
+        code = jnp.where(nonf, SCAN_NONFINITE, code)
+        active = active & ~nonf
+        improved = active & (rn < best * (1.0 - g.stagnation_rtol))
+        best = jnp.where(improved, rn, best)
+        stall = jnp.where(improved, 0, stall + active.astype(jnp.int32))
+        stalled = active & (stall >= g.stagnation_window)
+        code = jnp.where(stalled, SCAN_STAGNATION, code)
+        active = active & ~stalled
+        # the tail is op-for-op the unguarded body (bitwise parity on
+        # clean paths); frozen columns meet zeroed betas, and a broken
+        # column's NaN rz can never reach X (its alpha selects 0)
         Z = jnp.where(active[None, :], proj(bM(R)), Z)
         rz_new = jnp.sum(R * Z, axis=0)
         beta = jnp.where(active, rz_new / jnp.maximum(rz, 1e-30), 0.0)
         P = Z + beta[None, :] * P
-        return (X, R, Z, P, rz_new, iters), cnorm(R)
+        return (X, R, Z, P, rz_new, iters, code, best, stall), rn
 
-    state, norms = jax.lax.scan(body, tuple(carry[:6]), None, length=length)
+    state, norms = jax.lax.scan(gbody, tuple(carry[:9]), None, length=length)
     return state + (r0n,), norms
 
 
@@ -297,6 +389,13 @@ def _partition_level(level: GraphLevel, mesh, matvec_backend: str = "coo",
     adj = level.adj
     row, col, val, valid = jax.device_get(
         (adj.row, adj.col, adj.val, adj.valid))
+    # A corrupted upstream setup (fault injection, overflowed aggregate
+    # ids) can leave vertex ids outside [0, n). Those edges are
+    # structurally impossible — drop them here so the damage surfaces as
+    # a breakdown status at solve time instead of a bincount crash mid-
+    # partition. Clean levels always have in-range ids: identical mask.
+    valid = valid & (row >= 0) & (row < level.n) \
+        & (col >= 0) & (col < level.n)
     part = partition_edges_2d(level.n, row[valid], col[valid], val[valid],
                               pr, pc, pods=pods, random_ordering=False)
     espec = edge_spec(mesh)
@@ -472,42 +571,48 @@ class DistLaplacianSolver:
 
         return matvec, precond
 
-    def build_init_step(self):
+    def build_init_step(self, guard=None):
         """(arrays, coarse_h, B_pad [n_pad, k]) -> blocked PCG carry."""
         n, n_pad = self.n, self.n_pad
 
         def step(arrays, coarse_h, B_pad):
             matvec, precond = self._operators(arrays, coarse_h)
-            return _pcg_block_init(matvec, B_pad, precond, n, n_pad)
+            return _pcg_block_init(matvec, B_pad, precond, n, n_pad,
+                                   guard=guard)
 
         return step
 
-    def build_chunk_step(self, length: int, tol: float = 0.0):
+    def build_chunk_step(self, length: int, tol: float = 0.0, guard=None):
         """(arrays, coarse_h, carry) -> (carry, norms [length, k])."""
         n, n_pad = self.n, self.n_pad
 
         def step(arrays, coarse_h, carry):
             matvec, precond = self._operators(arrays, coarse_h)
             return _pcg_block_chunk(matvec, precond, n, n_pad, tol, length,
-                                    carry)
+                                    carry, guard=guard)
 
         return step
 
-    def build_solve_block_step(self, n_iters: int = 30, tol: float = 0.0):
+    def build_solve_block_step(self, n_iters: int = 30, tol: float = 0.0,
+                               guard=None):
         """(arrays, coarse_h, B_pad [n_pad, k]) -> (X_pad, norms, iters).
 
         One fused program — init + full-length scan — so a dry-run lowering
-        sees every collective of the solve phase in a single HLO.
+        sees every collective of the solve phase in a single HLO. With
+        ``guard`` a ``GuardConfig`` the in-scan status lanes run and the
+        return grows a fourth element: per-column int32 ``SCAN_*`` codes.
         """
-        init = self.build_init_step()
-        chunk = self.build_chunk_step(n_iters, tol=tol)
+        init = self.build_init_step(guard=guard)
+        chunk = self.build_chunk_step(n_iters, tol=tol, guard=guard)
 
         def step(arrays, coarse_h, B_pad):
             carry = init(arrays, coarse_h, B_pad)
-            r0n = carry[6]
+            r0n = carry[-1]
             carry, norms = chunk(arrays, coarse_h, carry)
-            return (carry[0], jnp.concatenate([r0n[None, :], norms], axis=0),
-                    carry[5])
+            norms = jnp.concatenate([r0n[None, :], norms], axis=0)
+            if guard is None:
+                return carry[0], norms, carry[5]
+            return carry[0], norms, carry[5], carry[6]
 
         return step
 
@@ -549,7 +654,23 @@ class DistLaplacianSolver:
     # tens of iterations never pays hundreds (the scan itself cannot exit).
     _CHUNK = 16
 
-    def solve_block(self, B, n_iters: int = 30, tol: float = 1e-8):
+    def _get_step(self, key, build):
+        """Jit-cache lookup, bypassed while a traced fault plan is armed.
+
+        Trace-time fault sites (``dist.spmv``/``dist.psum``) bake the
+        corruption into the traced program, so an armed plan must never
+        reuse a cached clean program nor poison the cache: a non-None
+        ``faults.trace_token()`` forces a fresh uncached jit per call.
+        """
+        if faults.trace_token() is not None:
+            return jax.jit(build())
+        step = self._steps.get(key)
+        if step is None:
+            step = self._steps[key] = jax.jit(build())
+        return step
+
+    def solve_block(self, B, n_iters: int = 30, tol: float = 1e-8,
+                    guard=None):
         """Blocked multi-RHS distributed solve: ``B`` is (n, k).
 
         All k columns ride one scanned PCG program — the 2D-sharded SpMV
@@ -559,6 +680,14 @@ class DistLaplacianSolver:
         converged, so a generous ``n_iters`` cap costs nothing once the
         block is done. Returns (X [n, k], norms [T+1, k], iters [k]) with
         T <= n_iters.
+
+        ``guard`` (bool or ``repro.core.krylov.GuardConfig``) turns on the
+        in-scan breakdown lanes: the return grows a fourth element — the
+        per-column int32 ``SCAN_*`` codes, fetched live from the carry —
+        and broken columns also count as done for the early chunk exit
+        (a fully-broken block stops at the next chunk boundary instead of
+        burning the whole iteration cap). Clean-path X/norms/iters are
+        bitwise identical to the unguarded program.
         """
         B = jnp.asarray(B, jnp.float32)
         if B.ndim != 2:
@@ -568,12 +697,12 @@ class DistLaplacianSolver:
         B_pad = jnp.pad(self._to_internal(B), ((0, self.n_pad - self.n),
                                                (0, 0)))
         tol = float(tol)
+        g = _as_guard(guard)
 
-        init = self._steps.get(("init", k))
-        if init is None:
-            init = self._steps[("init", k)] = jax.jit(self.build_init_step())
+        init = self._get_step(("init", k, g),
+                              lambda: self.build_init_step(guard=g))
         carry = init(self.arrays, self.coarse_h, B_pad)
-        r0n = np.asarray(jax.device_get(carry[6]))
+        r0n = np.asarray(jax.device_get(carry[-1]))
 
         # small caps run as one program (one compile, the old behavior);
         # chunking only pays once the cap is far beyond typical convergence
@@ -582,17 +711,23 @@ class DistLaplacianSolver:
         it = 0
         while it < n_iters:
             length = min(self._CHUNK, n_iters - it) if chunked else n_iters
-            key = ("chunk", k, length, tol)
-            step = self._steps.get(key)
-            if step is None:
-                step = self._steps[key] = jax.jit(
-                    self.build_chunk_step(length, tol=tol))
+            key = ("chunk", k, length, tol, g)
+            step = self._get_step(
+                key, lambda: self.build_chunk_step(length, tol=tol, guard=g))
             carry, ns = step(self.arrays, self.coarse_h, carry)
             norms_parts.append(np.asarray(jax.device_get(ns)))
             it += length
-            if tol > 0 and np.all(norms_parts[-1][-1] <= tol * r0n):
-                break
+            if tol > 0:
+                done = norms_parts[-1][-1] <= tol * r0n
+                if g is not None:
+                    done = done | (np.asarray(jax.device_get(carry[6])) !=
+                                   SCAN_OK)
+                if np.all(done):
+                    break
         X_pad, iters = carry[0], carry[5]
         norms = np.concatenate(norms_parts, axis=0)
-        return (self._from_internal(X_pad[: self.n]), norms,
-                np.asarray(jax.device_get(iters)))
+        out = (self._from_internal(X_pad[: self.n]), norms,
+               np.asarray(jax.device_get(iters)))
+        if g is not None:
+            out = out + (np.asarray(jax.device_get(carry[6])),)
+        return out

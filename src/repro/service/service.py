@@ -37,10 +37,35 @@ poisoned hierarchy from the cache. An optional per-flush deadline budget
 bounds tail latency: requests not served when the budget runs out fail
 with an explicit deadline error instead of holding the flush open.
 ``stats()`` adds failure/retry/fallback/deadline counters.
+
+PR 9 hardens the serving loop three ways:
+
+* **Admission triage** (``SolverOptions(triage=True)``): ``submit()``
+  scores each problem's conditioning (``repro.api.triage``) and records
+  the report on ``Ticket.triage``. Tickets routed to the ``diag_pcg`` /
+  ``dense`` rungs bypass hierarchy setup entirely; ``multigrid_strict``
+  tickets solve in their own groups under the tightened guard.
+* **Checkpoint/restart**: with ``checkpoint_dir=...`` and
+  ``SolverOptions(checkpoint_every=N)`` (or a ``checkpoint_wall``
+  seconds budget), ``flush()`` snapshots completed-ticket results at
+  solve-group boundaries through ``repro.checkpoint``. After a crash,
+  re-submit the same requests and call :meth:`SolverService.resume` —
+  completed work is installed from the snapshot (matched by problem
+  fingerprint + RHS content hash + stopping params) and the next
+  ``flush()`` replays only unfinished work, bit-matching an
+  uninterrupted flush (``exact_columns`` keeps blocked solves
+  composition-independent).
+* **Retry accounting**: setup and solve retries are counted separately
+  (``stats()["setup_retries"]`` / ``["solve_retries"]``; ``"retries"``
+  stays as their sum), and a retry that succeeds clears any stale
+  ``Ticket.error`` left by an earlier failed attempt of the same
+  hierarchy.
 """
 
 from __future__ import annotations
 
+import hashlib
+import json
 import time
 
 import numpy as np
@@ -56,6 +81,29 @@ from repro.testing import faults
 # Backends whose solve_block accepts per-column (k,) tol / max-iters
 # arrays; other backends get one solve_block call per request.
 _BLOCKABLE = ("single", "serial_ref")
+
+# Triage rungs that never touch the multigrid hierarchy (setup bypassed).
+_ROUTED_RUNGS = ("diag_pcg", "dense")
+
+
+def _routed(t) -> bool:
+    return t.triage is not None and t.triage.rung in _ROUTED_RUNGS
+
+
+def _b_sha(B: np.ndarray) -> str:
+    """Content hash of an RHS block (dtype + shape + bytes) — pairs with
+    ``Problem.fingerprint()`` to match checkpointed results on resume."""
+    a = np.ascontiguousarray(B)
+    h = hashlib.sha256()
+    h.update(repr((a.dtype.str, a.shape)).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _json_safe(obj):
+    """Round-trip through JSON (default=str) so diagnostics entries with
+    exception reprs or numpy scalars become manifest-storable."""
+    return json.loads(json.dumps(obj, default=str))
 
 
 class ServiceError(RuntimeError):
@@ -86,6 +134,9 @@ class Ticket:
         self._x: np.ndarray | None = None
         self._result: SolveResult | None = None
         self.error: BaseException | None = None
+        # admission-triage report (repro.api.triage.TriageReport) when the
+        # service runs with SolverOptions(triage=True)
+        self.triage = None
 
     @property
     def n_rhs(self) -> int:
@@ -125,28 +176,38 @@ class SolverService:
     def __init__(self, options: SolverOptions | None = None,
                  backend: str = "auto", mesh=None,
                  cache: HierarchyCache | None = None, max_batch: int = 8,
-                 flush_deadline: float | None = None):
+                 flush_deadline: float | None = None,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_wall: float | None = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if flush_deadline is not None and flush_deadline <= 0:
             raise ValueError(f"flush_deadline must be positive seconds, "
                              f"got {flush_deadline}")
+        if checkpoint_wall is not None and checkpoint_wall <= 0:
+            raise ValueError(f"checkpoint_wall must be positive seconds, "
+                             f"got {checkpoint_wall}")
         self.options = options or SolverOptions()
         self.backend = resolve_backend(backend, mesh, self.options)
         self.mesh = mesh
         self.cache = cache if cache is not None else HierarchyCache()
         self.max_batch = max_batch
         self.flush_deadline = flush_deadline
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_wall = checkpoint_wall
         self._pending: list[Ticket] = []
         self._seq = 0
         self._latencies: list[float] = []
+        self._ckpt_done = 0
+        self._ckpt_time = time.perf_counter()
         self._c = dict(requests=0, served=0, flushes=0,
                        setups_batched=0, setups_looped=0,
                        setup_batches=0, solve_blocks=0,
                        rhs_columns=0, solve_seconds=0.0,
                        setup_seconds=0.0,
-                       failures=0, retries=0, fallbacks=0,
-                       deadline_expired=0)
+                       failures=0, setup_retries=0, solve_retries=0,
+                       fallbacks=0, deadline_expired=0,
+                       triage_routed=0, checkpoints=0, resumed=0)
 
     # ------------------------------------------------------------------
     def submit(self, problem: Problem, b, *, tol: float | None = None,
@@ -190,6 +251,14 @@ class SolverService:
             self.options.max_iters if max_iters is None else int(max_iters),
             HierarchyCache.key(problem, self.options, self.backend,
                                self.mesh))
+        if self.options.triage:
+            # Admission-time conditioning triage (PR 9): the score is
+            # memoized on the Problem, so a re-submitted problem pays
+            # only the rung decision. Routed tickets (_ROUTED_RUNGS)
+            # never enter the setup pass.
+            from repro.api.triage import triage_problem
+
+            t.triage = triage_problem(problem, self.options)
         self._seq += 1
         self._c["requests"] += 1
         self._pending.append(t)
@@ -213,6 +282,8 @@ class SolverService:
         self._c["flushes"] += 1
         budget = self.flush_deadline if deadline is None else deadline
         t_start = time.perf_counter()
+        self._ckpt_done = 0
+        self._ckpt_time = t_start
 
         def expired() -> bool:
             return (budget is not None
@@ -220,6 +291,12 @@ class SolverService:
 
         self._setup_pass(pending, expired)
         self._solve_pass(pending, expired)
+        if self._ckpt_enabled():
+            # final snapshot: a flush that completes always leaves its
+            # full result set restorable, whatever the boundary cadence
+            done = sum(1 for t in pending if t._result is not None)
+            if done > self._ckpt_done:
+                self._write_checkpoint(pending)
         for t in pending:
             if t._result is None and t.error is None:
                 t.error = ServiceError(
@@ -242,6 +319,8 @@ class SolverService:
         """
         by_key: dict[tuple, list[Ticket]] = {}
         for t in pending:
+            if _routed(t):
+                continue        # triage sent it past the hierarchy rungs
             by_key.setdefault(t._key, []).append(t)
         missing: dict[tuple, Ticket] = {}
         for key, ts in by_key.items():
@@ -290,10 +369,15 @@ class SolverService:
         for t in chunk:
             if expired() or self.cache.peek(t._key) is not None:
                 continue
-            self._c["retries"] += 1
+            self._c["setup_retries"] += 1
             try:
                 faults.checkpoint("service.setup")
                 self._setup_one(t)
+                # a sibling ticket's earlier failed attempt may have
+                # marked this hierarchy's tickets failed — the hierarchy
+                # exists now, so those errors are stale
+                for tk in by_key[t._key]:
+                    tk.error = None
             except Exception as e:
                 self._c["failures"] += 1
                 for tk in by_key[t._key]:
@@ -316,15 +400,35 @@ class SolverService:
 
     # ------------------------------------------------------------------
     def _solve_pass(self, pending: list[Ticket], expired) -> None:
-        """Group same-hierarchy requests into blocked solves."""
+        """Group same-hierarchy requests into blocked solves.
+
+        Triage-routed tickets solve first (seq order, no hierarchy);
+        ``multigrid_strict`` tickets form their own groups so the whole
+        group runs under the tightened guard. Completed-ticket snapshots
+        are taken at group boundaries (``_maybe_checkpoint``).
+        """
         groups: dict[tuple, list[Ticket]] = {}
+        routed: list[Ticket] = []
         for t in pending:
-            if t.error is None:
-                groups.setdefault(t._key, []).append(t)
-        for key in sorted(groups):
+            if t.error is not None or t._result is not None:
+                continue
+            if _routed(t):
+                routed.append(t)
+            else:
+                strict = (t.triage is not None
+                          and t.triage.rung == "multigrid_strict")
+                groups.setdefault((t._key, strict), []).append(t)
+        for t in sorted(routed, key=lambda t: t.seq):
             if expired():
                 return
-            tickets = sorted(groups[key], key=lambda t: t.seq)
+            self._solve_triaged(t)
+            self._maybe_checkpoint(pending)
+        for gkey in sorted(groups):
+            if expired():
+                return
+            key, strict = gkey
+            tickets = sorted(groups[gkey], key=lambda t: t.seq)
+            guard = tickets[0].triage.guard if strict else None
             handle = self.cache.peek(key)
             if handle is None:
                 err = ServiceError(
@@ -334,34 +438,58 @@ class SolverService:
                     t.error = err
                 continue
             if self.backend in _BLOCKABLE:
-                self._solve_group(handle, tickets, expired)
+                self._solve_group(handle, tickets, expired, guard=guard)
+                self._maybe_checkpoint(pending)
             else:
                 for t in tickets:
                     if expired():
                         return
-                    self._solve_group(handle, [t], expired)
+                    self._solve_group(handle, [t], expired, guard=guard)
+                    self._maybe_checkpoint(pending)
 
-    def _solve_group(self, handle, tickets: list[Ticket], expired) -> None:
+    def _solve_triaged(self, t: Ticket) -> None:
+        """Serve one triage-routed ticket (``diag_pcg`` / ``dense`` rung)
+        through the facade's rung routing — no hierarchy is built or
+        consulted; the triage report leads the result's diagnostics."""
+        from repro.api.facade import Solver as _FacadeSolver
+
+        self._c["triage_routed"] += 1
+        solver = _FacadeSolver(t.problem, self.options, self.backend, None,
+                               0.0, mesh=self.mesh, cache=self.cache)
+        try:
+            x, result = solver.solve(t._B[:, 0] if t._single else t._B,
+                                     tol=t.tol, max_iters=t.max_iters)
+            t._x, t._result, t.error = x, result, None
+        except Exception as e:
+            self._c["failures"] += 1
+            t.error = e
+
+    def _solve_group(self, handle, tickets: list[Ticket], expired,
+                     guard=None) -> None:
         """One merged solve with per-ticket fault isolation: a raising
         group is split and retried ticket by ticket (capped at one retry
-        each), so a poisoned request fails alone."""
+        each), so a poisoned request fails alone. Tickets the failed
+        group attempt already resolved are not re-solved."""
         try:
             faults.checkpoint("service.solve")
-            self._solve_merged(handle, tickets)
+            self._solve_merged(handle, tickets, guard=guard)
         except Exception:
             self._c["failures"] += 1
             for t in tickets:
                 if expired():
                     return
-                self._c["retries"] += 1
+                if t._result is not None:
+                    continue
+                self._c["solve_retries"] += 1
                 try:
                     faults.checkpoint("service.solve")
-                    self._solve_merged(handle, [t])
+                    self._solve_merged(handle, [t], guard=guard)
                 except Exception as e2:
                     self._c["failures"] += 1
                     t.error = e2
 
-    def _solve_merged(self, handle, tickets: list[Ticket]) -> None:
+    def _solve_merged(self, handle, tickets: list[Ticket],
+                      guard=None) -> None:
         B = np.concatenate([t._B for t in tickets], axis=1)
         ks = [t.n_rhs for t in tickets]
         if len(tickets) == 1:
@@ -373,7 +501,13 @@ class SolverService:
                 [np.full(k, t.max_iters, np.int64)
                  for t, k in zip(tickets, ks)])
         t0 = time.perf_counter()
-        out = handle.solve_block(B, tol, max_iters)
+        kwargs = {} if guard is None else dict(guard=guard)
+        try:
+            out = handle.solve_block(B, tol, max_iters, **kwargs)
+        except TypeError:
+            if not kwargs:      # genuine error, not a legacy signature
+                raise
+            out = handle.solve_block(B, tol, max_iters)
         X, norms, iters, statuses = out if len(out) == 4 else (*out, None)
         seconds = time.perf_counter() - t0
         self._c["solve_blocks"] += 1
@@ -393,9 +527,12 @@ class SolverService:
             t._result = result_from_history(
                 self.backend, norms[:, sl], iters[sl], t.tol,
                 handle.work_per_iteration, 0.0,
-                seconds * (k / B.shape[1]), statuses=sts)
+                seconds * (k / B.shape[1]), statuses=sts,
+                diagnostics=(() if t.triage is None
+                             else (t.triage.as_diagnostics(),)))
             X_t = np.asarray(X[:, sl])
             t._x = X_t[:, 0] if t._single else X_t
+            t.error = None      # a retried solve must not keep a stale error
 
     def _fallback_ticket(self, handle, t: Ticket) -> None:
         """Route one broken-down ticket through the facade's degradation
@@ -411,15 +548,140 @@ class SolverService:
         try:
             x, result = solver.solve(t._B[:, 0] if t._single else t._B,
                                      tol=t.tol, max_iters=t.max_iters)
-            t._x, t._result = x, result
+            t._x, t._result, t.error = x, result, None
         except Exception as e:
             self._c["failures"] += 1
             t.error = e
 
     # ------------------------------------------------------------------
+    def _ckpt_enabled(self) -> bool:
+        return (self.checkpoint_dir is not None
+                and (self.options.checkpoint_every > 0
+                     or self.checkpoint_wall is not None))
+
+    def _maybe_checkpoint(self, pending: list[Ticket]) -> None:
+        """Snapshot at a solve-group boundary when a ticket-count or
+        wall-clock budget has elapsed since the last snapshot."""
+        if not self._ckpt_enabled():
+            return
+        done = sum(1 for t in pending if t._result is not None)
+        every = self.options.checkpoint_every
+        due = ((every > 0 and done - self._ckpt_done >= every)
+               or (self.checkpoint_wall is not None
+                   and time.perf_counter() - self._ckpt_time
+                   >= self.checkpoint_wall))
+        if due and done > self._ckpt_done:
+            self._write_checkpoint(pending)
+
+    def _write_checkpoint(self, pending: list[Ticket]) -> None:
+        """Persist every completed ticket of this flush as one atomic
+        ``repro.checkpoint`` step: result arrays as leaves, JSON-safe
+        result scalars + matching identity (problem fingerprint, RHS
+        content hash, stopping params) in the manifest."""
+        from repro.checkpoint.ckpt import latest_step, save_checkpoint
+
+        done = [t for t in pending if t._result is not None]
+        if not done:
+            return
+        tree: dict = {}
+        metas: dict = {}
+        for t in done:
+            skey = f"{t.seq:06d}"
+            r = t._result
+            leaves = dict(x=np.asarray(t._x),
+                          iters=np.asarray(r.iters_per_rhs),
+                          norms=np.asarray(r.residual_norms))
+            if r.statuses is not None:
+                leaves["statuses"] = np.asarray(r.statuses)
+            tree[skey] = leaves
+            metas[skey] = dict(
+                fingerprint=t.problem.fingerprint(), b_sha=_b_sha(t._B),
+                tol=float(t.tol), max_iters=int(t.max_iters),
+                single=bool(t._single), backend=r.backend,
+                converged=bool(r.converged), iters=int(r.iters),
+                wda=float(r.wda),
+                work_per_iteration=float(r.work_per_iteration),
+                setup_seconds=float(r.setup_seconds),
+                solve_seconds=float(r.solve_seconds), n_rhs=int(r.n_rhs),
+                status=str(r.status),
+                diagnostics=_json_safe(list(r.diagnostics)))
+        prev = latest_step(self.checkpoint_dir)
+        step = 0 if prev is None else prev + 1
+        save_checkpoint(self.checkpoint_dir, step, tree,
+                        extra=dict(kind="service-flush", tickets=metas))
+        self._c["checkpoints"] += 1
+        self._ckpt_done = len(done)
+        self._ckpt_time = time.perf_counter()
+
+    def resume(self, directory: str | None = None,
+               step: int | None = None) -> int:
+        """Install checkpointed results into matching pending tickets.
+
+        After a crash mid-``flush()``, re-submit the same request stream
+        and call ``resume()`` before the next ``flush()``: tickets whose
+        (problem fingerprint, RHS content hash, tol, max_iters) match a
+        completed ticket in the snapshot get its exact saved arrays (the
+        replayed flush is bitwise-identical to an uninterrupted one) and
+        leave the queue; ``flush()`` then does only the unfinished work.
+        Matching is by submission order, so duplicate requests pair up
+        deterministically. Returns the number of tickets restored.
+        ``directory``/``step`` default to the service's
+        ``checkpoint_dir`` and its latest completed step.
+        """
+        from repro.checkpoint.ckpt import latest_step, load_checkpoint_flat
+
+        directory = self.checkpoint_dir if directory is None else directory
+        if directory is None:
+            raise ServiceError(
+                "resume needs a checkpoint directory: pass one or "
+                "construct the service with checkpoint_dir=...")
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                return 0
+        flat, manifest = load_checkpoint_flat(directory, step)
+        saved = manifest.get("extra", {}).get("tickets", {})
+        by_sig: dict[tuple, list[str]] = {}
+        for skey in sorted(saved, key=int):
+            m = saved[skey]
+            by_sig.setdefault(
+                (m["fingerprint"], m["b_sha"], m["tol"], m["max_iters"]),
+                []).append(skey)
+        restored: list[Ticket] = []
+        for t in sorted(self._pending, key=lambda t: t.seq):
+            sig = (t.problem.fingerprint(), _b_sha(t._B), float(t.tol),
+                   int(t.max_iters))
+            q = by_sig.get(sig)
+            if not q:
+                continue
+            skey = q.pop(0)
+            m = saved[skey]
+            t._result = SolveResult(
+                backend=m["backend"], converged=m["converged"],
+                iters=m["iters"], iters_per_rhs=flat[f"{skey}/iters"],
+                residual_norms=flat[f"{skey}/norms"], wda=m["wda"],
+                work_per_iteration=m["work_per_iteration"],
+                setup_seconds=m["setup_seconds"],
+                solve_seconds=m["solve_seconds"], n_rhs=m["n_rhs"],
+                status=m["status"], statuses=flat.get(f"{skey}/statuses"),
+                diagnostics=tuple(m["diagnostics"]))
+            t._x = flat[f"{skey}/x"]
+            t.error = None
+            restored.append(t)
+        for t in restored:
+            self._pending.remove(t)
+        now = time.perf_counter()
+        self._latencies.extend(now - t._submitted for t in restored)
+        self._c["resumed"] += len(restored)
+        self._c["served"] += len(restored)
+        return len(restored)
+
+    # ------------------------------------------------------------------
     def stats(self) -> dict:
         """Serving counters: queue/batching/cache/latency."""
         c = dict(self._c)
+        # legacy aggregate kept for pre-PR 9 consumers
+        c["retries"] = c["setup_retries"] + c["solve_retries"]
         lat = np.asarray(self._latencies, np.float64)
         c.update(
             queue_depth=len(self._pending),

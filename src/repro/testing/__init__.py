@@ -3,16 +3,22 @@
 See :mod:`repro.testing.faults`.
 """
 
-from repro.testing.faults import (Fault, FaultPlan, InjectedFault, SITES,
-                                  active, checkpoint, inject, site)
+from repro.testing.faults import (Fault, FaultPlan, InjectedFault,
+                                  KILL_EXIT_CODE, SITES, TRACED_SITES,
+                                  active, checkpoint, inject, site,
+                                  site_traced, trace_token)
 
 __all__ = [
     "Fault",
     "FaultPlan",
     "InjectedFault",
+    "KILL_EXIT_CODE",
     "SITES",
+    "TRACED_SITES",
     "active",
     "checkpoint",
     "inject",
     "site",
+    "site_traced",
+    "trace_token",
 ]

@@ -25,7 +25,8 @@ Corruption is **deterministic**: which entries are corrupted is drawn from
 index)``, and ``at_calls`` selects fire points by per-site call count — the
 same plan against the same code always corrupts the same floats.
 
-Named sites (grep for ``faults.site(``/``faults.checkpoint(``):
+Named sites (grep for ``faults.site(``/``faults.checkpoint(``/
+``faults.site_traced(``):
 
 =====================  ======================================================
 ``setup.build``        raising checkpoint at hierarchy-build entry
@@ -37,15 +38,62 @@ Named sites (grep for ``faults.site(``/``faults.checkpoint(``):
 ``service.request``    admitted RHS block (post-validation) in submit()
 ``service.setup``      raising checkpoint in the flush() setup pass
 ``service.solve``      raising checkpoint in the flush() solve pass
+``dist.select``        one shard's Alg 1 key tensor in the dist setup
+                       super-step (traced)
+``dist.vote``          one shard's fused Alg 2 vote keys in the dist setup
+                       super-step (traced)
+``dist.spmv``          blocked iteration SpMV output inside the dist scanned
+                       PCG (traced)
+``dist.psum``          one shard's pre-``psum`` partial of the 2D SpMV — a
+                       corrupted allreduce contribution (traced)
 =====================  ======================================================
+
+**Traced sites** (PR 9, the ``dist.*`` rows): the distributed solve and the
+dist setup super-steps run as jitted ``shard_map`` programs, so host-side
+corruption of intermediate arrays is impossible — :func:`site_traced` is
+the in-program twin of :func:`site`. It is consulted at *trace* time: when
+a plan arms a traced site, the corruption (deterministic entry indices
+from the same seeded RNG, baked in as constants) is built into the traced
+computation itself, optionally restricted to a single shard via the
+``axis_index`` carried through ``shard_map`` (the seeded RNG also picks
+the faulty shard — the "one bad rank" model). Consequences, documented
+because they differ from the host sites:
+
+* ``at_calls`` counts **trace-time passes** through the site, not runtime
+  executions — a fault armed ``at_calls=(0,)`` corrupts every execution of
+  the first program traced through the site and none of later traces
+  (e.g. the facade's rebuild rung traces fresh programs, so its retry is
+  clean);
+* any consumer that caches jitted programs must key the cache on
+  :func:`trace_token` — a fresh token per call while a plan with traced
+  sites is armed, ``None`` in production — so armed traces are never
+  cached and clean cached programs are never reused while armed
+  (``DistLaplacianSolver`` and the dist super-step registry do this);
+* integer lanes (the setup semiring keys) cannot hold NaN/Inf: the
+  ``nan``/``inf``/``huge`` modes write the dtype's extreme sentinel value
+  instead — a maximally wrong key, the integer analogue of a poisoned
+  float.
+
+``mode="kill"`` (PR 9) hard-kills the process (``os._exit``) at the site —
+the checkpoint/restart harness uses it to die mid-``flush()`` and prove
+``SolverService.resume`` replays only the unfinished work.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import itertools
+import os
 
 import numpy as np
+
+TRACED_SITES = (
+    "dist.select",
+    "dist.vote",
+    "dist.spmv",
+    "dist.psum",
+)
 
 SITES = (
     "setup.build",
@@ -57,9 +105,13 @@ SITES = (
     "service.request",
     "service.setup",
     "service.solve",
-)
+) + TRACED_SITES
 
-_MODES = ("nan", "inf", "huge", "zero", "negate", "raise")
+_MODES = ("nan", "inf", "huge", "zero", "negate", "raise", "kill")
+
+# exit code of a mode="kill" fault — tests assert on it so an unrelated
+# crash can't masquerade as the injected kill
+KILL_EXIT_CODE = 43
 
 
 class InjectedFault(RuntimeError):
@@ -132,6 +184,8 @@ class FaultPlan:
         if f.mode == "raise":
             raise InjectedFault(f"injected failure at site {name!r} "
                                 f"(call {self.counts[name] - 1})")
+        if f.mode == "kill":                       # pragma: no cover
+            os._exit(KILL_EXIT_CODE)
         arr = np.array(x, copy=True)
         if arr.dtype.kind not in "fc":
             arr = arr.astype(np.float64)
@@ -164,12 +218,74 @@ class FaultPlan:
         """Raise :class:`InjectedFault` if a raising fault is armed."""
         f = self._armed(name)
         if f is not None:
+            if f.mode == "kill":                   # pragma: no cover
+                os._exit(KILL_EXIT_CODE)
             raise InjectedFault(f"injected failure at site {name!r} "
                                 f"(call {self.counts[name] - 1})")
+
+    def apply_traced(self, name: str, x, axis_index=None, n_shards=None):
+        """Trace-time twin of :meth:`apply` for device-resident sites.
+
+        ``x`` is a traced jax array of static shape/dtype; the corrupted
+        entry indices (and, when ``axis_index``/``n_shards`` are given,
+        the single faulty shard) come from the same seeded RNG as
+        :meth:`apply`, so the injected values are deterministic constants
+        baked into the traced program.
+        """
+        f = self._armed(name)
+        if f is None:
+            return x
+        if f.mode == "raise":
+            raise InjectedFault(f"injected failure at traced site {name!r} "
+                                f"(trace {self.counts[name] - 1})")
+        if f.mode == "kill":                       # pragma: no cover
+            os._exit(KILL_EXIT_CODE)
+        import jax.numpy as jnp
+
+        size = 1
+        for d in x.shape:
+            size *= int(d)
+        if size == 0:
+            return x
+        rng = np.random.default_rng(
+            (self.seed, hash(name) & 0x7FFFFFFF, self.counts[name] - 1))
+        m = max(1, int(round(f.fraction * size)))
+        idx = rng.choice(size, size=min(m, size), replace=False)
+        flat = x.reshape(-1)
+        if np.issubdtype(np.dtype(x.dtype), np.floating):
+            if f.mode == "nan":
+                bad = flat.at[idx].set(jnp.nan)
+            elif f.mode == "inf":
+                bad = flat.at[idx].set(jnp.inf)
+            elif f.mode == "huge":
+                bad = flat.at[idx].set(flat[idx] * 1e30 + 1e30)
+            elif f.mode == "zero":
+                bad = flat.at[idx].set(0.0)
+            else:                                  # negate
+                bad = flat.at[idx].set(-flat[idx])
+        else:
+            # integer semiring lanes can't hold NaN/Inf: write the dtype's
+            # extreme sentinel (a maximally wrong key) instead
+            if f.mode in ("nan", "inf", "huge"):
+                bad = flat.at[idx].set(np.iinfo(np.dtype(x.dtype)).max)
+            elif f.mode == "zero":
+                bad = flat.at[idx].set(0)
+            else:                                  # negate
+                bad = flat.at[idx].set(-flat[idx])
+        bad = bad.reshape(x.shape)
+        if axis_index is None:
+            return bad
+        target = int(rng.integers(int(n_shards)))  # the one bad rank
+        return jnp.where(axis_index == target, bad, x)
+
+    def wants_traced(self) -> bool:
+        """True if the plan arms any trace-time (``dist.*``) site."""
+        return any(name in TRACED_SITES for name in self.faults)
 
 
 # ----------------------------------------------------------------------
 _ACTIVE: FaultPlan | None = None
+_TRACE_TOKENS = itertools.count(1)
 
 
 def active() -> FaultPlan | None:
@@ -201,3 +317,34 @@ def checkpoint(name: str) -> None:
     """Hook: raise :class:`InjectedFault` iff a raising fault is armed."""
     if _ACTIVE is not None:
         _ACTIVE.check(name)
+
+
+def site_traced(name: str, x, axis_index=None, n_shards=None):
+    """Trace-time hook: corrupt traced array ``x`` iff a fault is armed.
+
+    Call from inside jitted / ``shard_map``-ped programs. With no plan
+    armed (production) this is the same single global ``None`` check as
+    :func:`site` and returns ``x`` untouched — zero ops added to the
+    traced program. Pass ``axis_index`` (a traced per-shard scalar, e.g.
+    the linearised mesh index) and the static ``n_shards`` to restrict
+    the corruption to one seeded shard.
+    """
+    if _ACTIVE is None:
+        return x
+    return _ACTIVE.apply_traced(name, x, axis_index=axis_index,
+                                n_shards=n_shards)
+
+
+def trace_token():
+    """Cache-key token isolating fault-armed traces from clean programs.
+
+    Returns ``None`` when no plan is armed or the armed plan has no
+    trace-time (``dist.*``) sites — cached clean programs stay valid.
+    While a plan *with* traced sites is armed, every call returns a fresh
+    unique token: including it in jit-cache keys (and the super-step
+    registry tag) means armed traces are never cached or reused, and the
+    per-site trace counts advance exactly once per program build.
+    """
+    if _ACTIVE is None or not _ACTIVE.wants_traced():
+        return None
+    return next(_TRACE_TOKENS)

@@ -1,0 +1,278 @@
+"""Distributed fault tolerance (PR 9): the four traced ``dist.*`` fault
+sites, in-scan breakdown guards, and their parity with the eager path.
+
+Fast tests run in-process on a 1×1 mesh (same programs, one shard — the
+trace-time injection machinery is identical); the ``slow`` class re-runs
+every site on a real 2×2 mesh in subprocesses (JAX locks the device count
+at first init) with per-shard corruption.
+
+Covered promises:
+
+* every ``dist.*`` site fires and the pipeline ends in an explicit
+  status with finite outputs — solve-site breakdowns recover through the
+  facade's degradation ladder;
+* the dist backend's in-scan status codes bit-match the eager backend's
+  codes on the same fault classes;
+* the retired-to-debug-helper ``scan_norms_status`` postmortem agrees
+  with the in-scan codes on clean runs and nonfinite-residual faults,
+  and the in-scan codes are a strict refinement on indefinite faults
+  (the guard freezes the column *before* the poisoned update, so the
+  fetched norms stay finite and the postmortem can only say max_iters).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import Problem, SolverOptions, setup
+from repro.core.krylov import scan_norms_status
+from repro.graphs.generators import barabasi_albert, ensure_connected
+from repro.testing import TRACED_SITES, Fault, FaultPlan, inject
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+EXPLICIT = ("converged", "max_iters", "degraded", "failed")
+
+# dist_nnz_threshold=1: every eligible level gets the 2D-sharded SpMV,
+# so the dist.psum site (inside the sharded partial-sum) is on the path.
+OPTS = SolverOptions(coarsest_size=64, max_iters=200, dist_nnz_threshold=1)
+
+
+def problem(n=300, seed=0):
+    return Problem.from_edges(
+        *ensure_connected(*barabasi_albert(n, m=3, seed=seed, weighted=True)))
+
+
+def mean_free(seed, n, k=None):
+    b = np.random.default_rng(seed).normal(size=n if k is None else (n, k))
+    return (b - b.mean(axis=0)).astype(np.float32)
+
+
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class TestTracedSiteRecovery:
+    """1×1 fast path: arm each dist site, drive the pipeline, assert the
+    hit is recorded and the solve terminates explicitly and finitely."""
+
+    @pytest.mark.parametrize("name", ["dist.spmv", "dist.psum"])
+    def test_solve_sites_break_and_recover(self, name):
+        p = problem()
+        solver = setup(p, OPTS, backend="dist", mesh=mesh11(), cache=False)
+        plan = FaultPlan({name: Fault(mode="nan", at_calls=(0,),
+                                      fraction=0.3)})
+        with inject(plan):
+            x, res = solver.solve(mean_free(2, p.n))
+        assert plan.fired
+        # the ladder's rebuild rung re-traces outside the at_calls window,
+        # so clean math is reachable and the breakdown must recover
+        assert res.status in ("converged", "degraded")
+        assert res.diagnostics and res.diagnostics[0]["stage"] == "primary"
+        assert np.isfinite(x).all()
+
+    @pytest.mark.parametrize("name", ["dist.select", "dist.vote"])
+    def test_setup_sites_terminate_explicit(self, name):
+        """Setup-time semiring corruption (int key lanes take the sentinel
+        value) must never escape as a NaN/crash: whatever hierarchy comes
+        out, the solve ends in an explicit status with finite outputs."""
+        p = problem()
+        plan = FaultPlan({name: Fault(mode="huge", at_calls=(0,),
+                                      fraction=0.5)})
+        with inject(plan):
+            solver = setup(p, OPTS, backend="dist", mesh=mesh11(),
+                           cache=False)
+            x, res = solver.solve(mean_free(3, p.n))
+        assert plan.fired
+        assert res.status in EXPLICIT and res.status != "failed"
+        assert np.isfinite(x).all()
+
+    def test_traced_registry(self):
+        assert TRACED_SITES == ("dist.select", "dist.vote", "dist.spmv",
+                                "dist.psum")
+
+
+class TestStatusParityWithEager:
+    """The same fault class produces the same per-column codes on both
+    backends (``fallback=False`` so the raw codes surface)."""
+
+    def _dist(self, p, b, site, at):
+        opts = SolverOptions(coarsest_size=64, fallback=False,
+                             dist_nnz_threshold=1)
+        solver = setup(p, opts, backend="dist", mesh=mesh11(), cache=False)
+        plan = FaultPlan({site: Fault(mode="nan", at_calls=at,
+                                      fraction=0.3)})
+        with inject(plan):
+            _, res = solver.solve(b)
+        assert plan.fired
+        return res
+
+    def _eager(self, p, b, site, at):
+        opts = SolverOptions(coarsest_size=64, fallback=False)
+        solver = setup(p, opts, backend="single", cache=False)
+        plan = FaultPlan({site: Fault(mode="nan", at_calls=at,
+                                      fraction=0.3)})
+        with inject(plan):
+            _, res = solver.solve(b)
+        assert plan.fired
+        return res
+
+    def test_indefinite_parity(self):
+        """A NaN in the iteration SpMV poisons p·Ap on both backends."""
+        p, b = problem(), mean_free(4, 300, k=2)
+        res_d = self._dist(p, b, "dist.spmv", (0,))
+        res_e = self._eager(p, b, "solve.spmv", (1,))
+        assert list(res_d.statuses) == ["breakdown_indefinite"] * 2
+        assert list(res_d.statuses) == list(res_e.statuses)
+
+    def test_nonfinite_parity(self):
+        """A NaN in the residual reduction surfaces as nonfinite on both
+        backends (dist.psum corrupts the sharded partial sums the initial
+        residual is built from; solve.residual is the eager twin)."""
+        p, b = problem(), mean_free(5, 300, k=2)
+        res_d = self._dist(p, b, "dist.psum", (0,))
+        res_e = self._eager(p, b, "solve.residual", None)
+        assert list(res_d.statuses) == ["breakdown_nonfinite"] * 2
+        assert list(res_d.statuses) == list(res_e.statuses)
+
+
+class TestInScanVsPostmortem:
+    """Satellite 1: ``scan_norms_status`` is demoted to a debug
+    cross-check — assert exactly where it agrees with the in-scan codes
+    and where the in-scan codes are strictly better."""
+
+    def test_clean_bitwise_and_exact_agreement(self):
+        p, b = problem(), mean_free(6, 300, k=3)
+        on = setup(p, SolverOptions(coarsest_size=64, guard=True,
+                                    guard_mode="in_scan"),
+                   backend="dist", mesh=mesh11(), cache=False)
+        x_on, res_on = on.solve(b)
+        off = setup(p, SolverOptions(coarsest_size=64, guard=False),
+                    backend="dist", mesh=mesh11(), cache=False)
+        x_off, res_off = off.solve(b)
+        # guards on: bitwise-unchanged clean path
+        np.testing.assert_array_equal(np.asarray(x_on), np.asarray(x_off))
+        pm = scan_norms_status(res_on.residual_norms, on.options.tol,
+                               res_on.residual_norms[0])
+        assert list(res_on.statuses) == list(pm) == ["converged"] * 3
+
+    def test_nonfinite_fault_agreement(self):
+        p, b = problem(), mean_free(7, 300, k=2)
+        opts = SolverOptions(coarsest_size=64, fallback=False,
+                             dist_nnz_threshold=1)
+        solver = setup(p, opts, backend="dist", mesh=mesh11(), cache=False)
+        plan = FaultPlan({"dist.psum": Fault(mode="nan", at_calls=(0,),
+                                             fraction=0.3)})
+        with inject(plan):
+            _, res = solver.solve(b)
+        pm = scan_norms_status(res.residual_norms, opts.tol,
+                               res.residual_norms[0])
+        assert list(res.statuses) == list(pm) == ["breakdown_nonfinite"] * 2
+
+    def test_indefinite_is_an_in_scan_refinement(self):
+        p, b = problem(), mean_free(8, 300, k=2)
+        opts = SolverOptions(coarsest_size=64, fallback=False)
+        solver = setup(p, opts, backend="dist", mesh=mesh11(), cache=False)
+        plan = FaultPlan({"dist.spmv": Fault(mode="nan", at_calls=(0,),
+                                             fraction=0.3)})
+        with inject(plan):
+            _, res = solver.solve(b)
+        pm = scan_norms_status(res.residual_norms, opts.tol,
+                               res.residual_norms[0])
+        # the in-scan guard froze each column BEFORE the poisoned update,
+        # so the fetched norms are finite and the postmortem sees only a
+        # solve that stopped early — the live codes carry the real cause
+        assert list(res.statuses) == ["breakdown_indefinite"] * 2
+        assert list(pm) == ["max_iters"] * 2
+
+
+DRIVER_2X2 = textwrap.dedent("""
+    import os, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    import jax.sharding as shd
+    from repro.api import Problem, SolverOptions, setup
+    from repro.graphs.generators import barabasi_albert, ensure_connected
+    from repro.testing import Fault, FaultPlan, inject
+
+    name = "%(site)s"
+    p = Problem.from_edges(*ensure_connected(
+        *barabasi_albert(600, m=3, seed=1, weighted=True)))
+    b = np.random.default_rng(5).normal(size=p.n).astype(np.float32)
+    b -= b.mean()
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(shd.AxisType.Auto,) * 2)
+    opts = SolverOptions(coarsest_size=64, dist_nnz_threshold=1)
+    fault = Fault(mode="%(mode)s", at_calls=(0,), fraction=0.3)
+    out = {}
+    if name in ("dist.spmv", "dist.psum"):
+        solver = setup(p, opts, backend="dist", mesh=mesh, cache=False)
+        plan = FaultPlan({name: fault})
+        with inject(plan):
+            x, res = solver.solve(b)
+    else:
+        plan = FaultPlan({name: fault})
+        with inject(plan):
+            solver = setup(p, opts, backend="dist", mesh=mesh, cache=False)
+            x, res = solver.solve(b)
+    out["fired"] = bool(plan.fired)
+    out["status"] = res.status
+    out["finite"] = bool(np.isfinite(np.asarray(x)).all())
+    out["stages"] = [d["stage"] for d in res.diagnostics]
+    if name in ("dist.spmv", "dist.psum"):
+        # raw-code parity vs the eager backend on the same fault class
+        nf = SolverOptions(coarsest_size=64, fallback=False,
+                           dist_nnz_threshold=1)
+        sd = setup(p, nf, backend="dist", mesh=mesh, cache=False)
+        with inject(FaultPlan({name: Fault(mode="%(mode)s", at_calls=(0,),
+                                           fraction=0.3)})):
+            _, res_d = sd.solve(b)
+        eager_site, at = (("solve.residual", None) if name == "dist.psum"
+                          else ("solve.spmv", (1,)))
+        se = setup(p, SolverOptions(coarsest_size=64, fallback=False),
+                   backend="single", cache=False)
+        with inject(FaultPlan({eager_site: Fault(mode="%(mode)s",
+                                                 at_calls=at,
+                                                 fraction=0.3)})):
+            _, res_e = se.solve(b)
+        out["dist_statuses"] = [str(s) for s in res_d.statuses]
+        out["eager_statuses"] = [str(s) for s in res_e.statuses]
+    print("RESULT " + json.dumps(out))
+""")
+
+
+@pytest.mark.slow  # fresh-process 4-device jit compiles, minutes each
+class TestDistFaults2x2:
+    """Every new dist site on a real 2×2 mesh: per-shard corruption, full
+    recovery, and in-scan status parity with the eager backend."""
+
+    @pytest.mark.parametrize("site,mode", [
+        ("dist.spmv", "nan"), ("dist.psum", "nan"),
+        ("dist.select", "huge"), ("dist.vote", "huge")])
+    def test_site_recovers_on_2x2(self, site, mode):
+        src = DRIVER_2X2 % dict(site=site, mode=mode)
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        proc = subprocess.run([sys.executable, "-c", src],
+                              capture_output=True, text=True, env=env,
+                              timeout=1200)
+        assert proc.returncode == 0, proc.stderr[-4000:]
+        line = [l for l in proc.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        out = json.loads(line[len("RESULT "):])
+        assert out["fired"]
+        assert out["finite"]
+        assert out["status"] in EXPLICIT and out["status"] != "failed"
+        if site in ("dist.spmv", "dist.psum"):
+            assert out["status"] in ("converged", "degraded")
+            assert out["stages"] and out["stages"][0] == "primary"
+            assert out["dist_statuses"] == out["eager_statuses"]
+            expected = ("breakdown_nonfinite" if site == "dist.psum"
+                        else "breakdown_indefinite")
+            assert set(out["dist_statuses"]) == {expected}

@@ -94,7 +94,10 @@ class TestSiteCoverage:
     with an explicit status (the PR's core promise)."""
 
     def test_sites_registry_is_exact(self):
-        assert len(SITES) == 9 and len(set(SITES)) == 9
+        # 9 host-side sites (PR 8) + 4 traced dist super-step sites (PR 9)
+        assert len(SITES) == 13 and len(set(SITES)) == 13
+        from repro.testing import TRACED_SITES
+        assert set(TRACED_SITES) <= set(SITES) and len(TRACED_SITES) == 4
 
     def test_setup_build_checkpoint(self):
         plan = FaultPlan({"setup.build": Fault(mode="raise")})

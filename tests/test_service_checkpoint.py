@@ -1,0 +1,315 @@
+"""Service checkpoint/restart, admission triage, and retry accounting
+(PR 9).
+
+The flush checkpoints snapshot completed-ticket results at solve-group
+boundaries through ``repro.checkpoint``; ``SolverService.resume``
+installs them into a re-submitted request stream so the replayed flush
+is bitwise-identical to an uninterrupted one. The kill-and-resume case
+runs in a subprocess: the fault harness's ``mode="kill"`` hard-exits the
+process mid-flush (``os._exit``, no cleanup — as close to SIGKILL as a
+test can portably get), then a second process resumes.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import Problem, SolverOptions, triage_problem
+from repro.checkpoint import latest_step, load_checkpoint_flat
+from repro.graphs.generators import (barabasi_albert, ensure_connected,
+                                     grid_2d)
+from repro.service import SolverService
+from repro.testing import KILL_EXIT_CODE, Fault, FaultPlan, inject
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def problem(n=300, seed=0):
+    return Problem.from_edges(
+        *ensure_connected(*barabasi_albert(n, m=3, seed=seed,
+                                           weighted=True)))
+
+
+def mean_free(seed, n):
+    b = np.random.default_rng(seed).normal(size=n)
+    return (b - b.mean()).astype(np.float32)
+
+
+def requests(n_problems=3):
+    probs = [problem(seed=s) for s in range(n_problems)]
+    return [(p, mean_free(10 + i, p.n)) for i, p in enumerate(probs)]
+
+
+OPTS = SolverOptions(coarsest_size=64, max_iters=200, checkpoint_every=1)
+
+
+class TestCheckpointResume:
+    def test_mid_flush_resume_is_bitwise(self, tmp_path):
+        """Kill-free rehearsal of the restart contract: resume from a
+        snapshot taken after the first solve group and replay the rest —
+        every x must equal the uninterrupted flush's bit for bit."""
+        reqs = requests()
+        ref_svc = SolverService(OPTS, backend="single")
+        ref_tickets = [ref_svc.submit(p, b) for p, b in reqs]
+        ref_svc.flush()
+        ref = [t.result() for t in ref_tickets]
+
+        ckpt = str(tmp_path / "ckpt")
+        svc1 = SolverService(OPTS, backend="single", checkpoint_dir=ckpt)
+        for p, b in reqs:
+            svc1.submit(p, b)
+        svc1.flush()
+        assert svc1.stats()["checkpoints"] >= len(reqs)  # per-group cadence
+
+        svc2 = SolverService(OPTS, backend="single", checkpoint_dir=ckpt)
+        tickets = [svc2.submit(p, b) for p, b in reqs]
+        n = svc2.resume(step=0)              # snapshot after first group
+        assert n == 1 and svc2.stats()["resumed"] == 1
+        svc2.flush()
+        for t, (x_ref, res_ref) in zip(tickets, ref):
+            x, res = t.result()
+            np.testing.assert_array_equal(x, x_ref)
+            np.testing.assert_array_equal(res.iters_per_rhs,
+                                          res_ref.iters_per_rhs)
+            assert res.status == res_ref.status
+            assert list(res.statuses) == list(res_ref.statuses)
+
+    def test_snapshot_contents_round_trip(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        reqs = requests(2)
+        svc = SolverService(OPTS, backend="single", checkpoint_dir=ckpt)
+        tickets = [svc.submit(p, b) for p, b in reqs]
+        svc.flush()
+        step = latest_step(ckpt)
+        flat, manifest = load_checkpoint_flat(ckpt, step)
+        saved = manifest["extra"]["tickets"]
+        assert len(saved) == len(reqs)
+        for t in tickets:
+            skey = f"{t.seq:06d}"
+            assert saved[skey]["fingerprint"] == t.problem.fingerprint()
+            np.testing.assert_array_equal(flat[f"{skey}/x"], t.result()[0])
+
+    def test_resume_matches_by_content_not_position(self, tmp_path):
+        """A different submission order still pairs each ticket with its
+        own saved result (fingerprint + RHS hash matching)."""
+        ckpt = str(tmp_path / "ckpt")
+        reqs = requests()
+        svc1 = SolverService(OPTS, backend="single", checkpoint_dir=ckpt)
+        for p, b in reqs:
+            svc1.submit(p, b)
+        svc1.flush()
+        svc2 = SolverService(OPTS, backend="single", checkpoint_dir=ckpt)
+        tickets = [svc2.submit(p, b) for p, b in reversed(reqs)]
+        assert svc2.resume() == len(reqs)    # latest step: all completed
+        assert svc2.stats()["queue_depth"] == 0
+        for t, (p, b) in zip(tickets, reversed(reqs)):
+            x, res = t.result()
+            assert x.shape == b.shape and res.converged
+
+    def test_resume_without_dir_raises(self):
+        svc = SolverService(OPTS, backend="single")
+        from repro.service import ServiceError
+
+        with pytest.raises(ServiceError, match="checkpoint directory"):
+            svc.resume()
+
+    def test_resume_empty_dir_is_noop(self, tmp_path):
+        svc = SolverService(OPTS, backend="single",
+                            checkpoint_dir=str(tmp_path / "empty"))
+        t = svc.submit(*requests(1)[0])
+        assert svc.resume() == 0
+        svc.flush()
+        assert t.result()[1].converged
+
+
+class TestRetryAccounting:
+    """Satellite 2: setup and solve retries are distinct counters, and a
+    retry that succeeds clears any stale ``Ticket.error``."""
+
+    def test_setup_vs_solve_retry_counters(self):
+        p = problem()
+        svc = SolverService(OPTS, backend="single")
+        with inject(FaultPlan({"service.setup": Fault(mode="raise",
+                                                      at_calls=(0,))})):
+            t1 = svc.submit(p, mean_free(1, p.n))
+            svc.flush()
+        st = svc.stats()
+        assert st["setup_retries"] == 1 and st["solve_retries"] == 0
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=(0,))})):
+            t2 = svc.submit(p, mean_free(2, p.n))
+            svc.flush()
+        st = svc.stats()
+        assert st["setup_retries"] == 1 and st["solve_retries"] == 1
+        assert st["retries"] == 2            # legacy aggregate preserved
+        assert t1.result()[1].converged and t2.result()[1].converged
+
+    def test_group_failure_then_retry_success_leaves_no_error(self):
+        """A failed group attempt followed by successful per-ticket
+        retries must leave every ticket served with ``error is None``."""
+        p = problem()
+        svc = SolverService(OPTS, backend="single")
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=(0,))})):
+            t1 = svc.submit(p, mean_free(3, p.n))
+            t2 = svc.submit(p, mean_free(4, p.n))
+            svc.flush()
+        assert t1.status == "done" and t1.error is None
+        assert t2.status == "done" and t2.error is None
+        assert t1.result()[1].converged and t2.result()[1].converged
+        st = svc.stats()
+        assert st["solve_retries"] == 2 and st["failures"] == 1
+
+    def test_setup_retry_success_clears_sibling_stale_errors(self):
+        """A failed chunk attempt marks every ticket of the hierarchy;
+        when the per-ticket retry then builds it, those marks are stale
+        and must clear so the solve pass still serves the tickets."""
+        p = problem()
+        svc = SolverService(OPTS, backend="single")
+        t1 = svc.submit(p, mean_free(5, p.n))
+        t2 = svc.submit(p, mean_free(6, p.n))
+        stale = RuntimeError("chunk attempt failed")
+        t1.error = t2.error = stale          # as a failed attempt would
+        svc._retry_setups([t1], {t1._key: [t1, t2]}, lambda: False)
+        assert t1.error is None and t2.error is None
+        assert svc.stats()["setup_retries"] == 1
+        svc.flush()
+        assert t1.result()[1].converged and t2.result()[1].converged
+
+
+class TestServiceTriage:
+    """Satellite: admission triage through the service — reports land on
+    tickets, hopeless problems bypass the hierarchy rungs entirely."""
+
+    def test_clean_problem_keeps_multigrid(self):
+        p = problem()
+        svc = SolverService(SolverOptions(coarsest_size=64, triage=True),
+                            backend="single")
+        t = svc.submit(p, mean_free(5, p.n))
+        svc.flush()
+        assert t.triage is not None and t.triage.rung == "multigrid"
+        _, res = t.result()
+        assert res.converged
+        assert res.diagnostics[0]["stage"] == "triage"
+        assert svc.stats()["triage_routed"] == 0
+        assert svc.stats()["setups_looped"] + svc.stats()["setups_batched"] == 1
+
+    def test_hopeless_problem_bypasses_setup(self):
+        n, r, c, v = ensure_connected(*grid_2d(12, 12))
+        r, c = np.asarray(r), np.asarray(c)
+        # pair-symmetric 1e16 scaling: weight range far past float32
+        v = np.where(np.minimum(r, c) % 2 == 0, np.asarray(v) * 1e16,
+                     np.asarray(v, np.float64))
+        p = Problem.from_edges(n, r, c, v)
+        svc = SolverService(SolverOptions(coarsest_size=64, triage=True),
+                            backend="single")
+        t = svc.submit(p, mean_free(6, n))
+        svc.flush()
+        assert t.triage.rung in ("diag_pcg", "dense")
+        _, res = t.result()
+        assert [d["stage"] for d in res.diagnostics][0] == "triage"
+        assert res.status != "failed" and "breakdown" not in res.status
+        st = svc.stats()
+        assert st["triage_routed"] == 1
+        assert st["setups_looped"] == 0 and st["setups_batched"] == 0
+
+    def test_triage_report_shape(self):
+        p = problem()
+        rep = triage_problem(p, SolverOptions())
+        assert rep.rung == "multigrid" and rep.guard is None
+        for key in ("weight_range", "degree_ratio", "n_components",
+                    "lam_max", "lam_small", "cond_hat"):
+            assert key in rep.score
+        assert rep.score["n_components"] == 1
+        d = rep.as_diagnostics()
+        assert d["stage"] == "triage" and d["rung"] == "multigrid"
+        # score is memoized on the Problem: same dict object on re-triage
+        assert triage_problem(p, SolverOptions()).score is rep.score
+
+
+KILL_DRIVER = textwrap.dedent("""
+    import os, json
+    import numpy as np
+    from repro.api import Problem, SolverOptions
+    from repro.graphs.generators import barabasi_albert, ensure_connected
+    from repro.service import SolverService
+    from repro.testing import Fault, FaultPlan, inject
+
+    phase = "%(phase)s"
+    ckpt = %(ckpt)r
+
+    def problem(seed):
+        return Problem.from_edges(*ensure_connected(
+            *barabasi_albert(300, m=3, seed=seed, weighted=True)))
+
+    probs = [problem(s) for s in range(3)]
+    rhss = []
+    for i, p in enumerate(probs):
+        b = np.random.default_rng(10 + i).normal(size=p.n)
+        rhss.append((b - b.mean()).astype(np.float32))
+
+    opts = SolverOptions(coarsest_size=64, checkpoint_every=1)
+    svc = SolverService(opts, backend="single", checkpoint_dir=ckpt)
+    tickets = [svc.submit(p, b) for p, b in zip(probs, rhss)]
+    if phase == "kill":
+        # hard-exit (os._exit) inside the third solve group: groups 1-2
+        # are checkpointed, group 3 never completes
+        plan = FaultPlan({"service.solve": Fault(mode="kill",
+                                                 at_calls=(2,))})
+        with inject(plan):
+            svc.flush()
+        raise SystemExit("kill fault did not fire")
+    if phase == "resume":
+        svc.resume()
+        svc.flush()
+    else:
+        svc.flush()
+    out = dict(resumed=svc.stats()["resumed"],
+               xs={str(i): np.asarray(t.result()[0]).tolist()
+                   for i, t in enumerate(tickets)},
+               statuses=[t.status for t in tickets])
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def _run_kill_driver(phase, ckpt):
+    src = KILL_DRIVER % dict(phase=phase, ckpt=ckpt)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run([sys.executable, "-c", src], capture_output=True,
+                          text=True, env=env, timeout=1200)
+
+
+class TestKillAndResume:
+    """The restart contract under a real process kill: ``mode="kill"``
+    hard-exits mid-flush, a fresh process resumes from the snapshot, and
+    the combined results bit-match an uninterrupted run."""
+
+    def test_kill_mid_flush_then_resume_bitwise(self, tmp_path):
+        ckpt = str(tmp_path / "ckpt")
+        # uninterrupted reference (separate checkpoint dir)
+        ref = _run_kill_driver("clean", str(tmp_path / "ref"))
+        assert ref.returncode == 0, ref.stderr[-4000:]
+        ref_out = json.loads(
+            [l for l in ref.stdout.splitlines()
+             if l.startswith("RESULT ")][-1][len("RESULT "):])
+
+        killed = _run_kill_driver("kill", ckpt)
+        assert killed.returncode == KILL_EXIT_CODE, (
+            f"expected hard-exit {KILL_EXIT_CODE}, got "
+            f"{killed.returncode}: {killed.stderr[-4000:]}")
+        assert latest_step(ckpt) is not None  # progress survived the kill
+
+        resumed = _run_kill_driver("resume", ckpt)
+        assert resumed.returncode == 0, resumed.stderr[-4000:]
+        out = json.loads(
+            [l for l in resumed.stdout.splitlines()
+             if l.startswith("RESULT ")][-1][len("RESULT "):])
+        assert out["resumed"] == 2            # two groups finished pre-kill
+        assert out["statuses"] == ["done"] * 3
+        for i in range(3):
+            assert out["xs"][str(i)] == ref_out["xs"][str(i)]
