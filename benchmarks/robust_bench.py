@@ -37,6 +37,18 @@ PR 9 adds three additive sections (schema unchanged):
   guards; hopeless routes past multigrid setup with no breakdown
   stage). Contract: hit rate == 1.0.
 
+PR 10 adds one more additive section (schema unchanged):
+
+* **abft** — the self-verification layer: warm verified-vs-unverified
+  wall time (``verify="cheap"`` against ``"off"``; the checks only
+  observe, so the contract is < 5% overhead and a bitwise-identical
+  clean-path iterate), an SDC detection battery over the silent fault
+  sites (corruptions every PR 8/9 guard misses — finite, plausible,
+  converging numbers that are simply WRONG) with contract detection
+  rate == 1.0, and a certificate soundness/completeness sweep against
+  an in-bench independent float64 residual. Contract: no corrupted
+  claimed-converged answer certifies, every clean solve does.
+
 Running this module directly — or via ``benchmarks/run.py --only
 robust`` — writes the stable-schema ``BENCH_robust.json`` at the repo
 root. ``--smoke`` shrinks sizes for CI.
@@ -56,6 +68,7 @@ ROOT_JSON = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_robust.json")
 
 GUARD_OVERHEAD_TARGET = 0.02
+ABFT_OVERHEAD_TARGET = 0.05
 
 
 def _problem(side: int, seed: int = 0):
@@ -279,6 +292,148 @@ def _dist_section(problem, k: int, repeats: int) -> dict:
             success_rate=float(np.mean([r["recovered"] for r in rows]))))
 
 
+# (backend, site, mode, at_calls, fraction, label) — silent-data-
+# corruption battery: every scenario yields finite, plausible numbers
+# that sail past the PR 8/9 nonfinite/indefinite/stagnation guards;
+# only the checksum or the certificate can call them out.
+SDC_SCENARIOS = (
+    ("single", "solve.spmv", "bitflip", (1,), 0.05,
+     "SpMV exponent bitflip (x2^±64)"),
+    ("single", "solve.spmv", "perturb", (1,), 0.2,
+     "SpMV value perturbation (x1±0.5)"),
+    ("single", "sdc.edge_weights", "perturb", None, 0.3,
+     "persistent edge-weight drift"),
+    ("single", "sdc.edge_weights", "zero", None, 0.3,
+     "persistent edge-weight dropout"),
+    ("single", "sdc.edge_weights", "bitflip", None, 0.05,
+     "persistent edge-weight bitflip"),
+    ("dist", "dist.spmv", "perturb", (0,), 0.3,
+     "dist SpMV value perturbation"),
+    ("dist", "dist.psum", "perturb", None, 0.3,
+     "dist partial-sum perturbation"),
+    ("dist", "sdc.shard_payload", "perturb", None, 0.5,
+     "poisoned shard payload"),
+)
+
+
+def _true_rel_residual(problem, B, X) -> float:
+    """Independent float64 residual — deliberately NOT the solver's or
+    the certificate's code path, so the sweep cross-checks both."""
+    r = np.asarray(problem.rows)
+    vals = np.asarray(problem.vals, np.float64)
+    deg = np.zeros(problem.n, np.float64)
+    np.add.at(deg, r, vals)
+    B64 = np.asarray(B, np.float64).reshape(problem.n, -1)
+    X64 = np.asarray(X, np.float64).reshape(problem.n, -1)
+    LX = deg[:, None] * X64
+    np.subtract.at(LX, r, vals[:, None] * X64[np.asarray(problem.cols)])
+    num = np.linalg.norm(LX - B64, axis=0)
+    den = np.linalg.norm(B64, axis=0)
+    return float(np.max(num / np.maximum(den, 1e-30)))
+
+
+def _abft_section(side: int, k: int, repeats: int) -> dict:
+    """Verification overhead (warm, bitwise-checked), SDC detection
+    rate, and certificate soundness/completeness."""
+    import jax
+
+    from repro.api import Problem, SolverOptions, setup
+    from repro.core.verify import certify
+    from repro.graphs.generators import barabasi_albert, ensure_connected
+    from repro.testing import Fault, FaultPlan, inject
+
+    # --- warm overhead: verify="cheap" vs "off" on a clean grid -------
+    p = _problem(side, seed=6)
+    B = _rhs(p.n, k, seed=7)
+    solvers = {}
+    for on in (True, False):
+        opts = SolverOptions(coarsest_size=64, max_iters=300,
+                             verify="cheap" if on else "off")
+        solvers[on] = setup(p, opts, backend="single", cache=False)
+        solvers[on].solve(B)                      # compile + warm
+    on_s, off_s, X_on, X_off, total = _min_pooled_overhead(
+        solvers, B, repeats, target=ABFT_OVERHEAD_TARGET)
+    overhead = dict(
+        n=p.n, k=k, repeats=total,
+        verified_seconds=on_s, unverified_seconds=off_s,
+        overhead_fraction=on_s / off_s - 1.0,
+        bitwise_identical=bool(
+            np.array_equal(np.asarray(X_on), np.asarray(X_off))),
+    )
+
+    # --- SDC detection battery (power-law BA, the fault tests' graph) -
+    pb = Problem.from_edges(*ensure_connected(
+        *barabasi_albert(300, m=3, seed=0, weighted=True)))
+    Bb = _rhs(pb.n, 2, seed=8)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rows = []
+    for i, (backend, site, mode, at_calls, fraction,
+            label) in enumerate(SDC_SCENARIOS):
+        opts = SolverOptions(coarsest_size=64, max_iters=300,
+                             verify="cheap", fallback=False,
+                             **({"dist_nnz_threshold": 1}
+                                if backend == "dist" else {}))
+        solver = setup(pb, opts, backend=backend,
+                       mesh=mesh if backend == "dist" else None,
+                       cache=False)
+        plan = FaultPlan({site: Fault(mode=mode, at_calls=at_calls,
+                                      fraction=fraction)}, seed=300 + i)
+        with inject(plan):
+            X_s, res = solver.solve(Bb)
+        cert_failed = (res.certificate is not None
+                       and not res.certificate.passed)
+        detected = bool(plan.fired
+                        and ("sdc" in res.status or res.status == "failed"
+                             or cert_failed))
+        rows.append(dict(
+            backend=backend, site=site, mode=mode,
+            at_calls=None if at_calls is None else list(at_calls),
+            fraction=fraction, label=label, fired=len(plan.fired),
+            status=res.status, certificate_failed=cert_failed,
+            detected=detected))
+    detection_rate = float(np.mean([r["detected"] for r in rows]))
+
+    # --- certificate soundness: corrupted claimed-converged answers ---
+    clean = setup(pb, SolverOptions(coarsest_size=64, max_iters=300),
+                  backend="single", cache=False)
+    X_ref, res_ref = clean.solve(Bb)
+    assert res_ref.status == "converged"
+    X_ref = np.asarray(X_ref, np.float64)
+    tol = 1e-8
+    rng = np.random.default_rng(9)
+    noise = rng.normal(size=X_ref.shape)
+    noise -= noise.mean(axis=0)
+    sound, sound_rows = True, []
+    for scale in (1e-2, 1e-1, 1.0, 1e1, 1e3):
+        X_bad = X_ref + scale * noise
+        cert = certify(pb, Bb, X_bad, tol,
+                       claimed=np.ones(Bb.shape[1], bool))
+        true_rel = _true_rel_residual(pb, Bb, X_bad)
+        ok = (cert.passed == (true_rel <= cert.threshold))
+        sound = sound and ok
+        sound_rows.append(dict(noise_scale=scale, true_rel=true_rel,
+                               passed=bool(cert.passed), consistent=ok))
+
+    # --- completeness: clean certified solves, both modes -------------
+    complete = True
+    for mode in ("cheap", "paranoid"):
+        s = setup(pb, SolverOptions(coarsest_size=64, max_iters=300,
+                                    verify=mode),
+                  backend="single", cache=False)
+        X_c, res_c = s.solve(Bb)
+        good = (res_c.status == "converged" and res_c.certificate.passed
+                and _true_rel_residual(pb, Bb, X_c)
+                <= res_c.certificate.threshold)
+        complete = complete and bool(good)
+
+    return dict(
+        overhead=overhead,
+        detection=dict(n=pb.n, k=2, graph="barabasi_albert(m=3)",
+                       scenarios=rows, detection_rate=detection_rate),
+        certificate=dict(soundness=sound_rows, sound=bool(sound),
+                         complete=bool(complete)))
+
+
 def _checkpoint_section(side: int) -> dict:
     """Flush checkpoint/restart round trip: snapshot at group
     boundaries, resume a fresh service from a mid-flush step, bit-match
@@ -389,6 +544,7 @@ def bench_robust(scale: float = 0.12, smoke: bool = False) -> dict:
     dist = _dist_section(p, k, repeats)
     checkpoint = _checkpoint_section(side)
     triage = _triage_section(side)
+    abft = _abft_section(side, k, repeats)
     return dict(
         schema=SCHEMA,
         smoke=smoke,
@@ -397,6 +553,7 @@ def bench_robust(scale: float = 0.12, smoke: bool = False) -> dict:
         dist=dist,
         checkpoint=checkpoint,
         triage=triage,
+        abft=abft,
         contracts=dict(
             guard_overhead_target=GUARD_OVERHEAD_TARGET,
             guard_overhead_met=bool(
@@ -412,6 +569,15 @@ def bench_robust(scale: float = 0.12, smoke: bool = False) -> dict:
                 dist["recovery"]["success_rate"] == 1.0),
             resume_bitwise=checkpoint["resume_bitwise_identical"],
             triage_hit_rate_met=bool(triage["hit_rate"] == 1.0),
+            abft_overhead_target=ABFT_OVERHEAD_TARGET,
+            abft_overhead_met=bool(
+                abft["overhead"]["overhead_fraction"]
+                < ABFT_OVERHEAD_TARGET),
+            abft_clean_bitwise=abft["overhead"]["bitwise_identical"],
+            abft_detection_met=bool(
+                abft["detection"]["detection_rate"] == 1.0),
+            abft_certificate_sound=abft["certificate"]["sound"],
+            abft_certificate_complete=abft["certificate"]["complete"],
         ),
     )
 
@@ -468,6 +634,22 @@ def main(argv=None) -> None:
               f"status={row['status']:>9s} hit={row['hit']}")
     print(f"triage: hit rate={t['hit_rate']:.2f} "
           f"(target 1.0: {out['contracts']['triage_hit_rate_met']})")
+    a = out["abft"]
+    ao = a["overhead"]
+    print(f"abft overhead (n={ao['n']}, k={ao['k']}, warm): "
+          f"{ao['overhead_fraction']*100:+.2f}% "
+          f"(target <{ABFT_OVERHEAD_TARGET:.0%}: "
+          f"{out['contracts']['abft_overhead_met']}, "
+          f"bitwise={ao['bitwise_identical']})")
+    for s in a["detection"]["scenarios"]:
+        print(f"  {s['label']:>34s}: {s['status']:>15s} "
+              f"[{s['backend']}] cert_failed={s['certificate_failed']} "
+              f"detected={s['detected']}")
+    print(f"abft detection: rate="
+          f"{a['detection']['detection_rate']:.2f} "
+          f"(target 1.0: {out['contracts']['abft_detection_met']}); "
+          f"certificate sound={a['certificate']['sound']} "
+          f"complete={a['certificate']['complete']}")
     print("wrote", write_root_json(out))
 
 

@@ -25,8 +25,10 @@ from repro.api.registry import (available_backends, get_backend,
                                 register_backend, resolve_backend)
 from repro.api.result import SolveResult
 from repro.api.triage import TriageReport, triage_problem
+from repro.core.verify import Certificate
 
 __all__ = [
+    "Certificate",
     "HierarchyCache",
     "Problem",
     "ProblemValidationError",

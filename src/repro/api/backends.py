@@ -48,6 +48,17 @@ class _EagerHandle:
         self._options = options
         self.work_per_iteration = solver.iteration_work(
             precondition=options.precondition)
+        # PR 10: the ABFT checksum closure is built ONCE per handle from
+        # the clean setup-time operator (deg, and — paranoid — a clean
+        # u = Lw witness product), so later operator corruption cannot
+        # poison the reference the checks compare against.
+        vcfg = options.verify_config()
+        self._check = None
+        if vcfg is not None:
+            from repro.core.verify import make_check
+
+            self._check = make_check(solver._fine.deg, vcfg,
+                                     matvec=solver.matvec)
 
     def solve_block(self, B, tol: float, max_iters: int, x0=None,
                     guard=None):
@@ -59,7 +70,7 @@ class _EagerHandle:
             B, tol=tol, maxiter=max_iters,
             precondition=self._options.precondition,
             exact_columns=self._options.exact_columns, x0=x0,
-            guard=g or False)
+            guard=g or False, check=self._check)
         return (np.asarray(X), info.residual_norms,
                 np.asarray(info.iters, np.int64), info.status)
 
@@ -74,6 +85,26 @@ class _DistHandle:
         self._solver = solver
         self._options = options
         self.work_per_iteration = solver.work_per_iteration
+        # PR 10: checksum closure over the PADDED iteration space (the
+        # scanned PCG's P/Ap blocks are [n_pad, k]); padded rows carry
+        # deg=0 and the padded operator is symmetric, so both the
+        # column-sum identity and the Rademacher witness hold unchanged.
+        vcfg = options.verify_config()
+        self._check = None
+        if vcfg is not None:
+            import jax.numpy as jnp
+
+            from repro.core.verify import make_check
+            from repro.dist.solver import DistGraphLevel
+
+            fine = solver.arrays.fine
+            if isinstance(fine, DistGraphLevel):
+                deg = jnp.pad(fine.deg, (0, solver.n_pad - solver.n))
+                mv = fine.matvec_padded
+            else:                       # replicated fallback: n_pad == n
+                deg = fine.deg
+                mv = fine.laplacian_matvec
+            self._check = make_check(deg, vcfg, matvec=mv)
 
     def solve_block(self, B, tol: float, max_iters: int, x0=None,
                     guard=None):
@@ -83,7 +114,14 @@ class _DistHandle:
                 "initial guesses yet; use backend='single' or 'serial_ref' "
                 "for x0 warm starts")
         g = self._options.guard_config() if guard is None else (guard or None)
-        if g is not None and self._options.guard_mode == "in_scan":
+        check = self._check
+        if check is not None and g is None:
+            # the SDC verdict needs the in-scan code lane to land in
+            from repro.core.krylov import GuardConfig
+
+            g = GuardConfig()
+        if g is not None and (self._options.guard_mode == "in_scan"
+                              or check is not None):
             # PR 9: the guards run INSIDE the scanned program as status
             # lanes — statuses are live device truth (an indefinite p·Ap
             # freezes the column before the poisoned update, which a
@@ -92,18 +130,29 @@ class _DistHandle:
             from repro.core.krylov import scan_status_from_codes
 
             X, norms, iters, codes = self._solver.solve_block(
-                B, n_iters=max_iters, tol=tol, guard=g)
+                B, n_iters=max_iters, tol=tol, guard=g, check=check)
             norms = np.asarray(norms)
             statuses = scan_status_from_codes(codes, norms, tol, norms[0])
-        else:
-            # guards off, or guard_mode="postmortem": the pre-PR 9
-            # unguarded program plus host-side reconstruction.
+        elif g is not None:
+            # guard_mode="postmortem": the pre-PR 9 unguarded program plus
+            # the (deprecated) host-side norms reconstruction — callers who
+            # opted into postmortem mode see its DeprecationWarning.
             from repro.core.krylov import scan_norms_status
 
             X, norms, iters = self._solver.solve_block(B, n_iters=max_iters,
                                                        tol=tol)
             norms = np.asarray(norms)
             statuses = scan_norms_status(norms, tol, norms[0])
+        else:
+            # guards off: converged/max_iters/non-finite derived from the
+            # fetched norms is the *intended* semantics here, not a
+            # postmortem cross-check — use the silent internal helper.
+            from repro.core.krylov import _norms_status
+
+            X, norms, iters = self._solver.solve_block(B, n_iters=max_iters,
+                                                       tol=tol)
+            norms = np.asarray(norms)
+            statuses = _norms_status(norms, tol, norms[0])
         return (np.asarray(X), norms, np.asarray(iters, np.int64), statuses)
 
     def stats(self) -> dict:

@@ -158,7 +158,6 @@ class Solver:
                 X, norms, iters, statuses, wpi, status = self._degrade(
                     B, tol, max_iters, x0, X, norms, iters, statuses,
                     diagnostics)
-        solve_seconds = time.perf_counter() - t0
         if x0 is None:
             ref_norms = None
         else:
@@ -167,11 +166,68 @@ class Solver:
             Bc = np.asarray(B, np.float64)
             ref_norms = np.linalg.norm(Bc - Bc.mean(axis=0, keepdims=True),
                                        axis=0)
+        # PR 10: independent residual certification. The certificate is a
+        # host float64 projected-residual check straight off the problem's
+        # edge list — none of the device arrays the solve used are trusted.
+        # A failed certificate marks the offending columns
+        # "sdc_certificate" and (with fallback on) gets ONE ladder pass +
+        # re-certification; a solve that still fails its certificate is
+        # reported "failed", never silently returned.
+        certificate = None
+        if self.options.verify != "off":
+            certificate = self._certify(B, X, tol, norms, ref_norms)
+            if not certificate.passed:
+                statuses = self._mark_cert_failure(statuses, certificate)
+                if self.options.fallback and status != STATUS_FAILED:
+                    X, norms, iters, statuses, wpi, status = self._degrade(
+                        B, tol, max_iters, x0, X, norms, iters, statuses,
+                        diagnostics)
+                    certificate = self._certify(B, X, tol, norms, ref_norms)
+                    if not certificate.passed:
+                        statuses = self._mark_cert_failure(statuses,
+                                                           certificate)
+                        status = STATUS_FAILED
+        solve_seconds = time.perf_counter() - t0
         result = result_from_history(
             self.backend, norms, iters, tol, wpi, self.setup_seconds,
             solve_seconds, ref_norms=ref_norms, statuses=statuses,
-            diagnostics=tuple(diagnostics), status=status)
+            diagnostics=tuple(diagnostics), status=status,
+            certificate=certificate)
         return (X[:, 0] if single else X), result
+
+    # ------------------------------------------------------------------
+    def _certify(self, B, X, tol, norms, ref_norms):
+        """Independent float64 certificate for the solve's claim, judged
+        only on the columns that *claimed* convergence (an honest
+        ``max_iters`` outcome is not silent corruption)."""
+        from repro.core.verify import certify
+
+        norms_a = np.asarray(norms, np.float64)
+        if norms_a.ndim == 1:
+            norms_a = norms_a[:, None]
+        ref = (norms_a[0] if ref_norms is None
+               else np.asarray(ref_norms, np.float64))
+        with np.errstate(invalid="ignore"):
+            claimed = norms_a[-1] <= tol * ref
+        return certify(self.problem, B, X, tol, claimed=claimed)
+
+    @staticmethod
+    def _mark_cert_failure(statuses, certificate):
+        """Per-column statuses with certificate-failing columns marked
+        ``"sdc_certificate"`` (building the array from the certificate's
+        claim mask when the backend reported none)."""
+        from repro.core.krylov import (STATUS_CONVERGED, STATUS_MAX_ITERS,
+                                       STATUS_SDC_CERT)
+
+        if statuses is None:
+            claimed = np.asarray(certificate.claimed, bool)
+            sts = np.where(claimed, STATUS_CONVERGED,
+                           STATUS_MAX_ITERS).astype("<U24")
+        else:
+            sts = np.asarray(statuses, dtype="<U24").copy()
+        failed = np.asarray(certificate.failed_columns(), np.int64)
+        sts[failed] = STATUS_SDC_CERT
+        return sts
 
     # ------------------------------------------------------------------
     def _triage_route(self, rung, B, tol, max_iters, x0, diagnostics):

@@ -99,6 +99,22 @@ class SolverOptions:
       solve. Every rung is recorded in ``SolveResult.diagnostics``.
     * ``dense_fallback_max`` — largest ``n`` eligible for the dense
       last-resort solve (an O(n³) factorization).
+    * ``verify`` (PR 10) — the self-verification layer. ``"off"``
+      (default): no checks, hot path bitwise-unchanged. ``"cheap"``: ABFT
+      checksums ride the PCG iteration — every hot-path SpMV output is
+      tested against the Laplacian zero-column-sum identity
+      (``|1ᵀ(Ap)| <= rtol · Σ deg|p|``, a few O(nk) reductions fused into
+      the existing device fetch), and every returned
+      ``SolveResult.certificate`` records an *independent* host float64
+      projected-residual check ``‖proj(b − Lx)‖/‖proj b‖``. A checksum
+      mismatch freezes the column with status ``"sdc_spmv"``; a failed
+      certificate marks it ``"sdc_certificate"`` — both feed the
+      degradation ladder like any breakdown. ``"paranoid"`` adds a second
+      checksum (a precomputed Rademacher witness ``u = Lw``, catching
+      corruption invisible to column sums). Checks only observe: clean
+      solves are bitwise-identical across all three settings. On the dist
+      backend verification implies the in-scan status-lane program (the
+      checksum verdict needs a code lane to land in).
     * ``triage`` (PR 9) — admission-time conditioning triage: a cheap
       host-side sanity score (degree extremes, weight dynamic range,
       component count, a few Lanczos λ-estimates) picks the *starting*
@@ -156,6 +172,8 @@ class SolverOptions:
     dense_fallback_max: int = 4096
     triage: bool = False
     checkpoint_every: int = 0
+    # self-verification: ABFT checksums + residual certificates (PR 10)
+    verify: str = "off"
     # distributed
     dist_nnz_threshold: int = 10_000
     max_dist_levels: int = 3
@@ -187,6 +205,9 @@ class SolverOptions:
         if self.checkpoint_every < 0:
             raise ValueError(f"checkpoint_every must be >= 0, got "
                              f"{self.checkpoint_every}")
+        if self.verify not in ("off", "cheap", "paranoid"):
+            raise ValueError(f"verify must be 'off', 'cheap' or 'paranoid', "
+                             f"got {self.verify!r}")
 
     def guard_config(self):
         """The Krylov-layer guard policy this maps to (None = guards off)."""
@@ -195,6 +216,14 @@ class SolverOptions:
         if not self.guard:
             return None
         return GuardConfig(stagnation_window=self.stagnation_window)
+
+    def verify_config(self):
+        """The checksum policy this maps to (None = verification off)."""
+        from repro.core.verify import VerifyConfig
+
+        if self.verify == "off":
+            return None
+        return VerifyConfig(mode=self.verify, seed=self.seed)
 
     def setup_config(self) -> SetupConfig:
         """The core-layer setup configuration this maps to."""

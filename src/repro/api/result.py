@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.krylov import (BREAKDOWN_STATUSES, STATUS_CONVERGED,
                                STATUS_MAX_ITERS)
+from repro.core.verify import Certificate
 from repro.core.wda import wda as _wda
 
 # Overall-outcome codes beyond the Krylov layer's own:
@@ -31,10 +32,12 @@ STATUS_FAILED = "failed"       # breakdown and every rung exhausted
 def worst_status(statuses) -> str:
     """Collapse per-column status codes to the block's overall code.
 
-    Severity order: non-finite > indefinite > stagnation > max_iters >
-    converged — a block is only "converged" when every column is.
+    Severity order: sdc (detected silent corruption is the worst possible
+    news) > non-finite > indefinite > stagnation > max_iters > converged —
+    a block is only "converged" when every column is.
     """
-    order = ("breakdown_nonfinite", "breakdown_indefinite", "stagnation",
+    order = ("sdc_spmv", "sdc_certificate",
+             "breakdown_nonfinite", "breakdown_indefinite", "stagnation",
              STATUS_MAX_ITERS, STATUS_CONVERGED)
     seen = set(str(s) for s in np.asarray(statuses).ravel())
     for code in order:
@@ -74,7 +77,10 @@ class SolveResult:
       when the backend doesn't report them (third-party handles),
     * ``diagnostics`` — tuple of dicts, one per degradation-ladder rung
       that ran (empty for a clean solve); each records the ``stage``, its
-      per-column ``statuses`` and whether it ``recovered``.
+      per-column ``statuses`` and whether it ``recovered``,
+    * ``certificate`` — with ``SolverOptions(verify=...)`` on, the
+      independent float64 projected-residual certificate
+      (``repro.core.verify.Certificate``); ``None`` with ``verify="off"``.
     """
 
     backend: str
@@ -90,6 +96,7 @@ class SolveResult:
     status: str = STATUS_CONVERGED
     statuses: np.ndarray | None = None
     diagnostics: tuple = ()
+    certificate: Certificate | None = None
 
 
 def result_from_history(backend: str, norms: np.ndarray,
@@ -98,7 +105,9 @@ def result_from_history(backend: str, norms: np.ndarray,
                         solve_seconds: float,
                         ref_norms: np.ndarray | None = None,
                         statuses=None, diagnostics: tuple = (),
-                        status: str | None = None) -> SolveResult:
+                        status: str | None = None,
+                        certificate: Certificate | None = None
+                        ) -> SolveResult:
     """Assemble a ``SolveResult`` from a (T+1, k) residual history.
 
     Trims the history at the slowest column's convergence point (frozen
@@ -138,4 +147,5 @@ def result_from_history(backend: str, norms: np.ndarray,
         work_per_iteration=float(work_per_iteration),
         setup_seconds=float(setup_seconds),
         solve_seconds=float(solve_seconds), n_rhs=norms.shape[1],
-        status=status, statuses=statuses, diagnostics=tuple(diagnostics))
+        status=status, statuses=statuses, diagnostics=tuple(diagnostics),
+        certificate=certificate)

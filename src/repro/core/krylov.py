@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable
 
 import jax
@@ -57,9 +58,20 @@ STATUS_MAX_ITERS = "max_iters"
 STATUS_NONFINITE = "breakdown_nonfinite"
 STATUS_INDEFINITE = "breakdown_indefinite"
 STATUS_STAGNATION = "stagnation"
+# Silent-data-corruption codes (PR 10): "sdc_spmv" = the in-flight ABFT
+# checksum (SolverOptions verify="cheap"/"paranoid") caught a hot-path
+# SpMV whose output violates the Laplacian column-sum identity;
+# "sdc_certificate" = the solve *claimed* convergence but the independent
+# float64 residual certificate refused to certify it. Both are breakdowns:
+# the degradation ladder treats a detected-corrupt column exactly like an
+# indefinite one (frozen at the last trusted iterate, re-solved on the
+# next rung).
+STATUS_SDC = "sdc_spmv"
+STATUS_SDC_CERT = "sdc_certificate"
 
 BREAKDOWN_STATUSES = frozenset(
-    {STATUS_NONFINITE, STATUS_INDEFINITE, STATUS_STAGNATION})
+    {STATUS_NONFINITE, STATUS_INDEFINITE, STATUS_STAGNATION,
+     STATUS_SDC, STATUS_SDC_CERT})
 
 # Device-side status codes for the scanned/dist solve path (PR 9): the
 # in-scan guards carry one int32 per column through the scan instead of
@@ -71,11 +83,13 @@ SCAN_OK = 0
 SCAN_NONFINITE = 2
 SCAN_INDEFINITE = 3
 SCAN_STAGNATION = 4
+SCAN_SDC = 5
 
 _SCAN_CODE_STATUS = {
     SCAN_NONFINITE: STATUS_NONFINITE,
     SCAN_INDEFINITE: STATUS_INDEFINITE,
     SCAN_STAGNATION: STATUS_STAGNATION,
+    SCAN_SDC: STATUS_SDC,
 }
 
 
@@ -131,13 +145,17 @@ def _project(v):
 
 def pcg(matvec: Callable, b: jax.Array, precond: Callable | None = None,
         x0: jax.Array | None = None, tol: float = 1e-8, maxiter: int = 500,
-        project: Callable | None = None, guard=True):
+        project: Callable | None = None, guard=True, check=None):
     """Eager PCG with residual history. Returns (x, SolveInfo).
 
     ``project`` overrides the nullspace projection (default: global mean
     subtraction — connected graphs). ``guard`` enables the breakdown
     guards (bool or a :class:`GuardConfig`); they only observe, so clean
-    solves are bitwise-identical with guards on or off.
+    solves are bitwise-identical with guards on or off. ``check`` is an
+    optional ABFT checksum ``check(p, Ap) -> bool`` (see
+    ``repro.core.verify.make_check``): a mismatch freezes the solve at the
+    last trusted iterate with status ``"sdc_spmv"``. The check is fetched
+    fused with ``p·Ap``, and like the guards it only observes.
     """
     proj = _project if project is None else project
     g = _as_guard(guard)
@@ -158,7 +176,17 @@ def pcg(matvec: Callable, b: jax.Array, precond: Callable | None = None,
     for it in range(maxiter):
         Ap = faults.site("solve.spmv", matvec(p))
         pAp = jnp.vdot(p, Ap)
-        if g is not None:
+        if check is not None:
+            pApf, bad = jax.device_get((pAp, check(p, Ap)))
+            if bool(bad):
+                # checksum mismatch: this Ap can't be trusted, freeze x at
+                # the last trusted iterate before the poisoned update
+                return x, SolveInfo(it, hist, False, STATUS_SDC)
+            if g is not None:
+                pApf = float(pApf)
+                if not math.isfinite(pApf) or pApf <= 0.0:
+                    return x, SolveInfo(it, hist, False, STATUS_INDEFINITE)
+        elif g is not None:
             pApf = float(pAp)
             if not math.isfinite(pApf) or pApf <= 0.0:
                 # stop BEFORE applying the poisoned step: x is the last
@@ -192,7 +220,7 @@ def pcg(matvec: Callable, b: jax.Array, precond: Callable | None = None,
 def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
               tol: float = 1e-8, maxiter: int = 500,
               exact_columns: bool = True, x0: jax.Array | None = None,
-              project: Callable | None = None, guard=True):
+              project: Callable | None = None, guard=True, check=None):
     """Blocked multi-RHS PCG: k single-RHS trajectories advanced in lockstep.
 
     ``B`` is ``(n, k)`` — one graph, many right-hand sides (the serving
@@ -233,6 +261,13 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
 
     ``project`` overrides the per-column nullspace projection (a single-
     vector callable, lifted over columns the same way the operators are).
+
+    ``check`` is an optional per-column ABFT checksum
+    ``check(P, Ap) -> bool[k]`` (``repro.core.verify.make_check``): a
+    flagged column freezes at its last trusted iterate with status
+    ``"sdc_spmv"`` while healthy columns keep iterating, mirroring the
+    breakdown-guard freeze semantics. The check result rides the existing
+    per-iteration device fetch.
 
     Returns ``(X, BlockSolveInfo)`` with per-column iteration counts,
     converged flags, status codes, and the (T+1, k) residual history (rows
@@ -348,8 +383,21 @@ def pcg_block(matvec: Callable, B: jax.Array, precond: Callable | None = None,
             break
         Ap = faults.site("solve.spmv", bmv(P, active))
         pAp = cdot(P, Ap)
+        pApf = None
+        if check is not None:
+            # one fused fetch covers both the checksum verdict and (when
+            # guarded) the p·Ap read the indefinite guard needs anyway
+            pApf, sdc = jax.device_get((pAp, check(P, Ap)))
+            bad = active & np.asarray(sdc)
+            if bad.any():
+                # checksum mismatch: freeze the flagged columns at their
+                # last trusted iterate; healthy columns keep iterating
+                status[bad] = STATUS_SDC
+                active = active & ~bad
+                if not active.any():
+                    break
         if g is not None:
-            pApf = np.asarray(jax.device_get(pAp))
+            pApf = np.asarray(jax.device_get(pAp) if pApf is None else pApf)
             bad = active & (~np.isfinite(pApf) | (pApf <= 0.0))
             if bad.any():
                 # freeze the broken columns BEFORE the update: their x stays
@@ -525,12 +573,31 @@ def scan_status_from_codes(codes, norms, tol, ref) -> np.ndarray:
     return status
 
 
+def _norms_status(norms: np.ndarray, tol, ref: np.ndarray) -> np.ndarray:
+    """Status codes from a residual history alone (no deprecation gate).
+
+    The guards-off scanned path resolves converged/max_iters from this —
+    with guards disabled there is no code lane and a norms-only read is
+    the *intended* semantics, not the deprecated postmortem cross-check.
+    """
+    norms = np.asarray(norms, np.float64)
+    if norms.ndim == 1:
+        norms = norms[:, None]
+    k = norms.shape[1]
+    status = np.full(k, STATUS_MAX_ITERS, dtype="<U24")
+    finite = np.isfinite(norms).all(axis=0)
+    status[~finite] = STATUS_NONFINITE
+    status[finite & (norms[-1] <= np.asarray(tol) * ref)] = STATUS_CONVERGED
+    return status
+
+
 def scan_norms_status(norms: np.ndarray, tol, ref: np.ndarray) -> np.ndarray:
     """Per-column status codes from a (T+1, k) scanned residual history.
 
     .. deprecated:: PR 9
-        Debug helper only. The scanned/dist solve now carries breakdown
-        codes *inside* the scan (``pcg_scanned(guard=...)`` /
+        Debug helper only (emits :class:`DeprecationWarning` since PR 10).
+        The scanned/dist solve now carries breakdown codes *inside* the
+        scan (``pcg_scanned(guard=...)`` /
         ``DistLaplacianSolver.solve_block(guard=...)`` →
         :func:`scan_status_from_codes`), which detects strictly more than
         this postmortem can: an indefinite ``p·Ap`` is caught and frozen
@@ -545,15 +612,13 @@ def scan_norms_status(norms: np.ndarray, tol, ref: np.ndarray) -> np.ndarray:
     A column whose history contains a non-finite entry broke down,
     otherwise it converged iff its final norm is within ``tol * ref``.
     """
-    norms = np.asarray(norms, np.float64)
-    if norms.ndim == 1:
-        norms = norms[:, None]
-    k = norms.shape[1]
-    status = np.full(k, STATUS_MAX_ITERS, dtype="<U24")
-    finite = np.isfinite(norms).all(axis=0)
-    status[~finite] = STATUS_NONFINITE
-    status[finite & (norms[-1] <= np.asarray(tol) * ref)] = STATUS_CONVERGED
-    return status
+    warnings.warn(
+        "scan_norms_status is a deprecated postmortem cross-check: the "
+        "scanned/dist solve carries in-scan breakdown codes "
+        "(guard_mode='in_scan' -> scan_status_from_codes) which detect "
+        "strictly more; use those instead",
+        DeprecationWarning, stacklevel=2)
+    return _norms_status(norms, tol, ref)
 
 
 def cg(matvec, b, **kw):

@@ -32,6 +32,7 @@ from repro.core.krylov import (BlockSolveInfo, SolveInfo, pcg, pcg_block,
 from repro.core.wda import pcg_iteration_work, wda
 from repro.graphs.generators import random_relabel, to_laplacian_coo
 from repro.sparse.coo import COO
+from repro.testing import faults
 
 
 @dataclasses.dataclass
@@ -157,14 +158,35 @@ class LaplacianSolver:
     def precondition(self, r):
         return apply_cycle(self.hierarchy, r, self.cycle_config)
 
+    def _solve_matvec(self):
+        """The fine-level matvec the PCG loop will drive, past the
+        ``sdc.edge_weights`` fault site.
+
+        The site models *persistent operator corruption*: the stored edge
+        weights go bad while the degree vector stays stale-clean — PCG then
+        converges, consistently and finitely, to the wrong system's
+        solution. The corrupted level drops its ELL twins (COO execution)
+        and is rebuilt fresh per solve; with no plan armed this returns
+        ``self.matvec`` untouched.
+        """
+        fine = self._fine
+        val = faults.site("sdc.edge_weights", fine.adj.val)
+        if val is fine.adj.val:
+            return self.matvec
+        adj = dataclasses.replace(fine.adj, val=jnp.asarray(val,
+                                                           fine.adj.val.dtype))
+        bad = dataclasses.replace(fine, adj=adj, ell=None, ell_rem=None)
+        return bad.laplacian_matvec
+
     # ------------------------------------------------------------------
     def solve(self, b, tol: float = 1e-8, maxiter: int = 200,
-              precondition: bool = True,
-              guard=True) -> tuple[jax.Array, LaplacianSolveInfo]:
+              precondition: bool = True, guard=True,
+              check=None) -> tuple[jax.Array, LaplacianSolveInfo]:
         b_int = self._to_internal(jnp.asarray(b, jnp.float32))
         M = self.precondition if precondition else None
-        x, info = pcg(self.matvec, b_int, precond=M, tol=tol, maxiter=maxiter,
-                      project=self.projector, guard=guard)
+        x, info = pcg(self._solve_matvec(), b_int, precond=M, tol=tol,
+                      maxiter=maxiter, project=self.projector, guard=guard,
+                      check=check)
         w = self.iteration_work(precondition)
         out = LaplacianSolveInfo(
             iters=info.iters, residual_norms=info.residual_norms,
@@ -175,7 +197,8 @@ class LaplacianSolver:
     # ------------------------------------------------------------------
     def solve_block(self, B, tol: float = 1e-8, maxiter: int = 200,
                     precondition: bool = True, exact_columns: bool = True,
-                    x0=None, guard=True) -> tuple[jax.Array, BlockSolveInfo]:
+                    x0=None, guard=True,
+                    check=None) -> tuple[jax.Array, BlockSolveInfo]:
         """Blocked multi-RHS solve: ``B`` is (n, k), one hierarchy, k solves.
 
         With ``exact_columns=True`` each column's trajectory is bitwise
@@ -189,9 +212,10 @@ class LaplacianSolver:
         x0_int = (self._to_internal(jnp.asarray(x0, jnp.float32))
                   if x0 is not None else None)
         M = self.precondition if precondition else None
-        X, info = pcg_block(self.matvec, B_int, precond=M, tol=tol,
+        X, info = pcg_block(self._solve_matvec(), B_int, precond=M, tol=tol,
                             maxiter=maxiter, exact_columns=exact_columns,
-                            x0=x0_int, project=self.projector, guard=guard)
+                            x0=x0_int, project=self.projector, guard=guard,
+                            check=check)
         return self._from_internal(X), info
 
     def iteration_work(self, precondition: bool = True) -> float:

@@ -1,0 +1,195 @@
+"""ABFT checksums and residual certification for self-verifying solves.
+
+The breakdown guards (PR 8/9) only catch *loud* failures — non-finite
+residuals, indefinite p·Ap, stagnation. A corrupted edge weight or a
+flipped bit in a sharded SpMV payload produces a finite, plausible-looking,
+*wrong* answer that sails through every guard: PCG happily converges to the
+corrupted system's solution. This module closes that gap with two
+independent mechanisms, both rooted in Laplacian structure:
+
+**In-flight ABFT checksum** (:func:`make_check`). Every graph Laplacian has
+zero column sums, so ``1ᵀ(Lp) = 0`` exactly — and because the hot path
+computes ``Lp`` as ``deg·p − A·p``, the identity couples the *stored degree
+vector* against the *executed adjacency SpMV*. The cheap check evaluates
+
+    ``|Σᵢ (Ap)ᵢ|  ≤  rtol · Σᵢ degᵢ |pᵢ|``
+
+per RHS column: a handful of extra O(nk) reductions riding the existing
+device fetch, no second SpMV. Corruption of the SpMV output, a pre-psum
+partial, a shard's value payload, or the stored edge weights (with clean
+degrees) all break the cancellation. ``mode="paranoid"`` adds a Hutchinson-
+style witness: a fixed seeded Rademacher vector ``w`` with ``u = Lw``
+precomputed once at setup — symmetry gives ``wᵀ(Lp) = uᵀp``, a second
+independent linear functional that also catches corruption with zero column
+sums (e.g. a symmetric ±pair). Checks are NaN-safe (``~(δ ≤ rtol·scale)``
+flags non-finite deltas) and *observational*: the update math is untouched,
+so clean solves are bitwise-identical with verification on or off.
+
+**Residual certificate** (:func:`certify`). After the solve, the projected
+relative residual ``‖proj(b − Lx)‖ / ‖proj b‖`` is recomputed on the host
+in float64 straight from the Problem's edge list — an SpMV that shares *no
+code or setup artifacts* with the hot path (not the hierarchy, not the ELL
+layout, not the device kernels), so a certificate can never be fooled by
+the same corrupted kernel that produced ``x``. Projection removes
+per-component means, matching the solver's nullspace convention.
+
+``VerifyConfig`` is frozen/hashable so it can key jit caches directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# float64 certification floor: a float32 solve that honestly converged to
+# tol can still show an O(eps32 · cond)-ish true residual when recomputed
+# in float64 — certify against max(tol, CERT_FLOOR) so certificates are
+# complete (never fail a clean converged solve) while still rejecting any
+# materially wrong answer.
+CERT_FLOOR = 1e-4
+
+# checksum relative tolerance: float32 cancellation noise in the column-sum
+# identity measures ~1.5e-5 at n=4096; 3e-4 keeps ~20x headroom over the
+# noise while staying far below the weakest covered corruption (~1e-3).
+CHECK_RTOL = 3e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyConfig:
+    """Checksum policy — hashable so it can key jit caches.
+
+    ``mode`` is ``"cheap"`` (zero-column-sum identity) or ``"paranoid"``
+    (adds the Rademacher witness); ``rtol`` is the relative mismatch
+    threshold; ``seed`` seeds the witness vector.
+    """
+
+    mode: str = "cheap"
+    rtol: float = CHECK_RTOL
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.mode not in ("cheap", "paranoid"):
+            raise ValueError(f"verify mode must be 'cheap' or 'paranoid', "
+                             f"got {self.mode!r}")
+
+
+def make_check(deg, cfg: VerifyConfig, matvec=None):
+    """Build ``check(P, Ap) -> bool[k]`` for a Laplacian with degrees ``deg``.
+
+    ``P``/``Ap`` may be ``(n,)`` or ``(n, k)``; the result is a traced
+    boolean per column (True = checksum mismatch / suspected SDC). ``deg``
+    must live in the same index order (and padding) as the vectors the
+    solver iterates on. For ``mode="paranoid"`` pass the (clean, setup-time)
+    ``matvec`` — the witness ``u = L w`` is evaluated once, eagerly, here.
+    """
+    import jax.numpy as jnp
+
+    deg = jnp.asarray(deg)
+    rtol = float(cfg.rtol)
+    tiny = float(np.finfo(np.float32).tiny)
+    w = u = None
+    if cfg.mode == "paranoid":
+        if matvec is None:
+            raise ValueError("paranoid verification needs the setup-time "
+                             "matvec to precompute its witness u = L w")
+        rng = np.random.default_rng((cfg.seed, deg.shape[0]))
+        w_host = rng.choice((-1.0, 1.0), deg.shape[0]).astype(np.float32)
+        w = jnp.asarray(w_host)
+        u = jnp.asarray(matvec(w))
+
+    def check(P, Ap):
+        expand = (lambda v: v) if P.ndim == 1 else (lambda v: v[:, None])
+        scale = jnp.sum(expand(deg) * jnp.abs(P), axis=0) + tiny
+        # NaN-safe: a non-finite column sum fails the <= and flags bad
+        bad = ~(jnp.abs(jnp.sum(Ap, axis=0)) <= rtol * scale)
+        if w is not None:
+            s2 = (jnp.sum(jnp.abs(expand(w)) * jnp.abs(Ap), axis=0)
+                  + jnp.sum(jnp.abs(expand(u)) * jnp.abs(P), axis=0) + tiny)
+            d2 = jnp.abs(jnp.sum(expand(w) * Ap, axis=0)
+                         - jnp.sum(expand(u) * P, axis=0))
+            bad = bad | ~(d2 <= rtol * s2)
+        return bad
+
+    return check
+
+
+@dataclasses.dataclass(frozen=True)
+class Certificate:
+    """A-posteriori residual certificate attached to ``SolveResult``.
+
+    * ``method`` — how the check was computed (``"host_float64"``).
+    * ``passed`` — every column that *claimed* convergence has
+      ``rel_residual <= threshold`` (columns that honestly reported
+      max_iters/breakdown are vacuously fine: the status already says so).
+    * ``threshold`` — ``max(tol, CERT_FLOOR)``.
+    * ``rel_residuals`` — per-column ``‖proj(b − Lx)‖ / ‖proj b‖`` in
+      float64 (recorded for *all* columns, claimed or not).
+    * ``claimed`` — the per-column claimed-converged mask the certificate
+      was judged against.
+    """
+
+    method: str
+    passed: bool
+    threshold: float
+    rel_residuals: tuple
+    claimed: tuple
+
+    def failed_columns(self) -> np.ndarray:
+        """Indices of columns that claimed convergence but failed the check."""
+        rel = np.asarray(self.rel_residuals, np.float64)
+        claimed = np.asarray(self.claimed, bool)
+        with np.errstate(invalid="ignore"):
+            ok = rel <= self.threshold
+        return np.nonzero(claimed & ~ok)[0]
+
+
+def certify(problem, B, X, tol, claimed=None) -> Certificate:
+    """Certify ``X`` against ``L X = proj B`` via an independent float64 SpMV.
+
+    ``problem`` supplies the raw edge list (both directions stored) and
+    component labels; nothing from the solve path — hierarchy, ELL layout,
+    device kernels — is trusted. ``claimed`` is the per-column
+    claimed-converged mask (default: all columns claimed).
+    """
+    rows = np.asarray(problem.rows)
+    cols = np.asarray(problem.cols)
+    vals = np.asarray(problem.vals, np.float64)
+    n = problem.n
+    B = np.asarray(B, np.float64)
+    X = np.asarray(X, np.float64)
+    if B.ndim == 1:
+        B = B[:, None]
+    if X.ndim == 1:
+        X = X[:, None]
+    k = B.shape[1]
+
+    deg = np.zeros(n, np.float64)
+    np.add.at(deg, rows, vals)
+    # L x = deg·x − A x, accumulated entirely on host in float64
+    AX = np.zeros_like(X)
+    np.add.at(AX, rows, vals[:, None] * X[cols])
+    R = B - (deg[:, None] * X - AX)
+
+    comp, n_comp = problem.components()
+    counts = np.bincount(comp, minlength=n_comp).astype(np.float64)
+
+    def proj(V):
+        means = np.zeros((n_comp, V.shape[1]))
+        np.add.at(means, comp, V)
+        return V - (means / counts[:, None])[comp]
+
+    ref = np.linalg.norm(proj(B), axis=0)
+    res = np.linalg.norm(proj(R), axis=0)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        rel = np.where(ref > 0, res / ref, res)
+    threshold = max(float(np.max(np.asarray(tol))), CERT_FLOOR)
+    claimed_arr = (np.ones(k, bool) if claimed is None
+                   else np.asarray(claimed, bool).reshape(k))
+    with np.errstate(invalid="ignore"):
+        ok = rel <= threshold
+    passed = bool(np.all(ok[claimed_arr])) if claimed_arr.any() else True
+    return Certificate(method="host_float64", passed=passed,
+                       threshold=threshold,
+                       rel_residuals=tuple(float(r) for r in rel),
+                       claimed=tuple(bool(c) for c in claimed_arr))

@@ -37,7 +37,8 @@ from repro.core.graph import GraphLevel, graph_from_adjacency
 from repro.core.hierarchy import (Hierarchy, SetupConfig,
                                   attach_ell_transfers, build_hierarchy)
 from repro.core.krylov import (SCAN_INDEFINITE, SCAN_NONFINITE, SCAN_OK,
-                               SCAN_STAGNATION, _as_guard)
+                               SCAN_SDC, SCAN_STAGNATION, GuardConfig,
+                               _as_guard)
 from repro.dist.partition import (edge_spec, ell_block_spec,
                                   ell_blocks_from_partition, mesh_geometry,
                                   partition_edges_2d)
@@ -109,9 +110,13 @@ class DistGraphLevel:
         def local(row_l, col_l, val, x):
             i = jax.lax.axis_index(row_axis)
             j = jax.lax.axis_index(col_axis)
+            sidx, nsh = _shard_coords(mesh)
             row_l = row_l.reshape(-1)
             col_l = col_l.reshape(-1)
-            val = val.reshape(-1)
+            # One seeded shard's local value payload can be silently
+            # corrupted (trace-time site; a no-op unless a plan is armed).
+            val = faults.site_traced("sdc.shard_payload", val.reshape(-1),
+                                     axis_index=sidx, n_shards=nsh)
             valid = row_l < nb
             row_g = jnp.where(valid, i * nb + row_l, n_pad)
             col_g = jnp.where(valid, j * nb_col + col_l, n_pad)
@@ -120,7 +125,6 @@ class DistGraphLevel:
             part = jax.ops.segment_sum(prod, row_g, num_segments=n_pad)
             # One seeded shard's allreduce contribution can be corrupted
             # (trace-time site; a no-op unless a fault plan is armed).
-            sidx, nsh = _shard_coords(mesh)
             part = faults.site_traced("dist.psum", part,
                                       axis_index=sidx, n_shards=nsh)
             # Column-communicator reduce + row broadcast == one psum.
@@ -157,8 +161,12 @@ class DistGraphLevel:
         def local(ec, ev, *rest):
             *spill, x = rest
             i = jax.lax.axis_index(row_axis)
+            sidx, nsh = _shard_coords(mesh)
             ec = ec.reshape(nb, width)
-            ev = ev.reshape(nb, width)
+            # same one-bad-shard payload model as the COO path, on the
+            # fixed-width ELL values the Pallas kernel contracts
+            ev = faults.site_traced("sdc.shard_payload", ev.reshape(nb, width),
+                                    axis_index=sidx, n_shards=nsh)
             # Column ids are global with sentinel n_pad, so the gather
             # source is the replicated x itself.
             if use_pallas:
@@ -174,7 +182,6 @@ class DistGraphLevel:
                 prod = jnp.where(sr < n_pad, sv * xg, 0)
                 part = part + jax.ops.segment_sum(prod, sr,
                                                   num_segments=n_pad)
-            sidx, nsh = _shard_coords(mesh)
             part = faults.site_traced("dist.psum", part,
                                       axis_index=sidx, n_shards=nsh)
             return jax.lax.psum(part, axes)
@@ -281,7 +288,7 @@ def _pcg_block_init(matvec, B, precond, n: int, n_pad: int, guard=None):
 
 
 def _pcg_block_chunk(matvec, precond, n: int, n_pad: int, tol: float,
-                     length: int, carry, guard=None):
+                     length: int, carry, guard=None, check=None):
     """Advance a blocked PCG carry ``length`` scan steps.
 
     Each step carries a residual-based active mask: once a column's
@@ -303,6 +310,13 @@ def _pcg_block_chunk(matvec, precond, n: int, n_pad: int, tol: float,
     iteration SpMV routes through the ``dist.spmv`` trace-time fault site
     (mirroring the eager path's ``solve.spmv``); a no-op unless a fault
     plan is armed.
+
+    ``check`` (guarded carry only) is the ABFT checksum
+    ``check(P, Ap) -> bool[k]`` from ``repro.core.verify.make_check``
+    built on the *padded* degree vector: a flagged column freezes with
+    ``SCAN_SDC`` before the poisoned update, ahead of the indefinite
+    guard — the verdict is a pure extra lane, so clean trajectories stay
+    bitwise identical with the check on.
 
     Returns ``(carry, norms [length, k])``; ``carry[5]`` counts the steps
     each column was active for, cumulative across chunks.
@@ -340,6 +354,10 @@ def _pcg_block_chunk(matvec, precond, n: int, n_pad: int, tol: float,
         X, R, Z, P, rz, iters, code, best, stall = state
         active = (cnorm(R) > tol * r0n) & (code == SCAN_OK)
         Ap = faults.site_traced("dist.spmv", bmv(P))
+        if check is not None:
+            sdc = active & check(P, Ap)
+            code = jnp.where(sdc, SCAN_SDC, code)
+            active = active & ~sdc
         pAp = jnp.sum(P * Ap, axis=0)
         indef = active & ~(jnp.isfinite(pAp) & (pAp > 0.0))
         code = jnp.where(indef, SCAN_INDEFINITE, code)
@@ -582,19 +600,20 @@ class DistLaplacianSolver:
 
         return step
 
-    def build_chunk_step(self, length: int, tol: float = 0.0, guard=None):
+    def build_chunk_step(self, length: int, tol: float = 0.0, guard=None,
+                         check=None):
         """(arrays, coarse_h, carry) -> (carry, norms [length, k])."""
         n, n_pad = self.n, self.n_pad
 
         def step(arrays, coarse_h, carry):
             matvec, precond = self._operators(arrays, coarse_h)
             return _pcg_block_chunk(matvec, precond, n, n_pad, tol, length,
-                                    carry, guard=guard)
+                                    carry, guard=guard, check=check)
 
         return step
 
     def build_solve_block_step(self, n_iters: int = 30, tol: float = 0.0,
-                               guard=None):
+                               guard=None, check=None):
         """(arrays, coarse_h, B_pad [n_pad, k]) -> (X_pad, norms, iters).
 
         One fused program — init + full-length scan — so a dry-run lowering
@@ -603,7 +622,8 @@ class DistLaplacianSolver:
         return grows a fourth element: per-column int32 ``SCAN_*`` codes.
         """
         init = self.build_init_step(guard=guard)
-        chunk = self.build_chunk_step(n_iters, tol=tol, guard=guard)
+        chunk = self.build_chunk_step(n_iters, tol=tol, guard=guard,
+                                      check=check)
 
         def step(arrays, coarse_h, B_pad):
             carry = init(arrays, coarse_h, B_pad)
@@ -670,7 +690,7 @@ class DistLaplacianSolver:
         return step
 
     def solve_block(self, B, n_iters: int = 30, tol: float = 1e-8,
-                    guard=None):
+                    guard=None, check=None):
         """Blocked multi-RHS distributed solve: ``B`` is (n, k).
 
         All k columns ride one scanned PCG program — the 2D-sharded SpMV
@@ -688,6 +708,12 @@ class DistLaplacianSolver:
         (a fully-broken block stops at the next chunk boundary instead of
         burning the whole iteration cap). Clean-path X/norms/iters are
         bitwise identical to the unguarded program.
+
+        ``check`` is an ABFT checksum closure over *padded* (P, Ap) blocks
+        (``repro.core.verify.make_check`` on the padded degree vector);
+        a flagged column freezes with ``SCAN_SDC``. The verdict needs the
+        in-scan code lane to land in, so a non-None ``check`` implies the
+        guarded program (a default ``GuardConfig`` when ``guard`` is None).
         """
         B = jnp.asarray(B, jnp.float32)
         if B.ndim != 2:
@@ -698,6 +724,8 @@ class DistLaplacianSolver:
                                                (0, 0)))
         tol = float(tol)
         g = _as_guard(guard)
+        if check is not None and g is None:
+            g = GuardConfig()
 
         init = self._get_step(("init", k, g),
                               lambda: self.build_init_step(guard=g))
@@ -711,9 +739,10 @@ class DistLaplacianSolver:
         it = 0
         while it < n_iters:
             length = min(self._CHUNK, n_iters - it) if chunked else n_iters
-            key = ("chunk", k, length, tol, g)
+            key = ("chunk", k, length, tol, g, check)
             step = self._get_step(
-                key, lambda: self.build_chunk_step(length, tol=tol, guard=g))
+                key, lambda: self.build_chunk_step(length, tol=tol, guard=g,
+                                                   check=check))
             carry, ns = step(self.arrays, self.coarse_h, carry)
             norms_parts.append(np.asarray(jax.device_get(ns)))
             it += length

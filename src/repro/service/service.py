@@ -60,6 +60,33 @@ PR 9 hardens the serving loop three ways:
   stays as their sum), and a retry that succeeds clears any stale
   ``Ticket.error`` left by an earlier failed attempt of the same
   hierarchy.
+
+PR 10 adds strict admission control and backpressure
+(``SolverService(admission="strict")``; the default ``"route"`` keeps
+every PR 9 behavior bitwise):
+
+* **Reject at the door**: a submit is turned away
+  (``Ticket.status == "rejected"``, counted in ``stats()["rejected"]``)
+  when the problem's per-fingerprint circuit breaker is open, when the
+  queue sits at its ``queue_watermark``, or when admission triage routes
+  the problem off the multigrid path entirely (``diag_pcg`` / ``dense``
+  rungs) — a numerically hopeless graph is the *submitter's* problem in
+  strict mode, not a silent service degradation.
+* **Requeue with deterministic backoff**: a ticket whose serve failed is
+  re-enqueued instead of failed (up to ``requeue_max`` times), eligible
+  again after a flush-count backoff of ``min(2**requeues, 8)`` flushes —
+  capped exponential, no wall-clock randomness, so a given request
+  stream still replays exactly. Counted in ``stats()["requeued"]``.
+* **Circuit breaker**: ``breaker_threshold`` consecutive failed or
+  certificate-failing serves of the same problem fingerprint open its
+  breaker (strict admission then rejects that problem); one healthy
+  serve closes it again.
+
+With ``SolverOptions(verify=...)`` on, every served ticket is also
+independently certified (``repro.core.verify.certify``) exactly like the
+facade path: a certificate-failing merged-solve slice is re-routed
+through the degradation ladder, and ``SolveResult.certificate`` rides
+every result.
 """
 
 from __future__ import annotations
@@ -119,6 +146,13 @@ class Ticket:
     ``b`` (a 1-D RHS comes back 1-D) — or raises :class:`ServiceError`
     carrying this ticket's own failure (``Ticket.error``) if its serve
     failed; other tickets in the same flush are unaffected.
+
+    Strict admission (PR 10) adds two more states: ``"rejected"`` — the
+    service turned the request away at ``submit()`` (``done()`` is True;
+    ``result()`` raises with the rejection reason) — and ``"requeued"``
+    — the serve failed and the ticket is back in the queue awaiting its
+    backoff (``requeues`` counts the attempts so far; ``done()`` stays
+    False until a later flush resolves it).
     """
 
     def __init__(self, seq: int, problem: Problem, B: np.ndarray,
@@ -135,8 +169,12 @@ class Ticket:
         self._result: SolveResult | None = None
         self.error: BaseException | None = None
         # admission-triage report (repro.api.triage.TriageReport) when the
-        # service runs with SolverOptions(triage=True)
+        # service runs with SolverOptions(triage=True) or admission="strict"
         self.triage = None
+        # strict-admission state (PR 10)
+        self.requeues = 0               # failed serves re-enqueued so far
+        self._not_before = 0            # flush number the requeue waits for
+        self._rejected: str | None = None   # admission rejection reason
 
     @property
     def n_rhs(self) -> int:
@@ -144,14 +182,23 @@ class Ticket:
 
     @property
     def status(self) -> str:
+        if self._rejected is not None:
+            return "rejected"
         if self.error is not None:
             return "failed"
-        return "done" if self._result is not None else "pending"
+        if self._result is not None:
+            return "done"
+        return "requeued" if self.requeues else "pending"
 
     def done(self) -> bool:
-        return self._result is not None or self.error is not None
+        return (self._result is not None or self.error is not None
+                or self._rejected is not None)
 
     def result(self) -> tuple[np.ndarray, SolveResult]:
+        if self._rejected is not None:
+            raise ServiceError(
+                f"request {self.seq} rejected at admission: "
+                f"{self._rejected}")
         if self.error is not None:
             raise ServiceError(
                 f"request {self.seq} failed: {self.error!r}") from self.error
@@ -171,6 +218,16 @@ class SolverService:
     :func:`~repro.api.facade.default_cache` to share hierarchies with
     direct ``repro.api.setup()`` callers. ``max_batch`` caps how many
     same-bucket setups fuse into one vmapped program.
+
+    ``admission`` (PR 10) — ``"route"`` (default): every well-formed
+    request is admitted and hopeless ones are *routed* to cheaper rungs
+    (the PR 9 behavior, bitwise). ``"strict"``: the service may turn
+    requests away — see the module docstring. ``queue_watermark`` caps
+    the pending-queue depth under strict admission (None = unbounded);
+    ``breaker_threshold`` consecutive failed/uncertified serves of one
+    problem fingerprint open its circuit breaker; a failed ticket is
+    requeued with capped-exponential flush-count backoff up to
+    ``requeue_max`` times before it fails for good.
     """
 
     def __init__(self, options: SolverOptions | None = None,
@@ -178,7 +235,10 @@ class SolverService:
                  cache: HierarchyCache | None = None, max_batch: int = 8,
                  flush_deadline: float | None = None,
                  checkpoint_dir: str | None = None,
-                 checkpoint_wall: float | None = None):
+                 checkpoint_wall: float | None = None,
+                 admission: str = "route",
+                 queue_watermark: int | None = None,
+                 breaker_threshold: int = 3, requeue_max: int = 2):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if flush_deadline is not None and flush_deadline <= 0:
@@ -187,7 +247,25 @@ class SolverService:
         if checkpoint_wall is not None and checkpoint_wall <= 0:
             raise ValueError(f"checkpoint_wall must be positive seconds, "
                              f"got {checkpoint_wall}")
+        if admission not in ("route", "strict"):
+            raise ValueError(f"admission must be 'route' or 'strict', "
+                             f"got {admission!r}")
+        if queue_watermark is not None and queue_watermark < 1:
+            raise ValueError(f"queue_watermark must be None or >= 1, "
+                             f"got {queue_watermark}")
+        if breaker_threshold < 1:
+            raise ValueError(f"breaker_threshold must be >= 1, "
+                             f"got {breaker_threshold}")
+        if requeue_max < 0:
+            raise ValueError(f"requeue_max must be >= 0, got {requeue_max}")
         self.options = options or SolverOptions()
+        self.admission = admission
+        self.queue_watermark = queue_watermark
+        self.breaker_threshold = breaker_threshold
+        self.requeue_max = requeue_max
+        # per-fingerprint consecutive failed/uncertified serve counts; a
+        # fingerprint at >= breaker_threshold has its breaker open
+        self._breaker: dict[str, int] = {}
         self.backend = resolve_backend(backend, mesh, self.options)
         self.mesh = mesh
         self.cache = cache if cache is not None else HierarchyCache()
@@ -207,7 +285,8 @@ class SolverService:
                        setup_seconds=0.0,
                        failures=0, setup_retries=0, solve_retries=0,
                        fallbacks=0, deadline_expired=0,
-                       triage_routed=0, checkpoints=0, resumed=0)
+                       triage_routed=0, checkpoints=0, resumed=0,
+                       rejected=0, requeued=0, breaker_opened=0)
 
     # ------------------------------------------------------------------
     def submit(self, problem: Problem, b, *, tol: float | None = None,
@@ -251,18 +330,47 @@ class SolverService:
             self.options.max_iters if max_iters is None else int(max_iters),
             HierarchyCache.key(problem, self.options, self.backend,
                                self.mesh))
-        if self.options.triage:
+        if self.options.triage or self.admission == "strict":
             # Admission-time conditioning triage (PR 9): the score is
             # memoized on the Problem, so a re-submitted problem pays
             # only the rung decision. Routed tickets (_ROUTED_RUNGS)
-            # never enter the setup pass.
+            # never enter the setup pass. Strict admission (PR 10)
+            # always triages — the rung decision is its admission test.
             from repro.api.triage import triage_problem
 
             t.triage = triage_problem(problem, self.options)
         self._seq += 1
         self._c["requests"] += 1
+        if self.admission == "strict":
+            reason = self._strict_reject_reason(t)
+            if reason is not None:
+                t._rejected = reason
+                self._c["rejected"] += 1
+                return t
         self._pending.append(t)
         return t
+
+    def _strict_reject_reason(self, t: Ticket) -> str | None:
+        """Why strict admission turns this request away, or None.
+
+        Checked in severity order: an open circuit breaker (this exact
+        problem keeps failing), queue backpressure (the watermark is a
+        depth the *submitter* sees immediately, not a deadline error
+        minutes later), then triage hopelessness (the problem would
+        bypass multigrid entirely — strict mode refuses to pretend)."""
+        fp = t.problem.fingerprint()
+        if self._breaker.get(fp, 0) >= self.breaker_threshold:
+            return (f"circuit breaker open for this problem after "
+                    f"{self._breaker[fp]} consecutive failed serves")
+        if (self.queue_watermark is not None
+                and len(self._pending) >= self.queue_watermark):
+            return (f"queue watermark reached "
+                    f"({len(self._pending)} pending >= "
+                    f"{self.queue_watermark})")
+        if _routed(t):
+            return (f"admission triage routed the problem off the "
+                    f"multigrid path (rung={t.triage.rung!r})")
+        return None
 
     # ------------------------------------------------------------------
     def flush(self, deadline: float | None = None) -> list[Ticket]:
@@ -275,11 +383,24 @@ class SolverService:
         ``stats()["deadline_expired"]``) instead of holding the flush
         open. Individual setup/solve failures are isolated per ticket —
         see the module docstring.
+
+        Under ``admission="strict"`` a requeued ticket only becomes
+        eligible once its flush-count backoff has elapsed (ineligible
+        tickets stay queued and are NOT in the returned list), and a
+        ticket that fails its serve is requeued instead of resolved,
+        up to ``requeue_max`` attempts.
         """
         pending, self._pending = self._pending, []
         if not pending:
             return []
         self._c["flushes"] += 1
+        flush_no = self._c["flushes"]
+        deferred = [t for t in pending if t._not_before > flush_no]
+        if deferred:
+            pending = [t for t in pending if t._not_before <= flush_no]
+            self._pending.extend(deferred)
+            if not pending:
+                return []
         budget = self.flush_deadline if deadline is None else deadline
         t_start = time.perf_counter()
         self._ckpt_done = 0
@@ -303,10 +424,43 @@ class SolverService:
                     f"flush deadline of {budget}s exceeded before request "
                     f"{t.seq} was served")
                 self._c["deadline_expired"] += 1
+        for t in pending:
+            self._note_outcome(t)
+        if self.admission == "strict":
+            resolved = []
+            for t in pending:
+                if t.error is not None and t.requeues < self.requeue_max:
+                    # deterministic capped-exponential backoff measured in
+                    # FLUSHES, not wall clock — replays stay bit-stable
+                    t.requeues += 1
+                    t._not_before = flush_no + min(2 ** t.requeues, 8)
+                    t.error = None
+                    self._c["requeued"] += 1
+                    self._pending.append(t)
+                else:
+                    resolved.append(t)
+            pending = resolved
         now = time.perf_counter()
         self._latencies.extend(now - t._submitted for t in pending)
         self._c["served"] += sum(t.status == "done" for t in pending)
         return pending
+
+    def _note_outcome(self, t: Ticket) -> None:
+        """Feed one served ticket into its problem's circuit breaker:
+        consecutive failed or certificate-failing serves accumulate; a
+        healthy serve closes the breaker again."""
+        fp = t.problem.fingerprint()
+        r = t._result
+        bad = (t.error is not None or r is None
+               or r.status == "failed"
+               or (r.certificate is not None and not r.certificate.passed))
+        if bad:
+            n = self._breaker.get(fp, 0) + 1
+            self._breaker[fp] = n
+            if n == self.breaker_threshold:
+                self._c["breaker_opened"] += 1
+        else:
+            self._breaker.pop(fp, None)
 
     # ------------------------------------------------------------------
     def _setup_pass(self, pending: list[Ticket], expired) -> None:
@@ -522,6 +676,21 @@ class SolverService:
                     and self.options.fallback):
                 self._fallback_ticket(handle, t)
                 continue
+            # PR 10: per-ticket residual certification of the merged
+            # block's slice. A failing certificate routes the ticket
+            # through the degradation ladder exactly like a detected
+            # breakdown (the facade path re-certifies after its rung);
+            # with fallback off the columns are marked "sdc_certificate".
+            cert = None
+            if self.options.verify != "off":
+                cert = self._certify_slice(t, norms[:, sl], X[:, sl])
+                if not cert.passed:
+                    if self.options.fallback:
+                        self._fallback_ticket(handle, t)
+                        continue
+                    from repro.api.facade import Solver as _FacadeSolver
+
+                    sts = _FacadeSolver._mark_cert_failure(sts, cert)
             # Wall-clock attribution: the block ran once; each request
             # reports its share by column count.
             t._result = result_from_history(
@@ -529,10 +698,23 @@ class SolverService:
                 handle.work_per_iteration, 0.0,
                 seconds * (k / B.shape[1]), statuses=sts,
                 diagnostics=(() if t.triage is None
-                             else (t.triage.as_diagnostics(),)))
+                             else (t.triage.as_diagnostics(),)),
+                certificate=cert)
             X_t = np.asarray(X[:, sl])
             t._x = X_t[:, 0] if t._single else X_t
             t.error = None      # a retried solve must not keep a stale error
+
+    def _certify_slice(self, t: Ticket, norms, X):
+        """Independent float64 certificate for one ticket's slice of a
+        merged solve, judged on the columns whose residual history
+        claimed convergence at this ticket's own tolerance."""
+        from repro.core.verify import certify
+
+        norms = np.asarray(norms, np.float64)
+        with np.errstate(invalid="ignore"):
+            claimed = norms[-1] <= t.tol * norms[0]
+        return certify(t.problem, t._B, np.asarray(X), t.tol,
+                       claimed=claimed)
 
     def _fallback_ticket(self, handle, t: Ticket) -> None:
         """Route one broken-down ticket through the facade's degradation
@@ -690,9 +872,14 @@ class SolverService:
                              if self._c["setup_batches"] else 0.0),
             cache=self.cache.stats(),
             latency_seconds={
-                "p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
-                "p90": float(np.percentile(lat, 90)) if lat.size else 0.0,
-                "p99": float(np.percentile(lat, 99)) if lat.size else 0.0,
-                "mean": float(lat.mean()) if lat.size else 0.0,
+                # NaN, not 0.0: an empty sample has no percentiles, and a
+                # dashboard aggregating 0.0s as real latencies would lie
+                "p50": float(np.percentile(lat, 50)) if lat.size
+                else float("nan"),
+                "p90": float(np.percentile(lat, 90)) if lat.size
+                else float("nan"),
+                "p99": float(np.percentile(lat, 99)) if lat.size
+                else float("nan"),
+                "mean": float(lat.mean()) if lat.size else float("nan"),
             })
         return c

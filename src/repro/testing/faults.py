@@ -38,6 +38,10 @@ Named sites (grep for ``faults.site(``/``faults.checkpoint(``/
 ``service.request``    admitted RHS block (post-validation) in submit()
 ``service.setup``      raising checkpoint in the flush() setup pass
 ``service.solve``      raising checkpoint in the flush() solve pass
+``sdc.edge_weights``   stored fine-level edge weights consulted at solve
+                       entry — persistent operator corruption (the solve
+                       converges to the *wrong system's* solution; degrees
+                       stay clean, so ABFT checksums can see the skew)
 ``dist.select``        one shard's Alg 1 key tensor in the dist setup
                        super-step (traced)
 ``dist.vote``          one shard's fused Alg 2 vote keys in the dist setup
@@ -46,7 +50,19 @@ Named sites (grep for ``faults.site(``/``faults.checkpoint(``/
                        PCG (traced)
 ``dist.psum``          one shard's pre-``psum`` partial of the 2D SpMV — a
                        corrupted allreduce contribution (traced)
+``sdc.shard_payload``  one shard's local edge-weight payload inside the 2D
+                       SpMV (COO ``val`` / ELL ``ev``) — a corrupted shard
+                       buffer (traced)
 =====================  ======================================================
+
+**SDC modes** (PR 10): ``"bitflip"`` models a flipped high (exponent) bit —
+entries are scaled by a seeded ``2**±64``, orders of magnitude wrong yet
+finite, the classic silent-data-corruption signature; ``"perturb"`` scales
+entries by a seeded ``1 ± 0.5`` — plausible-looking values that stay finite
+and sign-consistent, invisible to the non-finite/indefinite guards. Both
+exist so the ABFT checksum layer (``SolverOptions(verify=...)``) has
+something *silent* to detect; integer lanes flip the second-highest bit
+(``bitflip``) or add 1 (``perturb``).
 
 **Traced sites** (PR 9, the ``dist.*`` rows): the distributed solve and the
 dist setup super-steps run as jitted ``shard_map`` programs, so host-side
@@ -93,6 +109,7 @@ TRACED_SITES = (
     "dist.vote",
     "dist.spmv",
     "dist.psum",
+    "sdc.shard_payload",
 )
 
 SITES = (
@@ -105,9 +122,11 @@ SITES = (
     "service.request",
     "service.setup",
     "service.solve",
+    "sdc.edge_weights",
 ) + TRACED_SITES
 
-_MODES = ("nan", "inf", "huge", "zero", "negate", "raise", "kill")
+_MODES = ("nan", "inf", "huge", "zero", "negate", "bitflip", "perturb",
+          "raise", "kill")
 
 # exit code of a mode="kill" fault — tests assert on it so an unrelated
 # crash can't masquerade as the injected kill
@@ -123,9 +142,11 @@ class Fault:
     """One site's corruption policy.
 
     * ``mode`` — ``"nan"`` / ``"inf"`` / ``"huge"`` (×1e30) / ``"zero"`` /
-      ``"negate"`` corrupt array sites; ``"raise"`` raises
-      :class:`InjectedFault` (array sites raise too — a site may fail
-      instead of corrupting).
+      ``"negate"`` corrupt array sites; ``"bitflip"`` (seeded ×2**±64 —
+      a flipped exponent bit, huge-but-finite) and ``"perturb"`` (seeded
+      ×(1 ± 0.5) — plausible-looking wrong values) are the *silent* SDC
+      modes; ``"raise"`` raises :class:`InjectedFault` (array sites raise
+      too — a site may fail instead of corrupting).
     * ``at_calls`` — per-site call indices (0-based) at which the fault
       fires; ``None`` fires on every call.
     * ``fraction`` — fraction of array entries corrupted (at least one),
@@ -204,6 +225,12 @@ class FaultPlan:
             flat[idx] = 0.0
         elif f.mode == "negate":
             flat[idx] = -flat[idx]
+        elif f.mode == "bitflip":
+            flat[idx] = flat[idx] * np.exp2(64.0 * rng.choice(
+                (-1.0, 1.0), idx.size))
+        elif f.mode == "perturb":
+            flat[idx] = flat[idx] * (1.0 + 0.5 * rng.choice(
+                (-1.0, 1.0), idx.size))
         out = flat.reshape(arr.shape)
         try:                                    # preserve jax-array inputs
             import jax.numpy as jnp
@@ -261,6 +288,13 @@ class FaultPlan:
                 bad = flat.at[idx].set(flat[idx] * 1e30 + 1e30)
             elif f.mode == "zero":
                 bad = flat.at[idx].set(0.0)
+            elif f.mode == "bitflip":
+                scale = np.exp2(64.0 * rng.choice((-1.0, 1.0), idx.size))
+                bad = flat.at[idx].set(
+                    flat[idx] * jnp.asarray(scale, x.dtype))
+            elif f.mode == "perturb":
+                fac = 1.0 + 0.5 * rng.choice((-1.0, 1.0), idx.size)
+                bad = flat.at[idx].set(flat[idx] * jnp.asarray(fac, x.dtype))
             else:                                  # negate
                 bad = flat.at[idx].set(-flat[idx])
         else:
@@ -270,6 +304,12 @@ class FaultPlan:
                 bad = flat.at[idx].set(np.iinfo(np.dtype(x.dtype)).max)
             elif f.mode == "zero":
                 bad = flat.at[idx].set(0)
+            elif f.mode == "bitflip":
+                hi = np.asarray(1 << (np.iinfo(np.dtype(x.dtype)).bits - 2),
+                                x.dtype)
+                bad = flat.at[idx].set(flat[idx] ^ hi)
+            elif f.mode == "perturb":
+                bad = flat.at[idx].add(1)
             else:                                  # negate
                 bad = flat.at[idx].set(-flat[idx])
         bad = bad.reshape(x.shape)

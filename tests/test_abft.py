@@ -1,0 +1,351 @@
+"""Self-verifying solves (PR 10): ABFT checksums + residual certificates.
+
+Covered promises:
+
+* the ``verify`` knob validates and maps to a ``VerifyConfig``; the new
+  ``sdc_*`` statuses are breakdown codes and outrank everything in
+  ``worst_status``;
+* clean solves are **bitwise identical** across ``verify="off"`` /
+  ``"cheap"`` / ``"paranoid"`` on every backend (checks observe, never
+  touch the update math);
+* every covered SDC fault site × silent mode is detected in
+  ``verify="cheap"`` — the column freezes with ``"sdc_spmv"`` before the
+  poisoned update reaches the iterate;
+* persistent operator corruption (``sdc.edge_weights``) drives the full
+  story: checksum detects → ladder degrades to the clean-by-construction
+  diag-PCG rung → the final answer re-certifies;
+* the certificate property sweep: certificates are *complete* (clean
+  converged solves always pass, judged against an independent in-test
+  float64 residual) and *sound* (a wrong answer above tolerance that
+  claims convergence never passes) across backends × verify modes;
+* honest non-convergence (max_iters) is vacuously certified — it is not
+  silent corruption, and must not escalate to an SDC status.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import Certificate, Problem, SolverOptions, setup
+from repro.core.krylov import (BREAKDOWN_STATUSES, STATUS_SDC,
+                               STATUS_SDC_CERT)
+from repro.core.verify import (CERT_FLOOR, VerifyConfig, certify,
+                               make_check)
+from repro.graphs.generators import barabasi_albert, ensure_connected
+from repro.testing import Fault, FaultPlan, inject
+
+OPTS = dict(coarsest_size=64)
+DIST = dict(coarsest_size=64, dist_nnz_threshold=1)
+
+
+def problem(n=300, seed=0):
+    return Problem.from_edges(
+        *ensure_connected(*barabasi_albert(n, m=3, seed=seed, weighted=True)))
+
+
+def mean_free(seed, n, k=None):
+    b = np.random.default_rng(seed).normal(size=n if k is None else (n, k))
+    return (b - b.mean(axis=0)).astype(np.float32)
+
+
+def mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def true_rel_residual(p, b, x):
+    """Independent float64 projected relative residual, computed in-test
+    (NOT via repro.core.verify) so certificate assertions don't trust the
+    code under test."""
+    b = np.asarray(b, np.float64)
+    x = np.asarray(x, np.float64)
+    deg = np.zeros(p.n)
+    np.add.at(deg, p.rows, np.asarray(p.vals, np.float64))
+    ax = np.zeros(p.n)
+    np.add.at(ax, p.rows, np.asarray(p.vals, np.float64) * x[p.cols])
+    r = b - (deg * x - ax)
+    r = r - r.mean()
+    bp = b - b.mean()
+    return np.linalg.norm(r) / np.linalg.norm(bp)
+
+
+# ----------------------------------------------------------------------
+class TestVerifyKnob:
+    def test_invalid_verify_rejected(self):
+        with pytest.raises(ValueError, match="verify"):
+            SolverOptions(verify="always")
+
+    def test_verify_config_mapping(self):
+        assert SolverOptions(verify="off").verify_config() is None
+        for mode in ("cheap", "paranoid"):
+            cfg = SolverOptions(verify=mode, seed=7).verify_config()
+            assert isinstance(cfg, VerifyConfig)
+            assert cfg.mode == mode and cfg.seed == 7
+
+    def test_verify_config_validates_mode(self):
+        with pytest.raises(ValueError, match="mode"):
+            VerifyConfig(mode="off")
+
+    def test_sdc_codes_are_breakdowns_and_worst(self):
+        from repro.api.result import worst_status
+
+        assert STATUS_SDC in BREAKDOWN_STATUSES
+        assert STATUS_SDC_CERT in BREAKDOWN_STATUSES
+        # detected silent corruption outranks every other code
+        assert worst_status(["converged", "breakdown_nonfinite",
+                             STATUS_SDC]) == STATUS_SDC
+        assert worst_status(["max_iters", STATUS_SDC_CERT,
+                             "stagnation"]) == STATUS_SDC_CERT
+
+    def test_paranoid_needs_matvec(self):
+        with pytest.raises(ValueError, match="witness"):
+            make_check(np.ones(8, np.float32),
+                       VerifyConfig(mode="paranoid"))
+
+
+# ----------------------------------------------------------------------
+class TestCleanPathBitwise:
+    @pytest.mark.parametrize("backend", ["single", "serial_ref"])
+    def test_eager_bitwise_and_certified(self, backend):
+        p, b = problem(), mean_free(1, 300, k=2)
+        results = {}
+        for mode in ("off", "cheap", "paranoid"):
+            solver = setup(p, SolverOptions(verify=mode, **OPTS),
+                           backend=backend, cache=False)
+            results[mode] = solver.solve(b)
+        x_off, r_off = results["off"]
+        assert r_off.status == "converged" and r_off.certificate is None
+        for mode in ("cheap", "paranoid"):
+            x, r = results[mode]
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(x_off))
+            assert r.status == "converged"
+            assert isinstance(r.certificate, Certificate)
+            assert r.certificate.passed
+            assert max(r.certificate.rel_residuals) <= r.certificate.threshold
+
+    def test_dist_bitwise_and_certified(self):
+        p, b = problem(), mean_free(2, 300, k=2)
+        results = {}
+        for mode in ("off", "cheap", "paranoid"):
+            solver = setup(p, SolverOptions(verify=mode, **DIST),
+                           backend="dist", mesh=mesh11(), cache=False)
+            results[mode] = solver.solve(b)
+        x_off, r_off = results["off"]
+        assert r_off.status == "converged" and r_off.certificate is None
+        for mode in ("cheap", "paranoid"):
+            x, r = results[mode]
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(x_off))
+            assert r.status == "converged" and r.certificate.passed
+
+
+# ----------------------------------------------------------------------
+class TestDetection:
+    """Every covered site × silent mode freezes with ``sdc_spmv`` under
+    ``verify="cheap"`` (fallback off so the raw code surfaces)."""
+
+    @pytest.mark.parametrize("site,mode,at,fraction", [
+        ("solve.spmv", "bitflip", (1,), 0.05),
+        ("solve.spmv", "perturb", (1,), 0.2),
+        ("sdc.edge_weights", "perturb", None, 0.3),
+        ("sdc.edge_weights", "zero", None, 0.3),
+        ("sdc.edge_weights", "bitflip", None, 0.05),
+    ])
+    @pytest.mark.parametrize("backend", ["single", "serial_ref"])
+    def test_eager_detection(self, backend, site, mode, at, fraction):
+        p, b = problem(), mean_free(3, 300)
+        solver = setup(p, SolverOptions(verify="cheap", fallback=False,
+                                        **OPTS),
+                       backend=backend, cache=False)
+        plan = FaultPlan({site: Fault(mode=mode, at_calls=at,
+                                      fraction=fraction)})
+        with inject(plan):
+            x, res = solver.solve(b)
+        assert plan.fired
+        assert res.status == STATUS_SDC
+        # the column froze at its last trusted iterate — still finite
+        assert np.isfinite(np.asarray(x)).all()
+
+    @pytest.mark.parametrize("site,mode,at,fraction", [
+        ("dist.spmv", "perturb", (0,), 0.3),
+        ("dist.psum", "bitflip", None, 0.3),
+        ("dist.psum", "perturb", None, 0.3),
+        ("sdc.shard_payload", "perturb", None, 0.5),
+    ])
+    def test_dist_detection(self, site, mode, at, fraction):
+        p, b = problem(), mean_free(4, 300)
+        solver = setup(p, SolverOptions(verify="cheap", fallback=False,
+                                        **DIST),
+                       backend="dist", mesh=mesh11(), cache=False)
+        plan = FaultPlan({site: Fault(mode=mode, at_calls=at,
+                                      fraction=fraction)})
+        with inject(plan):
+            x, res = solver.solve(b)
+        assert plan.fired
+        assert res.status == STATUS_SDC
+        if site == "dist.spmv":
+            # dist.spmv fires only inside the scan body, so the init carry
+            # is clean and the frozen iterate stays finite. at_calls=None
+            # sites also poison the INIT program's carry (P/Z), and the
+            # scan's multiply-by-zero freeze cannot launder an Inf P —
+            # detection (the frozen sdc code) is the contract there, and
+            # with fallback on the ladder recovers a finite answer.
+            assert np.isfinite(np.asarray(x)).all()
+
+    def test_dist_detection_recovers_with_fallback(self):
+        p, b = problem(), mean_free(4, 300)
+        solver = setup(p, SolverOptions(verify="cheap", fallback=True,
+                                        **DIST),
+                       backend="dist", mesh=mesh11(), cache=False)
+        plan = FaultPlan({"dist.psum": Fault(mode="bitflip", at_calls=None,
+                                             fraction=0.3)})
+        with inject(plan):
+            x, res = solver.solve(b)
+        assert plan.fired
+        assert res.status in ("converged", "degraded")
+        assert np.isfinite(np.asarray(x)).all()
+        assert res.certificate is not None and res.certificate.passed
+
+    def test_paranoid_also_detects(self):
+        p, b = problem(), mean_free(5, 300)
+        solver = setup(p, SolverOptions(verify="paranoid", fallback=False,
+                                        **OPTS),
+                       backend="single", cache=False)
+        plan = FaultPlan({"solve.spmv": Fault(mode="perturb", at_calls=(1,),
+                                              fraction=0.2)})
+        with inject(plan):
+            _, res = solver.solve(b)
+        assert plan.fired and res.status == STATUS_SDC
+
+    def test_krylov_pcg_single_rhs_check(self):
+        """The single-RHS pcg loop carries the same check hook."""
+        from repro.core.solver import LaplacianSolver
+
+        p, b = problem(), mean_free(6, 300)
+        solver = LaplacianSolver.setup(p.n, p.rows, p.cols,
+                                       p.vals.astype(np.float32))
+        check = make_check(solver._fine.deg, VerifyConfig(mode="cheap"))
+        plan = FaultPlan({"solve.spmv": Fault(mode="perturb", at_calls=(1,),
+                                              fraction=0.2)})
+        with inject(plan):
+            x, info = solver.solve(b, check=check)
+        assert plan.fired and info.status == STATUS_SDC
+        assert np.isfinite(np.asarray(x)).all()
+
+
+# ----------------------------------------------------------------------
+class TestRecovery:
+    def test_persistent_corruption_detect_degrade_recertify(self):
+        """The tentpole story end to end: persistent edge-weight
+        corruption converges to the WRONG system's answer (finite,
+        guard-invisible); the checksum detects it, the ladder walks to
+        the diag-PCG rung (built clean from the problem's own edge list),
+        and the recovered answer passes its certificate."""
+        p, b = problem(), mean_free(7, 300)
+        solver = setup(p, SolverOptions(verify="cheap", fallback=True,
+                                        **OPTS),
+                       backend="single", cache=False)
+        plan = FaultPlan({"sdc.edge_weights": Fault(mode="perturb",
+                                                    at_calls=None,
+                                                    fraction=0.3)})
+        with inject(plan):
+            x, res = solver.solve(b)
+        assert plan.fired
+        assert res.status == "degraded"
+        stages = [d["stage"] for d in res.diagnostics]
+        assert "diag_pcg" in stages
+        assert res.certificate is not None and res.certificate.passed
+        assert true_rel_residual(p, b, x) <= res.certificate.threshold
+
+    def test_without_verify_corruption_is_silent(self):
+        """The negative control: mild persistent corruption at a loose
+        tolerance sails through every PR 8/9 guard with verification OFF
+        and returns a confidently wrong answer — the recurrence residual
+        tracks the corrupted operator, so the claim understates the true
+        residual by orders of magnitude. The same scenario under
+        ``verify="cheap"`` is detected, degraded, and re-certified."""
+        p, b = problem(), mean_free(7, 300)
+        fault = dict(mode="perturb", at_calls=None, fraction=0.05)
+
+        solver = setup(p, SolverOptions(verify="off", tol=1e-4, **OPTS),
+                       backend="single", cache=False)
+        with inject(FaultPlan({"sdc.edge_weights": Fault(**fault)})) as plan:
+            x, res = solver.solve(b)
+        assert plan.fired
+        assert res.status == "converged"          # ...so it claims
+        assert res.certificate is None
+        norms = np.asarray(res.residual_norms)
+        claimed_rel = float(norms[-1].max() / norms[0].max())
+        assert claimed_rel <= 1e-4                # recurrence says done...
+        assert true_rel_residual(p, b, x) > 100 * claimed_rel
+
+        solver = setup(p, SolverOptions(verify="cheap", tol=1e-4, **OPTS),
+                       backend="single", cache=False)
+        with inject(FaultPlan({"sdc.edge_weights": Fault(**fault)})):
+            x2, res2 = solver.solve(b)
+        assert res2.status == "degraded"
+        assert res2.certificate is not None and res2.certificate.passed
+        assert true_rel_residual(p, b, x2) <= res2.certificate.threshold
+
+
+# ----------------------------------------------------------------------
+class TestCertificateProperties:
+    """Satellite: the soundness/completeness property sweep."""
+
+    BACKENDS = [("single", OPTS, None), ("serial_ref", OPTS, None),
+                ("dist", DIST, "mesh11")]
+
+    @pytest.mark.parametrize("backend,opts,mesh", BACKENDS)
+    @pytest.mark.parametrize("mode", ["cheap", "paranoid"])
+    def test_complete_on_clean_solves(self, backend, opts, mesh, mode):
+        p, b = problem(seed=1), mean_free(8, 300, k=2)
+        solver = setup(p, SolverOptions(verify=mode, **opts),
+                       backend=backend,
+                       mesh=mesh11() if mesh else None, cache=False)
+        x, res = solver.solve(b)
+        assert res.status == "converged"
+        assert res.certificate.passed
+        for j in range(2):
+            assert (true_rel_residual(p, b[:, j], np.asarray(x)[:, j])
+                    <= res.certificate.threshold)
+
+    def test_sound_never_passes_wrong_claimed_answers(self):
+        """Fuzz ``certify`` directly: answers corrupted above tolerance
+        that claim convergence must fail, at every corruption scale that
+        leaves the true residual above the certification threshold."""
+        p = problem(seed=2)
+        b = mean_free(9, 300)
+        solver = setup(p, SolverOptions(**OPTS), backend="single",
+                       cache=False)
+        x, res = solver.solve(b)
+        x = np.asarray(x)
+        rng = np.random.default_rng(10)
+        for scale in (1e-2, 1e-1, 1.0, 1e3):
+            noise = rng.normal(size=p.n)
+            noise -= noise.mean()
+            x_bad = x + (scale * np.linalg.norm(x)
+                         / np.linalg.norm(noise)) * noise
+            cert = certify(p, b, x_bad, tol=1e-8)
+            really_wrong = true_rel_residual(p, b, x_bad) > cert.threshold
+            assert really_wrong, "corruption scale too small to matter"
+            assert not cert.passed
+            assert len(cert.failed_columns()) == 1
+
+    def test_unclaimed_columns_are_vacuous(self):
+        """A column that honestly reported max_iters is not judged — and
+        an honest max_iters solve must not escalate to an SDC status."""
+        p, b = problem(seed=3), mean_free(11, 300)
+        solver = setup(p, SolverOptions(verify="cheap", max_iters=2,
+                                        fallback=False, **OPTS),
+                       backend="single", cache=False)
+        x, res = solver.solve(b)
+        assert res.status == "max_iters"
+        assert res.certificate is not None
+        assert res.certificate.passed            # vacuously: nothing claimed
+        assert not any(res.certificate.claimed)
+
+    def test_threshold_floor(self):
+        """Certification never demands more than float32 can deliver."""
+        p, b = problem(seed=4), mean_free(12, 300)
+        x, res = setup(p, SolverOptions(verify="cheap", tol=1e-12, **OPTS),
+                       backend="single", cache=False).solve(b)
+        assert res.certificate.threshold == CERT_FLOOR

@@ -1,0 +1,251 @@
+"""Strict admission control and backpressure (PR 10).
+
+``SolverService(admission="strict")`` turns requests away at submit()
+instead of letting them fail downstream: an open per-fingerprint circuit
+breaker, a full queue (``queue_watermark``), or an admission-triage
+verdict that routes the problem off the multigrid path each reject with
+an explicit reason. A serve that fails under strict admission is
+requeued with a deterministic capped-exponential backoff measured in
+FLUSH COUNTS (never wall clock — replays stay bit-stable), up to
+``requeue_max`` attempts. The default ``admission="route"`` keeps the
+PR 9 route-don't-reject behavior byte for byte.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import Problem, SolverOptions
+from repro.graphs.generators import barabasi_albert, ensure_connected
+from repro.service import ServiceError, SolverService
+from repro.testing import Fault, FaultPlan, inject
+
+OPTS = SolverOptions(coarsest_size=64, max_iters=200)
+
+
+def problem(n=300, seed=0):
+    return Problem.from_edges(
+        *ensure_connected(*barabasi_albert(n, m=3, seed=seed,
+                                           weighted=True)))
+
+
+def hopeless_problem(seed=0):
+    """Weight range far beyond float32's iterative reach — admission
+    triage routes it off the multigrid path (rung ``dense``)."""
+    n, r, c, v = ensure_connected(*barabasi_albert(200, m=3, seed=seed,
+                                                   weighted=True))
+    r, c = np.asarray(r), np.asarray(c)
+    v = np.asarray(v, np.float64).copy()
+    u, w = int(r[0]), int(c[0])             # blow up one edge, both
+    v[(r == u) & (c == w)] = 1e18           # directions — the list must
+    v[(r == w) & (c == u)] = 1e18           # stay symmetric
+    return Problem.from_edges(n, r, c, v)
+
+
+def mean_free(seed, n):
+    b = np.random.default_rng(seed).normal(size=n)
+    return (b - b.mean()).astype(np.float32)
+
+
+# ----------------------------------------------------------------------
+class TestConstructorValidation:
+    def test_rejects_unknown_admission_mode(self):
+        with pytest.raises(ValueError, match="admission"):
+            SolverService(OPTS, admission="optimistic")
+
+    def test_rejects_bad_watermark(self):
+        with pytest.raises(ValueError, match="queue_watermark"):
+            SolverService(OPTS, admission="strict", queue_watermark=0)
+
+    def test_rejects_bad_breaker_threshold(self):
+        with pytest.raises(ValueError, match="breaker_threshold"):
+            SolverService(OPTS, breaker_threshold=0)
+
+    def test_rejects_bad_requeue_max(self):
+        with pytest.raises(ValueError, match="requeue_max"):
+            SolverService(OPTS, requeue_max=-1)
+
+
+# ----------------------------------------------------------------------
+class TestRouteModeUnchanged:
+    """The default mode must keep PR 9 semantics: nothing is rejected,
+    nothing is requeued — a hopeless problem is ROUTED, not refused."""
+
+    def test_hopeless_problem_is_served_not_rejected(self):
+        svc = SolverService(SolverOptions(triage=True, **{
+            k: getattr(OPTS, k) for k in ("coarsest_size", "max_iters")}),
+            backend="single")
+        p = hopeless_problem()
+        t = svc.submit(p, mean_free(1, p.n))
+        assert t.status == "pending"
+        done = svc.flush()
+        assert t in done and t.status == "done"
+        st = svc.stats()
+        assert st["rejected"] == 0 and st["requeued"] == 0
+        assert st["breaker_opened"] == 0
+
+    def test_failed_serve_resolves_immediately(self):
+        svc = SolverService(OPTS, backend="single")
+        p = problem()
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=None)})):
+            t = svc.submit(p, mean_free(2, p.n))
+            done = svc.flush()
+        assert t in done and t.status == "failed"
+        assert svc.stats()["requeued"] == 0
+
+
+# ----------------------------------------------------------------------
+class TestStrictRejection:
+    def test_watermark_backpressure(self):
+        svc = SolverService(OPTS, backend="single", admission="strict",
+                            queue_watermark=1)
+        p = problem()
+        t1 = svc.submit(p, mean_free(3, p.n))
+        t2 = svc.submit(p, mean_free(4, p.n))
+        assert t1.status == "pending"
+        assert t2.status == "rejected" and t2.done()
+        with pytest.raises(ServiceError, match="watermark"):
+            t2.result()
+        st = svc.stats()
+        assert st["rejected"] == 1 and st["queue_depth"] == 1
+        # the queue drains; the watermark admits again
+        assert svc.flush() == [t1] and t1.status == "done"
+        t3 = svc.submit(p, mean_free(5, p.n))
+        assert t3.status == "pending"
+
+    def test_triage_routed_problem_is_rejected(self):
+        svc = SolverService(OPTS, backend="single", admission="strict")
+        p = hopeless_problem()
+        t = svc.submit(p, mean_free(6, p.n))
+        assert t.status == "rejected"
+        with pytest.raises(ServiceError, match="triage"):
+            t.result()
+        assert t.triage is not None and t.triage.rung in ("dense",
+                                                          "diag_pcg")
+        assert svc.stats()["rejected"] == 1
+
+    def test_rejected_ticket_never_queues(self):
+        svc = SolverService(OPTS, backend="single", admission="strict",
+                            queue_watermark=1)
+        p = problem()
+        svc.submit(p, mean_free(7, p.n))
+        t = svc.submit(p, mean_free(8, p.n))
+        assert t.status == "rejected"
+        assert len(svc.flush()) == 1        # only the admitted ticket
+        assert svc.stats()["requests"] == 2
+
+    def test_rejection_reason_checked_in_severity_order(self):
+        """Breaker beats watermark beats triage: a hopeless problem
+        submitted to a full queue cites the watermark, not triage."""
+        svc = SolverService(OPTS, backend="single", admission="strict",
+                            queue_watermark=1)
+        svc.submit(problem(), mean_free(9, 300))
+        t = svc.submit(hopeless_problem(), mean_free(10, 200))
+        with pytest.raises(ServiceError, match="watermark"):
+            t.result()
+
+
+# ----------------------------------------------------------------------
+class TestRequeueBackoff:
+    def test_failed_serve_requeues_with_flush_count_backoff(self):
+        """flush #1 fails the serve -> requeued, eligible at flush
+        1 + min(2**1, 8) = 3; flush #2 returns nothing; flush #3 serves
+        it cleanly. Deterministic — no wall clock anywhere."""
+        svc = SolverService(OPTS, backend="single", admission="strict")
+        p = problem()
+        t = svc.submit(p, mean_free(11, p.n))
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=None)})):
+            assert svc.flush() == []
+        assert t.status == "requeued" and t.requeues == 1
+        assert t.error is None and not t.done()
+        assert svc.flush() == []            # flush 2: still backing off
+        assert t.status == "requeued"
+        done = svc.flush()                  # flush 3: eligible again
+        assert done == [t] and t.status == "done"
+        assert t.result()[1].converged
+        st = svc.stats()
+        assert st["requeued"] == 1 and st["flushes"] == 3
+
+    def test_requeue_exhaustion_fails_for_good(self):
+        svc = SolverService(OPTS, backend="single", admission="strict",
+                            requeue_max=1)
+        p = problem()
+        t = svc.submit(p, mean_free(12, p.n))
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=None)})):
+            assert svc.flush() == []        # attempt 1 -> requeued
+            svc.flush()                     # backoff flush (no-op)
+            done = svc.flush()              # attempt 2 -> out of requeues
+        assert done == [t] and t.status == "failed"
+        assert t.error is not None
+        assert svc.stats()["requeued"] == 1
+
+    def test_requeue_max_zero_disables_requeueing(self):
+        svc = SolverService(OPTS, backend="single", admission="strict",
+                            requeue_max=0)
+        t = svc.submit(problem(), mean_free(13, 300))
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=None)})):
+            done = svc.flush()
+        assert done == [t] and t.status == "failed"
+        assert svc.stats()["requeued"] == 0
+
+
+# ----------------------------------------------------------------------
+class TestCircuitBreaker:
+    def test_breaker_opens_after_threshold_and_rejects(self):
+        svc = SolverService(OPTS, backend="single", admission="strict",
+                            breaker_threshold=2, requeue_max=0)
+        p = problem()
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=None)})):
+            for seed in (14, 15):
+                svc.submit(p, mean_free(seed, p.n))
+                svc.flush()
+        assert svc.stats()["breaker_opened"] == 1
+        t = svc.submit(p, mean_free(16, p.n))
+        assert t.status == "rejected"
+        with pytest.raises(ServiceError, match="breaker"):
+            t.result()
+        # a DIFFERENT problem's breaker is untouched
+        q = problem(seed=1)
+        t2 = svc.submit(q, mean_free(17, q.n))
+        assert t2.status == "pending"
+
+    def test_healthy_serve_closes_the_breaker(self):
+        svc = SolverService(OPTS, backend="single", admission="strict",
+                            breaker_threshold=2, requeue_max=0)
+        p = problem()
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=None)})):
+            svc.submit(p, mean_free(18, p.n))
+            svc.flush()                     # 1 consecutive failure
+        t = svc.submit(p, mean_free(19, p.n))
+        svc.flush()                         # healthy serve -> count reset
+        assert t.status == "done"
+        with inject(FaultPlan({"service.solve": Fault(mode="raise",
+                                                      at_calls=None)})):
+            svc.submit(p, mean_free(20, p.n))
+            svc.flush()                     # back to 1, not 2
+        assert svc.stats()["breaker_opened"] == 0
+        assert svc.submit(p, mean_free(21, p.n)).status == "pending"
+
+
+# ----------------------------------------------------------------------
+class TestStatsRegression:
+    def test_empty_latency_percentiles_are_nan(self):
+        """Satellite regression: an idle service must report NaN
+        percentiles, not 0.0 — a dashboard aggregating fabricated zero
+        latencies would lie about serving performance."""
+        st = SolverService(OPTS).stats()
+        lat = st["latency_seconds"]
+        assert all(math.isnan(lat[k]) for k in ("p50", "p90", "p99",
+                                                "mean"))
+
+    def test_strict_counters_present_in_route_mode(self):
+        st = SolverService(OPTS).stats()
+        assert st["rejected"] == 0 and st["requeued"] == 0
+        assert st["breaker_opened"] == 0

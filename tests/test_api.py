@@ -145,9 +145,10 @@ class TestFacade:
         assert res.solve_seconds > 0 and res.setup_seconds > 0
         # identical field names on every backend (frozen by this tuple)
         assert tuple(sorted(res.__dataclass_fields__)) == (
-            "backend", "converged", "diagnostics", "iters", "iters_per_rhs",
-            "n_rhs", "residual_norms", "setup_seconds", "solve_seconds",
-            "status", "statuses", "wda", "work_per_iteration")
+            "backend", "certificate", "converged", "diagnostics", "iters",
+            "iters_per_rhs", "n_rhs", "residual_norms", "setup_seconds",
+            "solve_seconds", "status", "statuses", "wda",
+            "work_per_iteration")
         assert res.status == "converged" and res.diagnostics == ()
         level = graph_from_adjacency(to_laplacian_coo(n, r, c, v))
         resid = np.asarray(b) - np.asarray(

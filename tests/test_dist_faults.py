@@ -25,6 +25,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import warnings
 
 import numpy as np
 import pytest
@@ -96,7 +97,7 @@ class TestTracedSiteRecovery:
 
     def test_traced_registry(self):
         assert TRACED_SITES == ("dist.select", "dist.vote", "dist.spmv",
-                                "dist.psum")
+                                "dist.psum", "sdc.shard_payload")
 
 
 class TestStatusParityWithEager:
@@ -159,8 +160,9 @@ class TestInScanVsPostmortem:
         x_off, res_off = off.solve(b)
         # guards on: bitwise-unchanged clean path
         np.testing.assert_array_equal(np.asarray(x_on), np.asarray(x_off))
-        pm = scan_norms_status(res_on.residual_norms, on.options.tol,
-                               res_on.residual_norms[0])
+        with pytest.warns(DeprecationWarning, match="scan_norms_status"):
+            pm = scan_norms_status(res_on.residual_norms, on.options.tol,
+                                   res_on.residual_norms[0])
         assert list(res_on.statuses) == list(pm) == ["converged"] * 3
 
     def test_nonfinite_fault_agreement(self):
@@ -172,8 +174,9 @@ class TestInScanVsPostmortem:
                                              fraction=0.3)})
         with inject(plan):
             _, res = solver.solve(b)
-        pm = scan_norms_status(res.residual_norms, opts.tol,
-                               res.residual_norms[0])
+        with pytest.warns(DeprecationWarning, match="scan_norms_status"):
+            pm = scan_norms_status(res.residual_norms, opts.tol,
+                                   res.residual_norms[0])
         assert list(res.statuses) == list(pm) == ["breakdown_nonfinite"] * 2
 
     def test_indefinite_is_an_in_scan_refinement(self):
@@ -184,13 +187,40 @@ class TestInScanVsPostmortem:
                                              fraction=0.3)})
         with inject(plan):
             _, res = solver.solve(b)
-        pm = scan_norms_status(res.residual_norms, opts.tol,
-                               res.residual_norms[0])
+        with pytest.warns(DeprecationWarning, match="scan_norms_status"):
+            pm = scan_norms_status(res.residual_norms, opts.tol,
+                                   res.residual_norms[0])
         # the in-scan guard froze each column BEFORE the poisoned update,
         # so the fetched norms are finite and the postmortem sees only a
         # solve that stopped early — the live codes carry the real cause
         assert list(res.statuses) == ["breakdown_indefinite"] * 2
         assert list(pm) == ["max_iters"] * 2
+
+    def test_scan_norms_status_deprecated(self):
+        """Satellite (PR 10): the postmortem reconstruction now carries a
+        DeprecationWarning pointing at the in-scan codes; the silent
+        internal ``_norms_status`` (the guards-off status path) does not."""
+        from repro.core.krylov import _norms_status
+
+        norms = np.array([[1.0, 1.0], [1e-12, 0.5]])
+        with pytest.warns(DeprecationWarning, match="in_scan"):
+            pm = scan_norms_status(norms, 1e-8, norms[0])
+        assert list(pm) == ["converged", "max_iters"]
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            silent = _norms_status(norms, 1e-8, norms[0])
+        assert list(pm) == list(silent)
+
+    def test_guards_off_dist_solve_does_not_warn(self):
+        """The guards-off dist solve derives statuses from fetched norms
+        by design — that intended path must NOT trip the deprecation."""
+        p, b = problem(), mean_free(9, 300)
+        solver = setup(p, SolverOptions(coarsest_size=64, guard=False),
+                       backend="dist", mesh=mesh11(), cache=False)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            _, res = solver.solve(b)
+        assert res.status == "converged"
 
 
 DRIVER_2X2 = textwrap.dedent("""

@@ -95,9 +95,11 @@ class TestSiteCoverage:
 
     def test_sites_registry_is_exact(self):
         # 9 host-side sites (PR 8) + 4 traced dist super-step sites (PR 9)
-        assert len(SITES) == 13 and len(set(SITES)) == 13
+        # + the 2 persistent-corruption SDC sites (PR 10: the host-side
+        # sdc.edge_weights and the traced sdc.shard_payload)
+        assert len(SITES) == 15 and len(set(SITES)) == 15
         from repro.testing import TRACED_SITES
-        assert set(TRACED_SITES) <= set(SITES) and len(TRACED_SITES) == 4
+        assert set(TRACED_SITES) <= set(SITES) and len(TRACED_SITES) == 5
 
     def test_setup_build_checkpoint(self):
         plan = FaultPlan({"setup.build": Fault(mode="raise")})
